@@ -1,0 +1,20 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6  # us/call
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,70 @@
+"""Microbenchmarks of the framework's hot paths (us/call on this CPU;
+roofline numbers for TPU come from the dry-run, not from here).
+
+* cgp fitness evaluation throughput (the paper's inner loop),
+* LUT matmul emulation modes (gather vs one-hot vs exact int8),
+* evolution generations/second.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import approx_matmul as am
+from repro.core import cgp, distributions as dist, evolve as ev
+from repro.core import netlist as nl, wmed
+
+
+def run():
+    # ---- CGP bit-parallel evaluation ----
+    m = nl.baugh_wooley_multiplier(8)
+    g = cgp.genome_from_netlist(m)
+    planes = jnp.asarray(nl.pack_exhaustive_inputs(8))
+    f = jax.jit(lambda n, o: cgp.eval_genome(cgp.Genome(n, o), planes,
+                                             n_i=16))
+    us = time_fn(f, g.nodes, g.outs)
+    emit("micro/cgp_eval_65536vec", us,
+         f"Mvec_per_s={65536 / us:.1f}")
+
+    # ---- full fitness (eval + WMED + area) over a lambda=4 population ----
+    exact = jnp.asarray(wmed.exact_products(8, True).astype(np.int32))
+    vw = jnp.asarray(dist.vector_weights(dist.signed_normal_pmf(8), 8))
+    block, fit = ev.make_step(
+        ev.EvolveConfig(w=8, signed=True, lam=4, gens_per_jit_block=10),
+        exact, vw, 0.01, planes)
+    key = jax.random.PRNGKey(0)
+    _, e0, a0 = fit(g, planes)
+    us = time_fn(lambda: block(g, a0, key), iters=3, warmup=1)
+    emit("micro/evolve_10gens_lam4", us,
+         f"gens_per_s={10 / (us / 1e6):.1f}")
+
+    # ---- LUT matmul emulation modes ----
+    M, K, N = 256, 784, 300   # the MLP's first layer
+    a = jax.random.randint(key, (M, K), 0, 256)
+    b = jax.random.randint(key, (K, N), 0, 256)
+    mul = am.exact_mul(8, True)
+    for mode, fn in [
+        ("gather", jax.jit(lambda a, b: am.matmul_lut_gather(a, b, mul))),
+        ("onehot", jax.jit(lambda a, b: am.matmul_lut_onehot(a, b, mul))),
+        ("exact_int", jax.jit(lambda a, b: am.matmul_exact_int(a, b, 8))),
+    ]:
+        us = time_fn(fn, a, b, iters=3, warmup=1)
+        emit(f"micro/lut_matmul_{mode}_{M}x{K}x{N}", us,
+             f"GMAC_s={M * K * N / us / 1e3:.2f}")
+
+    # ---- Pallas kernels (interpret mode: correctness-path timing only) ----
+    from repro.kernels.lut_matmul.ops import lut_matmul
+    us = time_fn(lambda: lut_matmul(a[:128, :128], b[:128, :128],
+                                    mul.lut_flat), iters=2, warmup=1)
+    emit("micro/pallas_lut_matmul_128_interp", us, "interpret=True")
+    from repro.kernels.cgp_eval.ops import cgp_eval
+    us = time_fn(lambda: cgp_eval(g.nodes, g.outs, planes, n_i=16),
+                 iters=2, warmup=1)
+    emit("micro/pallas_cgp_eval_interp", us, "interpret=True")
+
+
+if __name__ == "__main__":
+    run()

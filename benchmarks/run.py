@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline/dry-run tables for
+the assigned architectures are produced by ``repro.launch.dryrun`` +
+``repro.launch.roofline`` (they need the 512-device XLA flag and are kept
+out of this single-device process).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5] [--fast]
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (fig3,fig4,fig5,fig6,"
+                         "table1,fig7,micro)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_pareto, fig4_heatmaps, fig5_gaussian,
+                            fig6_pdp, fig7_accuracy_power, kernels_micro,
+                            table1_nn)
+    suites = {
+        "micro": kernels_micro.run,
+        "fig3": fig3_pareto.run,
+        "fig4": fig4_heatmaps.run,
+        "fig5": fig5_gaussian.run,
+        "fig6": fig6_pdp.run,
+        "fig7": fig7_accuracy_power.run,
+        "table1": table1_nn.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failed = []
+    for name in chosen:
+        try:
+            suites[name]()
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}/FAILED,0,{type(e).__name__}")
+    print(f"total,{(time.time() - t0) * 1e6:.0f},"
+          f"failed={';'.join(failed) if failed else 'none'}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table I: accuracy (before/after fine-tuning) + MAC power/PDP/area
+deltas vs the WMED level, for both classifiers.
+
+Claims reproduced (direction + ladder, budgets scaled):
+  * accuracy ~unchanged for WMED <= 0.5 % with large PDP savings;
+  * deep approximations break the model but fine-tuning recovers most
+    of the drop (the paper's headline Table I effect).
+"""
+
+import time
+
+from benchmarks.common import emit
+from repro.apps.nn_casestudy import run_case_study
+
+
+def run(models=("mlp", "lenet"), fast: bool = True):
+    t0 = time.time()
+    for model in models:
+        kw = dict(n_train=4000, n_test=1000, generations=800,
+                  levels=(5e-5, 5e-4, 1e-3, 5e-3, 2e-2))
+        if model == "lenet":
+            kw.update(n_train=1500, n_test=400,
+                      levels=(5e-4, 5e-3))  # convs are CPU-expensive
+        out = run_case_study(model, verbose=False, **kw)
+        emit(f"table1/{model}/reference", 0.0,
+             f"acc_float={out['acc_float']:.4f};acc_int8={out['acc_int8']:.4f}")
+        for r in out["results"]:
+            emit(f"table1/{model}/wmed_{r.level}", 0.0,
+                 f"wmed={r.wmed:.5f};acc_init={r.acc_init_rel:+.2f}%;"
+                 f"acc_ft={r.acc_finetuned_rel:+.2f}%;"
+                 f"pdp={r.pdp_rel:+.0f}%;power={r.power_rel:+.0f}%;"
+                 f"area={r.area_rel:+.0f}%")
+    emit("table1/summary", (time.time() - t0) * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""End-to-end driver: the paper's complete Case Study 2 on CPU.
+
+Train the MLP-300 digit classifier -> Ristretto-style int8 quantization ->
+weight-distribution WMED -> evolve approximate multipliers at several error
+levels -> LUT inference -> fine-tune -> report the Table-I-style ladder.
+
+    PYTHONPATH=src python examples/end_to_end_pipeline.py [--fast]
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller data + budget (CI-sized)")
+    ap.add_argument("--model", default="mlp", choices=["mlp", "lenet"])
+    args = ap.parse_args()
+
+    from repro.apps.nn_casestudy import run_case_study
+
+    kw = (dict(n_train=2000, n_test=500, generations=400,
+               levels=(0.005, 0.05)) if args.fast
+          else dict(n_train=6000, n_test=1500, generations=1500,
+                    levels=(0.0005, 0.005, 0.02, 0.05, 0.1)))
+    out = run_case_study(args.model, verbose=True, **kw)
+
+    print("\n=== Table-I-style summary (relative to the int8 reference) ===")
+    print(f"{'WMED level':>11s} {'measured':>9s} {'acc init':>9s} "
+          f"{'acc +ft':>8s} {'PDP':>6s} {'power':>6s} {'area':>6s}")
+    for r in out["results"]:
+        print(f"{r.level:11.4f} {r.wmed:9.5f} {r.acc_init_rel:+8.2f}% "
+              f"{r.acc_finetuned_rel:+7.2f}% {r.pdp_rel:+5.0f}% "
+              f"{r.power_rel:+5.0f}% {r.area_rel:+5.0f}%")
+    print(f"\nfloat acc={out['acc_float']:.4f}  int8 acc={out['acc_int8']:.4f}"
+          f"  wall={out['wall_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

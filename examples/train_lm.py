@@ -1,0 +1,70 @@
+"""Train a small LM end-to-end with the production train loop -- including
+a mid-run simulated node failure and checkpoint recovery, and optionally
+with approximate-LUT MACs in every projection.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60 --fail-at 25
+    PYTHONPATH=src python examples/train_lm.py --mac lut   # approx MACs
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--mac", default="exact_bf16",
+                    choices=["exact_bf16", "int8", "lut"])
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.core.approx_matmul import ApproxMul
+    from repro.core import luts
+    from repro.data.pipeline import make_lm_data_fn
+    from repro.nn.layers import MacCtx
+    from repro.train import train_loop as TL
+    from repro.train.fault import FailureInjector, run_with_recovery
+    from repro.train.optimizer import OptConfig
+
+    cfg = get_config(args.arch, smoke=True)
+    shape = ShapeConfig("ex", "train", args.seq, args.batch)
+    if args.mac == "lut":
+        # approximate multiplier: moderately truncated signed mult
+        mult = luts.truncated_multiplier(8, 4, signed=True)
+        mac = MacCtx(mode="lut", mul=ApproxMul.from_lut(mult.lut))
+        print(f"approx MAC: {mult.name} (MED {mult.med:.5f}, "
+              f"area {mult.area_um2:.0f}um2)")
+    else:
+        mac = MacCtx(mode=args.mac)
+
+    tcfg = TL.TrainConfig(opt=OptConfig(lr=2e-3, warmup_steps=5,
+                                        decay_steps=args.steps))
+    state = TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(state["params"]))
+    step = jax.jit(TL.make_train_step(cfg, tcfg, mac=mac))
+    data = make_lm_data_fn(cfg, shape, seed=0)
+
+    print(f"training {cfg.name} ({n:,} params) for {args.steps} steps, "
+          f"mac={args.mac}" + (f", failure injected at step {args.fail_at}"
+                               if args.fail_at else ""))
+    t0 = time.time()
+    injector = FailureInjector((args.fail_at,) if args.fail_at else ())
+    state, hist = run_with_recovery(
+        step, n_steps=args.steps, ckpt_every=20,
+        ckpt_root="results/example_ckpt", state=state, data_fn=data,
+        injector=injector)
+    dt = time.time() - t0
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} in {dt:.0f}s"
+          f" ({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

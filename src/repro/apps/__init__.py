@@ -1,0 +1,2 @@
+"""Paper case-study applications: Gaussian filter (Sec. IV) and NN
+classifiers with approximate MACs (Sec. V)."""

@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS, PAPER_ARCHS, SHAPES, ModelConfig, ShapeConfig, get_config,
+)

@@ -1,0 +1,20 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (kv=8) vocab=32000, 128 experts
+top-2 (expert d_ff=4864) + dense residual FFN (d_ff=4864) in parallel
+[hf:Snowflake/snowflake-arctic-base]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic_480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv=8, d_ff=4864,
+    vocab=32000, head_dim=128,
+    n_experts=128, top_k=2, moe_d_ff=4864, dense_residual=True,
+)
+
+SMOKE = ModelConfig(
+    name="arctic_smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=96,
+    vocab=512, head_dim=16, remat=False,
+    n_experts=8, top_k=2, moe_d_ff=96, dense_residual=True,
+    flash_block_q=16, flash_block_k=16,
+)

@@ -1,0 +1,164 @@
+"""Config schema + registry for architectures, shapes and meshes.
+
+Every assigned architecture is a ``ModelConfig`` in its own module
+(``repro/configs/<id>.py``) exposing ``CONFIG`` (full size, dry-run only)
+and ``SMOKE`` (reduced same-family config for CPU tests).  Select with
+``get_config(name)`` / ``--arch <id>``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # gqa | mla | moe | hybrid | rwkv | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+
+    # attention
+    rope_theta: float = 10000.0
+    window: Optional[int] = None             # sliding window (SWA layers)
+    global_layers: Tuple[int, ...] = ()      # layer idx with full attention
+    ffn_kind: str = "swiglu"                 # swiglu | gelu
+
+    # MLA (minicpm3)
+    q_rank: int = 768
+    kv_rank: int = 256
+    nope_dim: int = 64
+    rope_dim: int = 32
+    v_dim: int = 64
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 1
+    moe_d_ff: Optional[int] = None
+    dense_residual: bool = False             # arctic: dense FFN in parallel
+    shared_expert: bool = False              # llama4: always-on expert
+    capacity_factor: float = 1.25
+
+    # SSM branch (hymba)
+    has_ssm: bool = False
+    ssm_state: int = 16
+    ssm_chunk: int = 64
+
+    # RWKV
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 32
+
+    # VLM
+    cross_attn_every: int = 0                # 0 = no cross-attention
+    d_vision: int = 1280
+    n_vision_tokens: int = 1024
+
+    # execution
+    dtype: str = "bfloat16"
+    remat: bool = True
+    kv_int8: bool = True
+    flash_block_q: int = 512
+    flash_block_k: int = 512
+    supports_long: bool = False              # sub-quadratic at 500k ctx
+    mac_mode: str = "exact_bf16"             # paper technique hook
+    tie_embeddings: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.family == "rwkv":
+            tm = 4 * D * D + D * 64 + 64 * D + D * D
+            cm = 2 * D * F + D * D
+            return emb + L * (tm + cm)
+        if self.family == "mla":
+            attn = (D * self.q_rank
+                    + self.q_rank * self.n_heads * (self.nope_dim + self.rope_dim)
+                    + D * self.kv_rank
+                    + self.kv_rank * self.n_heads * (self.nope_dim + self.v_dim)
+                    + D * self.rope_dim + self.n_heads * self.v_dim * D)
+        else:
+            attn = (D * self.n_heads * self.hd + 2 * D * self.n_kv * self.hd
+                    + self.n_heads * self.hd * D)
+        n_mats = 3 if self.ffn_kind == "swiglu" else 2
+        if self.is_moe:
+            mff = self.moe_d_ff or F
+            ffn = self.n_experts * n_mats * D * mff + D * self.n_experts
+            if self.dense_residual:
+                ffn += n_mats * D * F
+            if self.shared_expert:
+                ffn += n_mats * D * mff
+        else:
+            ffn = n_mats * D * F
+        ssm = 0
+        if self.has_ssm:
+            di = 2 * D
+            ssm = D * 2 * di + di * (di // 16 + 2 * self.ssm_state) \
+                + (di // 16) * di + di * D
+        cross = 0
+        if self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            cross_l = (D * self.n_heads * self.hd
+                       + 2 * self.d_vision * self.n_kv * self.hd
+                       + self.n_heads * self.hd * D)
+            cross = n_cross * cross_l - 0
+        return emb + L * (attn + ffn + ssm) + cross
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        mff = self.moe_d_ff or F
+        n_mats = 3 if self.ffn_kind == "swiglu" else 2
+        inactive = (self.n_experts - self.top_k) * n_mats * D * mff
+        return self.param_count() - L * inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+ARCH_IDS = (
+    "hymba_1p5b", "minicpm3_4b", "yi_6b", "llama3_405b", "yi_34b",
+    "llama32_vision_11b", "arctic_480b", "llama4_scout_17b", "musicgen_large",
+    "rwkv6_1p6b",
+)
+
+# paper-case-study models (not LM family; see repro/nn/mlp_mnist, lenet5)
+PAPER_ARCHS = ("mlp_mnist", "lenet5_svhn")
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple

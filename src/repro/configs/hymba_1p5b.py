@@ -1,0 +1,28 @@
+"""hymba-1.5b [hybrid]: parallel attention + Mamba heads per layer.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001 ssm_state=16
+[arXiv:2411.13676].  SWA on all but 3 global full-attention layers
+(first/middle/last, per the paper); meta-tokens omitted (DESIGN.md §5).
+Vocab padded 32001 -> 32256 for 16-way TP divisibility.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba_1p5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv=5, d_ff=5504,
+    vocab=32256, head_dim=64,
+    window=2048, global_layers=(0, 16, 31),
+    has_ssm=True, ssm_state=16,
+    supports_long=True,
+)
+
+SMOKE = ModelConfig(
+    name="hymba_smoke", family="hybrid",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+    vocab=512, head_dim=16,
+    window=32, global_layers=(0,),
+    has_ssm=True, ssm_state=4, ssm_chunk=8,
+    supports_long=True, remat=False,
+    flash_block_q=16, flash_block_k=16,
+)

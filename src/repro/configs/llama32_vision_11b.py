@@ -1,0 +1,23 @@
+"""llama-3.2-vision-11b [vlm]: 40L d_model=4096 32H (kv=8) d_ff=14336
+vocab=128256, cross-attention image layers every 5th layer
+[hf:meta-llama/Llama-3.2-11B-Vision].  Vision frontend is a stub:
+``input_specs`` provides precomputed patch embeddings (B, 1600, 1280)
+per the assignment brief.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama32_vision_11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv=8, d_ff=14336,
+    vocab=128256, head_dim=128, rope_theta=500000.0,
+    cross_attn_every=5, d_vision=1280, n_vision_tokens=1600,
+)
+
+SMOKE = ModelConfig(
+    name="vlm_smoke", family="vlm",
+    n_layers=4, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+    vocab=512, head_dim=16, remat=False,
+    cross_attn_every=2, d_vision=32, n_vision_tokens=16,
+    flash_block_q=16, flash_block_k=16,
+)

@@ -1,0 +1,17 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 [arXiv:2407.21783]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3_405b", family="gqa",
+    n_layers=126, d_model=16384, n_heads=128, n_kv=8, d_ff=53248,
+    vocab=128256, head_dim=128, rope_theta=500000.0,
+)
+
+SMOKE = ModelConfig(
+    name="llama3_smoke", family="gqa",
+    n_layers=2, d_model=64, n_heads=8, n_kv=2, d_ff=192,
+    vocab=512, head_dim=8, remat=False,
+    flash_block_q=16, flash_block_k=16,
+)

@@ -1,0 +1,23 @@
+"""llama4-scout-17b-a16e [moe]: 48L d_model=5120 40H (kv=8) d_ff=8192,
+16 experts top-1 + shared expert, vocab=202048
+[hf:meta-llama/Llama-4-Scout-17B-16E].  Early-fusion multimodality is out
+of scope (text path only -- the transformer backbone per the brief).
+Vocab padded 202048 -> 202240.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4_scout_17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv=8, d_ff=8192,
+    vocab=202240, head_dim=128, rope_theta=500000.0,
+    n_experts=16, top_k=1, moe_d_ff=8192, shared_expert=True,
+)
+
+SMOKE = ModelConfig(
+    name="scout_smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=96,
+    vocab=512, head_dim=16, remat=False,
+    n_experts=4, top_k=1, moe_d_ff=96, shared_expert=True,
+    flash_block_q=16, flash_block_k=16,
+)

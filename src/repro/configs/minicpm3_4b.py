@@ -1,0 +1,22 @@
+"""minicpm3-4b [dense, MLA]: 62L d_model=2560 40H d_ff=6400 vocab=73448
+[hf:openbmb/MiniCPM3-4B].  Multi-head latent attention: q rank 768,
+compressed-KV rank 256, decoupled rope dim 32, nope 64, v 64; decode caches
+the latent (DESIGN.md §5).  Vocab padded 73448 -> 73472.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3_4b", family="mla",
+    n_layers=62, d_model=2560, n_heads=40, n_kv=40, d_ff=6400,
+    vocab=73472, head_dim=64,
+    q_rank=768, kv_rank=256, nope_dim=64, rope_dim=32, v_dim=64,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3_smoke", family="mla",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+    vocab=512, head_dim=16,
+    q_rank=32, kv_rank=16, nope_dim=8, rope_dim=8, v_dim=8,
+    remat=False, flash_block_q=16, flash_block_k=16,
+)

@@ -1,0 +1,21 @@
+"""musicgen-large [audio]: decoder-only over EnCodec tokens.  48L
+d_model=2048 32H (kv=32 => plain MHA) d_ff=8192 vocab=2048
+[arXiv:2306.05284].  The EnCodec frontend is a stub: inputs are the token
+stream itself (single-codebook simplification of the 4-book interleave,
+DESIGN.md §5); non-gated GELU FFN as in the reference.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen_large", family="gqa",
+    n_layers=48, d_model=2048, n_heads=32, n_kv=32, d_ff=8192,
+    vocab=2048, head_dim=64, ffn_kind="gelu",
+)
+
+SMOKE = ModelConfig(
+    name="musicgen_smoke", family="gqa",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+    vocab=128, head_dim=16, ffn_kind="gelu", remat=False,
+    flash_block_q=16, flash_block_k=16,
+)

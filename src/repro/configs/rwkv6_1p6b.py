@@ -1,0 +1,20 @@
+"""rwkv6-1.6b "Finch" [ssm/attention-free]: 24L d_model=2048 d_ff=7168
+vocab=65536, data-dependent decay [arXiv:2404.05892].  Head dim 64;
+chunked-parallel WKV for train/prefill, O(1)-state recurrence for decode
+(sub-quadratic => runs the long_500k shape)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6_1p6b", family="rwkv",
+    n_layers=24, d_model=2048, n_heads=32, n_kv=32, d_ff=7168,
+    vocab=65536, head_dim=64, rwkv_head_dim=64, rwkv_chunk=32,
+    supports_long=True,
+)
+
+SMOKE = ModelConfig(
+    name="rwkv6_smoke", family="rwkv",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=224,
+    vocab=512, head_dim=16, rwkv_head_dim=16, rwkv_chunk=8,
+    supports_long=True, remat=False,
+)

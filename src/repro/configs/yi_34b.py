@@ -1,0 +1,17 @@
+"""yi-34b [dense]: llama-arch GQA.  60L d_model=7168 56H (kv=8) d_ff=20480
+vocab=64000 [arXiv:2403.04652]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi_34b", family="gqa",
+    n_layers=60, d_model=7168, n_heads=56, n_kv=8, d_ff=20480,
+    vocab=64000, head_dim=128, rope_theta=5000000.0,
+)
+
+SMOKE = ModelConfig(
+    name="yi34b_smoke", family="gqa",
+    n_layers=2, d_model=64, n_heads=8, n_kv=2, d_ff=192,
+    vocab=512, head_dim=8, remat=False,
+    flash_block_q=16, flash_block_k=16,
+)

@@ -1,0 +1,17 @@
+"""yi-6b [dense]: llama-arch GQA.  32L d_model=4096 32H (kv=4) d_ff=11008
+vocab=64000 [arXiv:2403.04652]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi_6b", family="gqa",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=4, d_ff=11008,
+    vocab=64000, head_dim=128, rope_theta=5000000.0,
+)
+
+SMOKE = ModelConfig(
+    name="yi6b_smoke", family="gqa",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=160,
+    vocab=512, head_dim=16, remat=False,
+    flash_block_q=16, flash_block_k=16,
+)

@@ -1,0 +1,6 @@
+"""Core of the paper's contribution: WMED-driven CGP circuit approximation."""
+
+from repro.core import cellcost, cgp, distributions, luts, netlist, wmed  # noqa: F401
+from repro.core.cgp import Genome  # noqa: F401
+from repro.core.evolve import EvolveConfig, EvolveResult, pareto_sweep  # noqa: F401
+from repro.core.luts import MultLib  # noqa: F401

@@ -1,0 +1,208 @@
+"""Approximate-MAC matmul emulation (the circuit <-> NN bridge).
+
+On the paper's silicon, every product inside a MAC array goes through the
+evolved approximate multiplier.  TPUs multiply exactly, so we *emulate*:
+the multiplier's full function is a 2^w x 2^w LUT and
+
+    Y[m, n] = sum_k LUT[ A[m, k], W[k, n] ]            (int32 accumulation)
+
+Three execution modes (selectable per layer / per config):
+
+* ``exact``      -- plain int8 x int8 -> int32 matmul (the quantized
+                    reference the paper compares against);
+* ``lut_gather`` -- direct LUT gather; the TPU-native version is the
+                    ``repro/kernels/lut_matmul`` Pallas kernel (VMEM-resident
+                    LUT); this file carries the pure-jnp semantics;
+* ``lut_onehot`` -- gather-free MXU reformulation: one-hot(A) is contracted
+                    against per-(k,n) LUT rows T[k,n,:] = LUT[:, W[k,n]], so
+                    the systolic array does the lookup arithmetic.  256x the
+                    FLOPs of an exact matmul but zero scalar gathers --
+                    useful where gathers dominate (see EXPERIMENTS §Perf).
+
+``approx_dense`` wraps a float-in/float-out layer: quantize -> approximate
+integer matmul -> dequantize, with a straight-through custom_vjp so the same
+layer is usable in fine-tuning (paper Table I) and full training.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.fixed_point import QuantParams, quantize_pattern
+
+
+class ApproxMul(NamedTuple):
+    """A multiplier function usable inside matmuls: flat LUT + width."""
+
+    lut_flat: jax.Array   # (2^(2w),) int32; index = (a_pattern << w) | b_pattern
+    w: int = 8
+
+    @classmethod
+    def from_lut(cls, lut: np.ndarray) -> "ApproxMul":
+        n = lut.shape[0]
+        w = int(np.log2(n))
+        return cls(jnp.asarray(lut.reshape(-1), dtype=jnp.int32), w)
+
+
+def exact_mul(w: int = 8, signed: bool = True) -> ApproxMul:
+    from repro.core import wmed as wmed_mod
+    return ApproxMul(jnp.asarray(
+        wmed_mod.exact_products(w, signed).astype(np.int32)), w)
+
+
+# ----------------------------------------------------------------- int cores
+
+def matmul_exact_int(a_pat: jax.Array, b_pat: jax.Array, w: int,
+                     signed: bool = True) -> jax.Array:
+    """Reference int matmul on bit patterns ((M,K) x (K,N) -> (M,N) int32)."""
+    half = 1 << (w - 1)
+    full = 1 << w
+    a = jnp.where(signed & (a_pat >= half), a_pat - full, a_pat)
+    b = jnp.where(signed & (b_pat >= half), b_pat - full, b_pat)
+    return jax.lax.dot_general(
+        a.astype(jnp.int32), b.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def matmul_lut_gather(a_pat: jax.Array, b_pat: jax.Array,
+                      mul: ApproxMul) -> jax.Array:
+    """LUT-gather semantics: Y = sum_k LUT[(B<<w)|A].
+
+    Operand order matters for *approximate* multipliers: WMED characterizes
+    the multiplier's FIRST operand with the application distribution D
+    (synaptic weight / filter coefficient), so the weight matrix B indexes
+    the row and the data operand A the column.
+    """
+    idx = (b_pat[None, :, :] << mul.w) | a_pat[:, :, None]   # (M, K, N)
+    prods = jnp.take(mul.lut_flat, idx, axis=0)              # (M, K, N) int32
+    return jnp.sum(prods, axis=1, dtype=jnp.int32)
+
+
+def matmul_lut_gather_blocked(a_pat: jax.Array, b_pat: jax.Array,
+                              mul: ApproxMul, bm: int = 256,
+                              bk: int = 512) -> jax.Array:
+    """Gather semantics with bounded working set: lax.map over M blocks,
+    scan over K blocks (the pure-jnp twin of the Pallas kernel's tiling --
+    used for shapes where (M, K, N) int32 would not fit)."""
+    M, K = a_pat.shape
+    N = b_pat.shape[1]
+    bm = min(bm, M)
+    bk = min(bk, K)
+    Mp, Kp = -(-M // bm) * bm, -(-K // bk) * bk
+    a = jnp.pad(a_pat, ((0, Mp - M), (0, Kp - K)))
+    b = jnp.pad(b_pat, ((0, Kp - K), (0, 0)))
+
+    def m_block(mi):
+        a_blk = jax.lax.dynamic_slice_in_dim(a, mi * bm, bm, 0)
+
+        def k_step(acc, ki):
+            a_kb = jax.lax.dynamic_slice_in_dim(a_blk, ki * bk, bk, 1)
+            b_kb = jax.lax.dynamic_slice_in_dim(b, ki * bk, bk, 0)
+            idx = (b_kb[None] << mul.w) | a_kb[:, :, None]
+            acc = acc + jnp.sum(jnp.take(mul.lut_flat, idx, axis=0),
+                                axis=1, dtype=jnp.int32)
+            return acc, None
+
+        acc0 = jnp.zeros((bm, N), jnp.int32)
+        acc, _ = jax.lax.scan(k_step, acc0, jnp.arange(Kp // bk))
+        return acc
+
+    out = jax.lax.map(m_block, jnp.arange(Mp // bm))
+    return out.reshape(Mp, N)[:M]
+
+
+def matmul_lut_onehot(a_pat: jax.Array, b_pat: jax.Array,
+                      mul: ApproxMul) -> jax.Array:
+    """MXU reformulation: contract one-hot(A) with T[k,n,:] = LUT[:, B[k,n]].
+
+    T is built with one (cheap) gather over the *weight* matrix only (static
+    at inference -- prefetchable), then the big contraction is a dense
+    einsum: Y[m,n] = sum_{k,v} onehot(A)[m,k,v] * T[k,n,v].
+
+    bf16 exactness: 2w-bit products overflow bf16's 8-bit mantissa, so T is
+    byte-decomposed (T = 256*hi + lo, each byte exactly representable in
+    bf16) and the two einsums accumulate in f32 -- bit-exact vs. the gather
+    path for K < 2^16 (asserted by tests).
+    """
+    n_vals = 1 << mul.w
+    lut2d = mul.lut_flat.reshape(n_vals, n_vals)
+    # weight operand indexes the characterized (row) axis -- see gather path
+    t = jnp.take(lut2d, b_pat, axis=0)                       # (K, N, V) int32
+    t = jnp.moveaxis(t, -1, 0)                               # (V, K, N)
+    t_lo = (t & 0xFF).astype(jnp.bfloat16)                   # 0..255, exact
+    t_hi = ((t - (t & 0xFF)) // 256).astype(jnp.bfloat16)    # small ints, exact
+    a_oh = jax.nn.one_hot(a_pat, n_vals, dtype=jnp.bfloat16)  # (M, K, V)
+    y_lo = jnp.einsum("mkv,vkn->mn", a_oh, t_lo,
+                      preferred_element_type=jnp.float32)
+    y_hi = jnp.einsum("mkv,vkn->mn", a_oh, t_hi,
+                      preferred_element_type=jnp.float32)
+    return (256.0 * y_hi + y_lo).astype(jnp.int32)
+
+
+def matmul_lut(a_pat, b_pat, mul: ApproxMul, mode: str = "lut_gather",
+               use_kernel: bool = False):
+    if mode == "lut_gather":
+        if use_kernel:
+            from repro.kernels.lut_matmul import ops as kops
+            return kops.lut_matmul(a_pat, b_pat, mul.lut_flat, w=mul.w)
+        M, K = a_pat.shape
+        N = b_pat.shape[1]
+        if M * K * N > (1 << 27):   # (M,K,N) int32 would exceed ~0.5 GB
+            return matmul_lut_gather_blocked(a_pat, b_pat, mul)
+        return matmul_lut_gather(a_pat, b_pat, mul)
+    if mode == "lut_onehot":
+        return matmul_lut_onehot(a_pat, b_pat, mul)
+    raise ValueError(mode)
+
+
+# --------------------------------------------------------------- float bridge
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def approx_matmul_f32(x, w_mat, lut_flat, w_bits, x_qp, w_qp, mode):
+    """Float (M,K) x (K,N) matmul through the approximate multiplier.
+
+    Forward: quantize both operands to fixed point, run the LUT matmul,
+    dequantize with the product scale.  Backward: straight-through -- exact
+    float gradients, as in quantization-aware training (this is what lets the
+    paper's fine-tuning recover accuracy: the network adapts its weights to
+    the multiplier's error surface).
+    """
+    return _approx_fwd_impl(x, w_mat, lut_flat, w_bits, x_qp, w_qp, mode)
+
+
+def _approx_fwd_impl(x, w_mat, lut_flat, w_bits, x_qp, w_qp, mode):
+    a_pat = quantize_pattern(x, x_qp)
+    b_pat = quantize_pattern(w_mat, w_qp)
+    mul = ApproxMul(lut_flat, w_bits)
+    y_int = matmul_lut(a_pat, b_pat, mul, mode=mode)
+    return y_int.astype(jnp.float32) * (x_qp.scale * w_qp.scale)
+
+
+def _approx_fwd(x, w_mat, lut_flat, w_bits, x_qp, w_qp, mode):
+    y = _approx_fwd_impl(x, w_mat, lut_flat, w_bits, x_qp, w_qp, mode)
+    return y, (x, w_mat)
+
+
+def _approx_bwd(w_bits, x_qp, w_qp, mode, res, g):
+    x, w_mat = res
+    gx = g @ w_mat.T
+    gw = x.T @ g
+    return gx, gw, None
+
+
+approx_matmul_f32.defvjp(_approx_fwd, _approx_bwd)
+
+
+def approx_dense(x: jax.Array, w_mat: jax.Array, mul: ApproxMul,
+                 x_qp: QuantParams, w_qp: QuantParams,
+                 mode: str = "lut_gather") -> jax.Array:
+    """Float dense layer through the approximate MAC; broadcasts leading dims."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = approx_matmul_f32(x2, w_mat, mul.lut_flat, mul.w, x_qp, w_qp, mode)
+    return y.reshape(*lead, w_mat.shape[-1])

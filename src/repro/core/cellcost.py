@@ -1,0 +1,118 @@
+"""45 nm-like standard-cell cost model for gate-level netlists.
+
+The paper re-synthesizes evolved circuits with Synopsys Design Compiler
+(45 nm, Vdd = 1 V) to obtain area / power / delay.  We have no EDA tool in
+this container, so we carry an analytic cell model calibrated against the
+publicly documented NanGate 45 nm Open Cell Library figures.  All paper
+comparisons are *relative* (percent reductions), which this model preserves.
+
+Gate functions are encoded by their 4-bit truth table ``f`` over inputs
+``(a, b)``: output bit for the input pair is ``(f >> ((a << 1) | b)) & 1``.
+
+    f = 0  : const-0          f = 8  : AND
+    f = 1  : NOR              f = 9  : XNOR
+    f = 2  : b AND NOT a      f = 10 : BUF(b)
+    f = 3  : NOT a            f = 11 : NOT a OR b
+    f = 4  : a AND NOT b      f = 12 : BUF(a)
+    f = 5  : NOT b            f = 13 : a OR NOT b
+    f = 6  : XOR              f = 14 : OR
+    f = 7  : NAND             f = 15 : const-1
+
+Three per-function tables are exposed as jnp arrays so that the evolution
+loop can index them inside jit:
+
+* ``AREA``    [um^2]  cell area,
+* ``DELAY``   [ps]    pin-to-pin delay (fanout-of-4 estimate),
+* ``E_SW``    [fJ]    energy per output transition (internal + load),
+* ``P_LEAK``  [nW]    leakage power.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Function ids (truth-table encoding).
+CONST0, NOR, ANDN_B, NOT_A, ANDN_A, NOT_B, XOR, NAND = 0, 1, 2, 3, 4, 5, 6, 7
+AND, XNOR, BUF_B, ORN_A, BUF_A, ORN_B, OR, CONST1 = 8, 9, 10, 11, 12, 13, 14, 15
+
+FN_NAMES = [
+    "const0", "nor", "andn_b", "not_a", "andn_a", "not_b", "xor", "nand",
+    "and", "xnor", "buf_b", "orn_a", "buf_a", "orn_b", "or", "const1",
+]
+
+# The paper's Gamma = "all standard two-input gates".  We expose the full
+# 16-function set (degenerate consts/bufs included -- they arise naturally
+# in approximation and cost ~nothing), plus a "classic" subset.
+ALL_FNS = np.arange(16, dtype=np.int32)
+STANDARD_FNS = np.array(
+    [AND, OR, XOR, NAND, NOR, XNOR, NOT_A, NOT_B, BUF_A, BUF_B], dtype=np.int32
+)
+
+# ---------------------------------------------------------------- cell data
+# NanGate 45nm-flavoured numbers (area um^2; delay ps; switch energy fJ;
+# leakage nW).  const/buf entries model wire / inverter-pair costs.
+_area = {
+    "const0": 0.0, "const1": 0.0,
+    "buf_a": 0.0, "buf_b": 0.0,            # pure wiring
+    "not_a": 0.532, "not_b": 0.532,        # INV_X1
+    "nand": 0.798, "nor": 0.798,           # NAND2_X1 / NOR2_X1
+    "and": 1.064, "or": 1.064,             # AND2_X1 / OR2_X1
+    "andn_a": 1.064, "andn_b": 1.064,      # AND2 + folded INV ~ AOI cost
+    "orn_a": 1.064, "orn_b": 1.064,
+    "xor": 1.596, "xnor": 1.596,           # XOR2_X1 / XNOR2_X1
+}
+_delay = {
+    "const0": 0.0, "const1": 0.0, "buf_a": 0.0, "buf_b": 0.0,
+    "not_a": 21.0, "not_b": 21.0,
+    "nand": 32.0, "nor": 38.0,
+    "and": 47.0, "or": 51.0,
+    "andn_a": 49.0, "andn_b": 49.0, "orn_a": 53.0, "orn_b": 53.0,
+    "xor": 63.0, "xnor": 65.0,
+}
+_esw = {  # fJ per output transition
+    "const0": 0.0, "const1": 0.0, "buf_a": 0.0, "buf_b": 0.0,
+    "not_a": 0.40, "not_b": 0.40,
+    "nand": 0.55, "nor": 0.60,
+    "and": 0.80, "or": 0.85,
+    "andn_a": 0.85, "andn_b": 0.85, "orn_a": 0.90, "orn_b": 0.90,
+    "xor": 1.35, "xnor": 1.40,
+}
+_leak = {  # nW
+    "const0": 0.0, "const1": 0.0, "buf_a": 0.0, "buf_b": 0.0,
+    "not_a": 10.0, "not_b": 10.0,
+    "nand": 16.0, "nor": 15.0,
+    "and": 25.0, "or": 25.0,
+    "andn_a": 26.0, "andn_b": 26.0, "orn_a": 26.0, "orn_b": 26.0,
+    "xor": 42.0, "xnor": 43.0,
+}
+
+AREA = jnp.asarray([_area[n] for n in FN_NAMES], dtype=jnp.float32)
+DELAY = jnp.asarray([_delay[n] for n in FN_NAMES], dtype=jnp.float32)
+E_SW = jnp.asarray([_esw[n] for n in FN_NAMES], dtype=jnp.float32)
+P_LEAK = jnp.asarray([_leak[n] for n in FN_NAMES], dtype=jnp.float32)
+
+# Does function f depend on input a (resp. b)?  f depends on a iff flipping
+# a changes the output for some b.
+_uses_a = [((f >> 0) & 1) != ((f >> 2) & 1) or ((f >> 1) & 1) != ((f >> 3) & 1)
+           for f in range(16)]
+_uses_b = [((f >> 0) & 1) != ((f >> 1) & 1) or ((f >> 2) & 1) != ((f >> 3) & 1)
+           for f in range(16)]
+USES_A = jnp.asarray(_uses_a, dtype=bool)
+USES_B = jnp.asarray(_uses_b, dtype=bool)
+
+# Default operating point for power reporting (matches the paper's 45nm/1V).
+DEFAULT_CLOCK_HZ = 1.0e9
+
+
+def dynamic_power_nw(fn_ids, activities, clock_hz: float = DEFAULT_CLOCK_HZ):
+    """Dynamic power [nW] given per-gate switching activities in [0, 1].
+
+    ``activities[k]`` is the probability that gate k's output toggles in a
+    cycle; with the temporal-independence assumption this is
+    ``2 * p_k * (1 - p_k)`` for signal probability ``p_k`` (computed exactly
+    under the application's input distribution D -- the same D that drives
+    WMED).  P_dyn = sum E_sw(f_k) * act_k * f_clk.
+    """
+    e = E_SW[fn_ids] * activities  # fJ per cycle
+    return jnp.sum(e) * clock_hz * 1e-15 * 1e9  # fJ/cycle * Hz -> nW

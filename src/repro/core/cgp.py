@@ -1,0 +1,228 @@
+"""Cartesian Genetic Programming in JAX (vectorized, bit-parallel).
+
+A candidate circuit is a CGP genome with r = 1 (one row, ``c`` columns,
+unrestricted levels-back), n_a = 2:
+
+* ``nodes``: int32 (c, 3)  -- (src_a, src_b, fn); sources address primary
+  inputs ``0..n_i-1`` or earlier gates ``n_i..n_i+k-1``;
+* ``outs`` : int32 (n_o,)  -- primary-output sources.
+
+Evaluation is *bit-parallel*: the 2^(2w) exhaustive test vectors of a w-bit
+multiplier are packed into uint32 lanes (2048 words for w = 8), and each of
+the 16 possible two-input gate functions is applied branch-free from its
+4-bit truth table.  This is the VPU-friendly form of the paper's fitness
+evaluation; the same algorithm is also implemented as a Pallas TPU kernel in
+``repro/kernels/cgp_eval``.
+
+Everything here is jit / vmap friendly; the (1+lambda) ES lives in
+``evolve.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cellcost as cc
+
+
+class Genome(NamedTuple):
+    nodes: jax.Array  # (c, 3) int32
+    outs: jax.Array   # (n_o,) int32
+
+
+def genome_from_netlist(netlist, c: int | None = None) -> Genome:
+    nodes, outs = netlist.to_arrays(c)
+    return Genome(jnp.asarray(nodes), jnp.asarray(outs))
+
+
+# ---------------------------------------------------------------- evaluate
+
+FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def _apply_fn(f, a, b):
+    """Bit-parallel 2-input gate from 4-bit truth table ``f``."""
+    t0 = jnp.where((f >> 0) & 1, FULL, jnp.uint32(0))
+    t1 = jnp.where((f >> 1) & 1, FULL, jnp.uint32(0))
+    t2 = jnp.where((f >> 2) & 1, FULL, jnp.uint32(0))
+    t3 = jnp.where((f >> 3) & 1, FULL, jnp.uint32(0))
+    return ((t0 & ~a & ~b) | (t1 & ~a & b) | (t2 & a & ~b) | (t3 & a & b))
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def eval_genome(genome: Genome, in_planes: jax.Array, *, n_i: int) -> jax.Array:
+    """Evaluate a genome over packed input bit-planes.
+
+    in_planes: (n_i, W) uint32; returns (n_o, W) uint32.
+    """
+    c = genome.nodes.shape[0]
+    W = in_planes.shape[1]
+    buf = jnp.zeros((n_i + c, W), dtype=jnp.uint32).at[:n_i].set(in_planes)
+
+    def body(k, buf):
+        g = genome.nodes[k]
+        a = buf[g[0]]
+        b = buf[g[1]]
+        out = _apply_fn(g[2], a, b)
+        return buf.at[n_i + k].set(out)
+
+    buf = jax.lax.fori_loop(0, c, body, buf)
+    return buf[genome.outs]
+
+
+def unpack_planes(planes: jax.Array) -> jax.Array:
+    """(n_o, W) uint32 bit-planes -> (32*W,) int32 unsigned values."""
+    n_o, W = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((planes[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    bits = bits.reshape(n_o, W * 32)
+    weights = (jnp.int32(1) << jnp.arange(n_o, dtype=jnp.int32))[:, None]
+    return jnp.sum(bits * weights, axis=0, dtype=jnp.int32)
+
+
+def to_signed(vals: jax.Array, bits: int) -> jax.Array:
+    """Reinterpret unsigned ``bits``-wide values as two's complement."""
+    half = jnp.int32(1 << (bits - 1))
+    return jnp.bitwise_xor(vals, half) - half
+
+
+# ---------------------------------------------------------------- area etc.
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def active_mask(genome: Genome, *, n_i: int) -> jax.Array:
+    """Boolean (c,) mask of gates reachable from the primary outputs."""
+    c = genome.nodes.shape[0]
+    active = jnp.zeros((n_i + c,), dtype=bool).at[genome.outs].set(True)
+
+    def body(i, active):
+        k = c - 1 - i
+        g = genome.nodes[k]
+        act = active[n_i + k]
+        ua = cc.USES_A[g[2]] & act
+        ub = cc.USES_B[g[2]] & act
+        active = active.at[g[0]].max(ua)
+        return active.at[g[1]].max(ub)
+
+    active = jax.lax.fori_loop(0, c, body, active)
+    return active[n_i:]
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def area(genome: Genome, *, n_i: int) -> jax.Array:
+    """Active-gate area [um^2] (the paper's fitness payload, Eq. 1)."""
+    act = active_mask(genome, n_i=n_i)
+    return jnp.sum(jnp.where(act, cc.AREA[genome.nodes[:, 2]], 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def critical_path_ps(genome: Genome, *, n_i: int) -> jax.Array:
+    """Longest input->output delay [ps] over active gates."""
+    c = genome.nodes.shape[0]
+    act = active_mask(genome, n_i=n_i)
+    t = jnp.zeros((n_i + c,), dtype=jnp.float32)
+
+    def body(k, t):
+        g = genome.nodes[k]
+        ta = jnp.where(cc.USES_A[g[2]], t[g[0]], 0.0)
+        tb = jnp.where(cc.USES_B[g[2]], t[g[1]], 0.0)
+        tk = jnp.where(act[k], jnp.maximum(ta, tb) + cc.DELAY[g[2]], 0.0)
+        return t.at[n_i + k].set(tk)
+
+    t = jax.lax.fori_loop(0, c, body, t)
+    return jnp.max(t[genome.outs])
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def signal_probs(genome: Genome, in_planes: jax.Array, vec_weights: jax.Array,
+                 *, n_i: int) -> jax.Array:
+    """Exact per-gate signal probabilities under the input distribution.
+
+    ``vec_weights`` is a (32*W,) probability vector over the packed test
+    vectors (e.g. D(x)/2^w for vector (x, y)).  Returns (c,) float32 --
+    P[gate output = 1].  Used for the distribution-aware dynamic power model.
+    """
+    planes = eval_genome(Genome(genome.nodes,
+                                jnp.arange(n_i, n_i + genome.nodes.shape[0],
+                                           dtype=jnp.int32)),
+                         in_planes, n_i=n_i)  # (c, W) all gate outputs
+    c, W = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((planes[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    bits = bits.reshape(c, W * 32)
+    return bits @ vec_weights.astype(jnp.float32)
+
+
+def power_nw(genome: Genome, in_planes: jax.Array, vec_weights: jax.Array,
+             *, n_i: int, clock_hz: float = cc.DEFAULT_CLOCK_HZ) -> jax.Array:
+    """Total (leakage + dynamic) power [nW] under distribution D."""
+    act = active_mask(genome, n_i=n_i)
+    fns = genome.nodes[:, 2]
+    p = signal_probs(genome, in_planes, vec_weights, n_i=n_i)
+    activity = jnp.where(act, 2.0 * p * (1.0 - p), 0.0)
+    dyn = cc.dynamic_power_nw(fns, activity, clock_hz)
+    leak = jnp.sum(jnp.where(act, cc.P_LEAK[fns], 0.0))
+    return dyn + leak
+
+
+def pdp_fj(genome: Genome, in_planes: jax.Array, vec_weights: jax.Array,
+           *, n_i: int) -> jax.Array:
+    """Power-delay product [fJ] (paper's Fig. 6 metric)."""
+    p_nw = power_nw(genome, in_planes, vec_weights, n_i=n_i)
+    d_ps = critical_path_ps(genome, n_i=n_i)
+    return p_nw * d_ps * 1e-6  # nW * ps = 1e-21 J = 1e-6 fJ
+
+
+# ---------------------------------------------------------------- mutation
+
+@functools.partial(jax.jit, static_argnames=("n_i", "h"))
+def mutate(genome: Genome, key: jax.Array, allowed_fns: jax.Array,
+           *, n_i: int, h: int) -> Genome:
+    """Point mutation: up to ``h`` uniformly chosen genes are re-randomized
+    within their legal ranges (always yields a valid feed-forward genome)."""
+    c = genome.nodes.shape[0]
+    n_o = genome.outs.shape[0]
+    total = 3 * c + n_o
+
+    def one(carry, key):
+        nodes, outs = carry
+        kpos, kval = jax.random.split(key)
+        pos = jax.random.randint(kpos, (), 0, total)
+        is_node = pos < 3 * c
+        k = jnp.where(is_node, pos // 3, 0)
+        slot = pos % 3
+        # legal ranges
+        max_src_node = n_i + k            # sources for node k: [0, n_i + k)
+        max_src_out = n_i + c             # sources for outputs: [0, n_i + c)
+        r = jax.random.uniform(kval)
+        src_node = (r * max_src_node).astype(jnp.int32)
+        src_out = (r * max_src_out).astype(jnp.int32)
+        fn = allowed_fns[(r * allowed_fns.shape[0]).astype(jnp.int32)]
+        new_val = jnp.where(slot == 2, fn, src_node)
+        nodes = jnp.where(is_node,
+                          nodes.at[k, slot].set(new_val), nodes)
+        outs = jnp.where(is_node, outs,
+                         outs.at[jnp.where(is_node, 0, pos - 3 * c)].set(src_out))
+        return (nodes, outs), None
+
+    keys = jax.random.split(key, h)
+    (nodes, outs), _ = jax.lax.scan(one, (genome.nodes, genome.outs), keys)
+    return Genome(nodes, outs)
+
+
+def random_genome(key: jax.Array, *, n_i: int, c: int, n_o: int,
+                  allowed_fns: np.ndarray) -> Genome:
+    """Uniformly random valid genome (used by tests / synthetic benchmarks)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    ks = jnp.arange(c)
+    hi = (n_i + ks).astype(jnp.float32)
+    srcs = (jax.random.uniform(k1, (c, 2)) * hi[:, None]).astype(jnp.int32)
+    fns = jnp.asarray(allowed_fns)[
+        jax.random.randint(k2, (c,), 0, len(allowed_fns))][:, None]
+    nodes = jnp.concatenate([srcs, fns], axis=1).astype(jnp.int32)
+    outs = jax.random.randint(k3, (n_o,), 0, n_i + c).astype(jnp.int32)
+    return Genome(nodes, outs)

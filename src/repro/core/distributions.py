@@ -1,0 +1,103 @@
+"""Probability mass functions D over multiplier operands (paper Fig. 2 / 6).
+
+The WMED weight of input vector (x, y) is alpha_{x,y} = D(x): x is the
+*characterized* operand (filter coefficient / synaptic weight), y is the
+arbitrary data operand.  All PMFs are length-2^w numpy/jnp vectors indexed by
+the operand's *bit pattern* (i.e. two's-complement encoding for signed use).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def uniform_pmf(w: int = 8) -> np.ndarray:
+    """D_u -- the conventional assumption (reduces WMED to plain MED)."""
+    n = 1 << w
+    return np.full(n, 1.0 / n, dtype=np.float64)
+
+
+def normal_pmf(w: int = 8, mean: float = 127.5, std: float = 32.0) -> np.ndarray:
+    """D_1 -- normal distribution over the unsigned operand range."""
+    n = 1 << w
+    x = np.arange(n, dtype=np.float64)
+    p = np.exp(-0.5 * ((x - mean) / std) ** 2)
+    return p / p.sum()
+
+
+def half_normal_pmf(w: int = 8, std: float = 48.0) -> np.ndarray:
+    """D_2 -- half-normal: mass concentrated at small magnitudes (x >= 0)."""
+    n = 1 << w
+    x = np.arange(n, dtype=np.float64)
+    p = np.exp(-0.5 * (x / std) ** 2)
+    return p / p.sum()
+
+
+def signed_normal_pmf(w: int = 8, mean: float = 0.0, std: float = 20.0) -> np.ndarray:
+    """Normal over *signed* values, returned in bit-pattern order.
+
+    Index k of the result is the PMF of the int8 pattern k (two's
+    complement), i.e. values 0..127 then -128..-1 -- this matches how LUTs
+    and packed evaluation index operands.
+    """
+    n = 1 << w
+    vals = np.arange(n)
+    signed = np.where(vals < n // 2, vals, vals - n)
+    p = np.exp(-0.5 * ((signed - mean) / std) ** 2)
+    return p / p.sum()
+
+
+def empirical_pmf(values: np.ndarray, w: int = 8, signed: bool = True,
+                  smooth: float = 1e-6) -> np.ndarray:
+    """PMF measured from application data (paper Fig. 6 top).
+
+    ``values`` are integer operand values (e.g. quantized NN weights).
+    Returned in bit-pattern order; ``smooth`` adds a tiny floor so that no
+    input vector has exactly zero importance (keeps WMED a sane metric for
+    patterns unseen in the sample).
+    """
+    n = 1 << w
+    v = np.asarray(values).astype(np.int64).ravel()
+    if signed:
+        v = np.mod(v, n)  # two's complement pattern
+    hist = np.bincount(v, minlength=n).astype(np.float64)
+    hist += smooth * hist.sum() if hist.sum() > 0 else 1.0
+    return hist / hist.sum()
+
+
+def gaussian_kernel_pmf(w: int = 8, kernel: np.ndarray | None = None) -> np.ndarray:
+    """PMF of the 3x3 Gaussian filter coefficients (paper Fig. 5 setup).
+
+    Default kernel [1 2 1; 2 4 2; 1 2 1] * 15 (sum 240 < 256, as the paper
+    requires for 8-bit accumulation headroom).
+    """
+    if kernel is None:
+        kernel = np.array([[1, 2, 1], [2, 4, 2], [1, 2, 1]]) * 15
+    return empirical_pmf(kernel.ravel(), w=w, signed=False)
+
+
+def vector_weights_joint(pmf_x: np.ndarray, pmf_y: np.ndarray,
+                         w: int) -> np.ndarray:
+    """Joint-distribution WMED weights: alpha_{x,y} = D_x(x) * D_y(y).
+
+    The paper's alpha uses D(x) with y implicitly uniform; Sec. III-A
+    explicitly allows other choices.  For NN MACs the data operand (the
+    activation) is far from uniform -- post-ReLU it concentrates at small
+    non-negative codes -- and weighting both operands stops the search from
+    parking its error mass exactly where activations live.
+    """
+    wv = np.outer(pmf_x.astype(np.float64),
+                  pmf_y.astype(np.float64)).reshape(-1)
+    return (wv / wv.sum()).astype(np.float32)
+
+
+def vector_weights(pmf_x: np.ndarray, w: int) -> np.ndarray:
+    """Per-test-vector weights over the packed exhaustive vector ordering.
+
+    Vector v = (x << w) | y gets weight D(x) / 2^w (y uniform), normalized to
+    sum to 1 -- the proper-expectation form of the paper's alpha (see
+    DESIGN.md normalization note).
+    """
+    n = 1 << w
+    wv = np.repeat(pmf_x.astype(np.float64), n) / n
+    return (wv / wv.sum()).astype(np.float32)

@@ -1,0 +1,187 @@
+"""(1+lambda) evolution strategy for circuit approximation (paper Sec. III-C).
+
+Fitness (Eq. 1):   F(M~) = area(M~)      if WMED_D(M~) <= E_i
+                           +inf          otherwise
+minimized under a target error level E_i.  Repeating the run for a ladder of
+E_i levels yields the error/area Pareto front (paper Figs. 3 & 6).
+
+The whole generation step -- mutate lambda offspring, bit-parallel evaluate,
+WMED + active-area fitness, parent replacement with neutral drift (offspring
+preferred on ties, the standard CGP rule) -- is one jitted function; the
+driver batches G generations inside a single ``lax.scan`` to amortize
+dispatch on CPU and XLA:TPU alike.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cellcost as cc
+from repro.core import cgp as cgp_mod
+from repro.core import distributions as dist
+from repro.core import netlist as nl_mod
+from repro.core import wmed as wmed_mod
+from repro.core.cgp import Genome
+
+
+@dataclasses.dataclass(frozen=True)
+class EvolveConfig:
+    w: int = 8                      # operand bit width
+    signed: bool = False
+    lam: int = 4                    # lambda (paper: 4)
+    h: int = 5                      # max mutated genes per offspring (paper: 5)
+    generations: int = 2000         # paper: 1e6; scaled down on CPU, knob
+    gens_per_jit_block: int = 250   # scan length inside one jit call
+    allowed_fns: tuple = tuple(int(f) for f in cc.ALL_FNS)
+    seed: int = 0
+    # |weighted mean SIGNED error| <= bias_frac * level (None = off).
+    # WMED alone admits systematically *biased* circuits whose error
+    # accumulates coherently over a MAC's K-term sum; the paper filters
+    # these implicitly by integrating the best of 25 runs -- at our scaled
+    # budgets an explicit bias constraint is required (see DESIGN.md §7).
+    bias_frac: float | None = None
+
+
+@dataclasses.dataclass
+class EvolveResult:
+    genome: Genome
+    wmed: float
+    area: float
+    level: float
+    generations: int
+    history: np.ndarray  # (G//block, 2) best (wmed, area) per block
+    wall_s: float
+
+
+def _fitness_fn(exact, weights, pmax, level, n_i, signed, bias_frac):
+    """Fitness per Eq. 1 (optionally bias-constrained) -- returns
+    (fitness, wmed, area)."""
+
+    def fit(genome: Genome, in_planes):
+        planes = cgp_mod.eval_genome(genome, in_planes, n_i=n_i)
+        vals = cgp_mod.unpack_planes(planes)
+        n_o = planes.shape[0]
+        vals = cgp_mod.to_signed(vals, n_o) if signed else vals
+        e = wmed_mod.weighted_mean_error_distance(vals, exact, weights, pmax)
+        a = cgp_mod.area(genome, n_i=n_i)
+        ok = e <= level
+        if bias_frac is not None:
+            serr = vals.astype(jnp.float32) - exact.astype(jnp.float32)
+            wme = jnp.abs(jnp.dot(weights, serr)) / pmax
+            ok = ok & (wme <= bias_frac * level)
+        f = jnp.where(ok, a, jnp.float32(jnp.inf))
+        return f, e, a
+
+    return fit
+
+
+def make_step(cfg: EvolveConfig, exact, weights, level: float,
+              in_planes) -> Callable:
+    """Build the jitted G-generation evolution block."""
+    n_i = 2 * cfg.w
+    pmax = jnp.float32(wmed_mod.p_max(cfg.w))
+    allowed = jnp.asarray(np.array(cfg.allowed_fns, dtype=np.int32))
+    fit = _fitness_fn(exact, weights, pmax, jnp.float32(level), n_i,
+                      cfg.signed, cfg.bias_frac)
+
+    def generation(carry, key):
+        parent, parent_f = carry
+        keys = jax.random.split(key, cfg.lam)
+        offspring = jax.vmap(
+            lambda k: cgp_mod.mutate(parent, k, allowed, n_i=n_i, h=cfg.h)
+        )(keys)
+        f, e, a = jax.vmap(lambda g: fit(g, in_planes))(offspring)
+        best = jnp.argmin(f)
+        best_f = f[best]
+        take = best_f <= parent_f  # neutral drift: ties promote offspring
+        new_parent = jax.tree.map(
+            lambda o, p: jnp.where(take, o[best], p), offspring, parent)
+        new_f = jnp.where(take, best_f, parent_f)
+        return (new_parent, new_f), (e[best], a[best])
+
+    @jax.jit
+    def block(parent: Genome, parent_f, key):
+        keys = jax.random.split(key, cfg.gens_per_jit_block)
+        (parent, parent_f), (es, areas) = jax.lax.scan(
+            generation, (parent, parent_f), keys)
+        return parent, parent_f, es[-1], areas[-1]
+
+    return block, fit
+
+
+def evolve(cfg: EvolveConfig, seed_genome: Genome, pmf_x: np.ndarray,
+           level: float, verbose: bool = False,
+           vec_weights: np.ndarray | None = None) -> EvolveResult:
+    """Run one CGP approximation for target WMED level ``level``.
+
+    ``vec_weights`` overrides the per-test-vector weights (e.g. the joint
+    weight x activation distribution); default is the paper's alpha = D(x).
+    """
+    w = cfg.w
+    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+    exact = jnp.asarray(wmed_mod.exact_products(w, cfg.signed).astype(np.int32))
+    weights = jnp.asarray(vec_weights if vec_weights is not None
+                          else dist.vector_weights(pmf_x, w))
+    block, fit = make_step(cfg, exact, weights, level, in_planes)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    parent = seed_genome
+    parent_f, e0, a0 = fit(parent, in_planes)
+    # The exact seed satisfies any level; its fitness is its area.
+    parent_f = jnp.where(e0 <= level, a0, jnp.float32(jnp.inf))
+
+    t0 = time.time()
+    hist = []
+    n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
+    for b in range(n_blocks):
+        key, sub = jax.random.split(key)
+        parent, parent_f, e_last, a_last = block(parent, parent_f, sub)
+        hist.append((float(e_last), float(a_last)))
+        if verbose and (b % 4 == 0 or b == n_blocks - 1):
+            print(f"  gen {(b + 1) * cfg.gens_per_jit_block:6d} "
+                  f"wmed={float(e_last):.5f} area={float(a_last):8.2f}")
+    _, e_fin, a_fin = fit(parent, in_planes)
+    return EvolveResult(
+        genome=jax.tree.map(np.asarray, parent),
+        wmed=float(e_fin), area=float(a_fin), level=float(level),
+        generations=cfg.generations, history=np.asarray(hist),
+        wall_s=time.time() - t0)
+
+
+# Paper's 14 target WMED levels (percent ladder, Sec. IV / Table I).
+PAPER_LEVELS = (0.00005, 0.0001, 0.0005, 0.001, 0.002, 0.005, 0.01,
+                0.02, 0.03, 0.05, 0.08, 0.1, 0.15, 0.2)
+
+
+def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray,
+                 levels: Sequence[float] = PAPER_LEVELS,
+                 repeats: int = 1, verbose: bool = False):
+    """Paper's outer loop: one evolution per target level (x repeats).
+
+    Returns the per-level best results; together they form the error/area
+    Pareto front of Figs. 3/6.  The seed is the exact multiplier family
+    matching ``cfg.signed``.
+    """
+    seed_nl = (nl_mod.baugh_wooley_multiplier(cfg.w) if cfg.signed
+               else nl_mod.array_multiplier(cfg.w))
+    results = []
+    for li, level in enumerate(levels):
+        best = None
+        for r in range(repeats):
+            c = dataclasses.replace(cfg, seed=cfg.seed + 1000 * li + r)
+            g0 = cgp_mod.genome_from_netlist(seed_nl)
+            res = evolve(c, g0, pmf_x, level, verbose=verbose)
+            if best is None or res.area < best.area:
+                best = res
+        results.append(best)
+        if verbose:
+            print(f"level={level:8.5f} -> wmed={best.wmed:.5f} "
+                  f"area={best.area:8.2f} ({best.wall_s:.1f}s)")
+    return results

@@ -1,0 +1,235 @@
+"""Compiling circuits to product LUTs + conventional approximate baselines.
+
+Once a multiplier is fixed (evolved genome or literature design), its full
+function is a 2^w x 2^w product table.  The LUT is the interface between the
+circuit world and the NN world:
+
+* NN inference emulates approximate hardware by LUT lookups
+  (``approx_matmul`` / the ``lut_matmul`` Pallas kernel);
+* error metrics and heat maps (paper Fig. 4) read the LUT directly.
+
+LUT indexing: ``lut[xp, yp]`` with xp/yp the *bit patterns* of the operands
+(two's complement patterns for signed multipliers), value = the (signed)
+product the circuit emits.
+
+Conventional baselines implemented (paper Figs. 3/5/7 comparisons):
+
+* truncated array multiplier [Jiang et al. 2017]: all partial products in
+  columns < t are dropped;
+* broken-array multiplier (BAM) [Mahdiani et al. 2010]: carry-save cells
+  below the horizontal break HBL and to the right of the vertical break VBL
+  are omitted;
+* zero-guarded wrapper [Mrazek et al. 2016]: forces exact-0 output when
+  either operand is zero (cheap operand-NOR detect).
+
+Their electrical parameters come from the same cell model, by building the
+*exact* array multiplier netlist and discounting the omitted cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core import cellcost as cc
+from repro.core import cgp as cgp_mod
+from repro.core import distributions as dist
+from repro.core import netlist as nl_mod
+from repro.core import wmed as wmed_mod
+from repro.core.cgp import Genome
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class MultLib:
+    """A multiplier 'library entry': function + electrical parameters."""
+
+    name: str
+    lut: np.ndarray          # (2^w, 2^w) int32, bit-pattern indexed
+    w: int
+    signed: bool
+    area_um2: float
+    delay_ps: float
+    power_nw: float          # under the D it was characterized with
+    pdp_fj: float
+    wmed: float              # under its design-time D
+    med: float
+
+    @property
+    def lut_flat(self) -> np.ndarray:
+        return np.ascontiguousarray(self.lut.reshape(-1))
+
+
+def lut_from_values(vals: np.ndarray, w: int) -> np.ndarray:
+    return np.asarray(vals, dtype=np.int32).reshape(1 << w, 1 << w)
+
+
+def genome_to_lut(genome: Genome, w: int, signed: bool) -> np.ndarray:
+    """Exhaustively evaluate a genome into a (2^w, 2^w) int32 LUT."""
+    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+    planes = cgp_mod.eval_genome(genome, in_planes, n_i=2 * w)
+    vals = cgp_mod.unpack_planes(planes)
+    if signed:
+        vals = cgp_mod.to_signed(vals, planes.shape[0])
+    return lut_from_values(np.asarray(vals), w)
+
+
+def characterize(name: str, genome: Genome, w: int, signed: bool,
+                 pmf_x: np.ndarray) -> MultLib:
+    """Full electrical + error characterization of an evolved genome."""
+    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+    vw = jnp.asarray(dist.vector_weights(pmf_x, w))
+    lut = genome_to_lut(genome, w, signed)
+    exact = wmed_mod.exact_products(w, signed)
+    e_w = float(wmed_mod.wmed(lut.reshape(-1), exact.astype(np.int32),
+                              dist.vector_weights(pmf_x, w), w))
+    e_m = float(wmed_mod.med(lut.reshape(-1), exact.astype(np.int32), w))
+    a = float(cgp_mod.area(genome, n_i=2 * w))
+    d = float(cgp_mod.critical_path_ps(genome, n_i=2 * w))
+    p = float(cgp_mod.power_nw(genome, in_planes, vw, n_i=2 * w))
+    return MultLib(name=name, lut=lut, w=w, signed=signed, area_um2=a,
+                   delay_ps=d, power_nw=p, pdp_fj=p * d * 1e-6,
+                   wmed=e_w, med=e_m)
+
+
+# ------------------------------------------------------- conventional mults
+
+def _array_mult_costs(w: int, keep_frac_cells: float,
+                      depth_frac: float = 1.0) -> Dict[str, float]:
+    """Electrical params of a (partially populated) array multiplier.
+
+    We characterize the exact array multiplier netlist with the cell model
+    and scale area/power by the fraction of carry-save cells kept; the delay
+    scales with the remaining array depth (both standard first-order models
+    for truncation-style designs).
+    """
+    nl = nl_mod.array_multiplier(w)
+    g = cgp_mod.genome_from_netlist(nl)
+    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+    vw = jnp.asarray(dist.vector_weights(dist.uniform_pmf(w), w))
+    a = float(cgp_mod.area(g, n_i=2 * w)) * keep_frac_cells
+    d = float(cgp_mod.critical_path_ps(g, n_i=2 * w)) * depth_frac
+    p = float(cgp_mod.power_nw(g, in_planes, vw, n_i=2 * w)) * keep_frac_cells
+    return dict(area_um2=a, delay_ps=d, power_nw=p, pdp_fj=p * d * 1e-6)
+
+
+def _finish(name, vals, w, signed, pmf_x, costs) -> MultLib:
+    exact = wmed_mod.exact_products(w, signed)
+    vwts = dist.vector_weights(pmf_x, w)
+    return MultLib(
+        name=name, lut=lut_from_values(vals, w), w=w, signed=signed,
+        wmed=float(wmed_mod.wmed(vals, exact.astype(np.int32), vwts, w)),
+        med=float(wmed_mod.med(vals, exact.astype(np.int32), w)), **costs)
+
+
+def truncated_multiplier(w: int, t: int, signed: bool = False,
+                         pmf_x: np.ndarray | None = None) -> MultLib:
+    """Truncated array multiplier: drop partial products in columns < t."""
+    pmf_x = dist.uniform_pmf(w) if pmf_x is None else pmf_x
+    n = 1 << w
+    v = np.arange(1 << (2 * w), dtype=np.int64)
+    xp, yp = v >> w, v & (n - 1)
+    x = np.where(xp < n // 2, xp, xp - n) if signed else xp
+    y = np.where(yp < n // 2, yp, yp - n) if signed else yp
+    prod = np.zeros_like(v)
+    for i in range(w):
+        for j in range(w):
+            if i + j >= t:
+                # partial product magnitude bit (sign handled via exact
+                # product of masked operand contributions)
+                prod += ((xp >> i) & 1) * ((yp >> j) & 1) << (i + j)
+    if signed:
+        # recompute via truncation of |x*y| representation: emulate by
+        # truncating the exact product's low bits contributed by dropped
+        # columns -- standard fixed-point truncation equivalent.
+        exact = x * y
+        prod = (exact >> t) << t
+    total_cells = w * w + 5 * (w - 1) * w  # pp ANDs + ~FA gate count
+    kept = sum(1 for i in range(w) for j in range(w) if i + j >= t)
+    keep_frac = (kept + 5 * max(kept - w, 0)) / total_cells
+    costs = _array_mult_costs(w, keep_frac, depth_frac=1.0)
+    return _finish(f"trunc{t}", prod, w, signed, pmf_x, costs)
+
+
+def broken_array_multiplier(w: int, hbl: int, vbl: int, signed: bool = False,
+                            pmf_x: np.ndarray | None = None) -> MultLib:
+    """BAM: omit carry-save cells with row > HBL or column < VBL."""
+    pmf_x = dist.uniform_pmf(w) if pmf_x is None else pmf_x
+    n = 1 << w
+    v = np.arange(1 << (2 * w), dtype=np.int64)
+    xp, yp = v >> w, v & (n - 1)
+    prod = np.zeros_like(v)
+    kept = 0
+    for j in range(w):          # row = y bit
+        for i in range(w):      # column position = i + j
+            if j <= hbl and (i + j) >= vbl:
+                prod += ((xp >> i) & 1) * ((yp >> j) & 1) << (i + j)
+                kept += 1
+    if signed:
+        sx = np.where(xp < n // 2, 0, 1)
+        sy = np.where(yp < n // 2, 0, 1)
+        # two's complement correction is itself broken in a BAM; we model
+        # magnitude truncation (standard for signed BAM evaluations).
+        x = np.where(xp < n // 2, xp, xp - n)
+        y = np.where(yp < n // 2, yp, yp - n)
+        mag = np.abs(x) * np.abs(y)
+        mag = np.where(mag > 0, (mag >> vbl) << vbl, 0)
+        prod = np.where((sx ^ sy) == 1, -mag, mag)
+    total_cells = w * w + 5 * (w - 1) * w
+    keep_frac = (kept + 5 * max(kept - w, 0)) / total_cells
+    costs = _array_mult_costs(w, keep_frac,
+                              depth_frac=(hbl + 1) / w)
+    return _finish(f"bam_h{hbl}_v{vbl}", prod, w, signed, pmf_x, costs)
+
+
+def zero_guarded(m: MultLib) -> MultLib:
+    """Wrap a multiplier so multiplication by zero is exact [Mrazek 2016]."""
+    lut = m.lut.copy()
+    lut[0, :] = 0
+    lut[:, 0] = 0
+    # zero-detect: (w-1) OR gates per operand + output AND mask
+    extra_area = (2 * (m.w - 1) * 1.064 + 2 * m.w * 1.064)
+    exact = wmed_mod.exact_products(m.w, m.signed)
+    uni = dist.uniform_pmf(m.w)
+    return dataclasses.replace(
+        m, name=m.name + "_zg", lut=lut,
+        area_um2=m.area_um2 + extra_area,
+        power_nw=m.power_nw * 1.02,
+        pdp_fj=m.pdp_fj * 1.05,
+        wmed=float(wmed_mod.wmed(lut.reshape(-1), exact.astype(np.int32),
+                                 dist.vector_weights(uni, m.w), m.w)),
+        med=float(wmed_mod.med(lut.reshape(-1), exact.astype(np.int32), m.w)))
+
+
+def exact_multiplier(w: int, signed: bool) -> MultLib:
+    nlx = (nl_mod.baugh_wooley_multiplier(w) if signed
+           else nl_mod.array_multiplier(w))
+    g = cgp_mod.genome_from_netlist(nlx)
+    return characterize("exact", g, w, signed, dist.uniform_pmf(w))
+
+
+# ------------------------------------------------------------- persistence
+
+def save_library(path: str, lib: list[MultLib]) -> None:
+    arrs, meta = {}, []
+    for i, m in enumerate(lib):
+        arrs[f"lut_{i}"] = m.lut
+        meta.append((m.name, m.w, int(m.signed), m.area_um2, m.delay_ps,
+                     m.power_nw, m.pdp_fj, m.wmed, m.med))
+    arrs["meta"] = np.array(meta, dtype=object)
+    np.savez_compressed(path, **arrs, allow_pickle=True)
+
+
+def load_library(path: str) -> list[MultLib]:
+    z = np.load(path, allow_pickle=True)
+    out = []
+    for i, row in enumerate(z["meta"]):
+        name, w, signed, a, d, p, pdp, e_w, e_m = row
+        out.append(MultLib(name=str(name), lut=z[f"lut_{i}"], w=int(w),
+                           signed=bool(signed), area_um2=float(a),
+                           delay_ps=float(d), power_nw=float(p),
+                           pdp_fj=float(pdp), wmed=float(e_w), med=float(e_m)))
+    return out

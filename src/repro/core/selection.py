@@ -1,0 +1,66 @@
+"""Per-layer multiplier selection from an evolved Pareto library.
+
+The paper evolves one multiplier per WMED level and integrates the best
+into *every* MAC.  A framework-level refinement (DESIGN.md §4): each layer
+has its own weight distribution D_l, so re-score every library entry's LUT
+under D_l (cheap -- pure table arithmetic, no re-evolution) and pick, per
+layer, the lowest-power entry meeting the layer's WMED budget.  Sensitive
+layers (first/logits, per the usual quantization folklore) can be pinned
+to tighter budgets via ``budget_overrides``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import distributions as dist
+from repro.core import wmed as wmed_mod
+from repro.core.luts import MultLib
+
+
+def rescore(m: MultLib, pmf_x: np.ndarray,
+            pmf_y: np.ndarray | None = None) -> float:
+    """WMED of a library entry under a (possibly joint) distribution."""
+    vw = (dist.vector_weights_joint(pmf_x, pmf_y, m.w) if pmf_y is not None
+          else dist.vector_weights(pmf_x, m.w))
+    exact = wmed_mod.exact_products(m.w, m.signed).astype(np.int32)
+    return float(wmed_mod.wmed(m.lut.reshape(-1), exact, vw, m.w))
+
+
+def select_per_layer(library: Sequence[MultLib],
+                     layer_pmfs: Dict[str, np.ndarray],
+                     budget: float,
+                     act_pmf: np.ndarray | None = None,
+                     budget_overrides: Dict[str, float] | None = None,
+                     objective: str = "power_nw") -> Dict[str, MultLib]:
+    """Pick the cheapest feasible multiplier per layer.
+
+    library: evolved + conventional entries; layer_pmfs: layer name ->
+    weight-code PMF; budget: default WMED budget; objective: MultLib
+    attribute to minimize ('power_nw' | 'area_um2' | 'pdp_fj').
+    Falls back to the lowest-WMED entry when nothing is feasible.
+    """
+    overrides = budget_overrides or {}
+    out: Dict[str, MultLib] = {}
+    for name, pmf in layer_pmfs.items():
+        b = overrides.get(name, budget)
+        scored = [(rescore(m, pmf, act_pmf), m) for m in library]
+        feasible = [(getattr(m, objective), m) for e, m in scored if e <= b]
+        if feasible:
+            out[name] = min(feasible, key=lambda t: t[0])[1]
+        else:  # nothing meets the budget: most accurate entry
+            out[name] = min(scored, key=lambda t: t[0])[1]
+    return out
+
+
+def library_savings(selection: Dict[str, MultLib], exact: MultLib,
+                    mac_counts: Dict[str, int],
+                    objective: str = "power_nw") -> float:
+    """Weighted relative saving across layers (MAC-count weighted)."""
+    total = sum(mac_counts.values())
+    rel = sum(mac_counts[n] * getattr(m, objective)
+              for n, m in selection.items()) / (
+        total * getattr(exact, objective))
+    return 1.0 - rel

@@ -1,0 +1,2 @@
+"""Data pipelines: deterministic token streams (LM) and procedural digit
+image corpora standing in for MNIST/SVHN (no downloads in this container)."""

@@ -1,0 +1,71 @@
+"""Deterministic, shardable, checkpoint-free LM data pipeline.
+
+Every batch is a pure function of (seed, step, shard) -- there is no
+iterator state to checkpoint, any host can regenerate any microbatch (the
+property the straggler backup-shard policy and bitwise restart-recovery
+tests rely on), and the stream is identical across elastic restarts.
+
+Tokens follow a Zipf-like marginal with short-range repetition structure so
+LM training has actual signal (copy/induction patterns), all generated with
+counter-based hashing (no sequential RNG state).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _hash_u32(x: np.ndarray) -> np.ndarray:
+    """Counter-based integer hash (splitmix-like), vectorized uint32."""
+    x = x.astype(np.uint64)
+    x = (x ^ (x >> 30)) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> 27)) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> 31)
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def token_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+                zipf_a: float = 1.5, copy_period: int = 64) -> dict:
+    """Returns {tokens (B, S) int32, labels (B, S) int32}."""
+    idx = (np.uint64(seed) << np.uint64(40)) \
+        + (np.uint64(step) << np.uint64(20))
+    ctr = idx + np.arange(batch * seq, dtype=np.uint64)
+    u = _hash_u32(ctr).astype(np.float64) / 2 ** 32
+    # Zipf-ish tail via Pareto inverse-CDF: rank ~ (1-u)^(-1/(a-1)) - 1
+    ranks = (1.0 - u * (1.0 - 1e-9)) ** (-1.0 / (zipf_a - 1.0)) - 1.0
+    ranks = np.minimum(ranks, float(vocab - 1))  # clamp tail pre-cast
+    toks = np.clip(ranks.astype(np.int64), 0, vocab - 1) \
+        .reshape(batch, seq)
+    # induction structure: periodically copy an earlier span
+    if seq > 2 * copy_period:
+        toks[:, copy_period::copy_period * 2][:, :1] = toks[:, :1]
+        for b in range(0, batch, 4):
+            toks[b, copy_period:2 * copy_period] = toks[b, :copy_period]
+    tokens = toks[:, :-1] if False else toks
+    labels = np.roll(toks, -1, axis=1)
+    labels[:, -1] = 0
+    return {"tokens": jnp.asarray(tokens, jnp.int32),
+            "labels": jnp.asarray(labels, jnp.int32)}
+
+
+def make_lm_data_fn(cfg, shape, seed: int = 0, n_pod: int = 1):
+    """data_fn(step) for the train driver; adds pod leading dim if needed."""
+    def data_fn(step: int):
+        b = token_batch(seed, step, shape.global_batch, shape.seq_len,
+                        cfg.vocab)
+        if n_pod > 1:
+            b = jax.tree.map(
+                lambda x: x.reshape((n_pod, x.shape[0] // n_pod)
+                                    + x.shape[1:]), b)
+        if cfg.cross_attn_every:
+            key = jax.random.PRNGKey((seed << 20) ^ step)
+            lead = (n_pod, shape.global_batch // n_pod) if n_pod > 1 \
+                else (shape.global_batch,)
+            b["vision_embeds"] = jax.random.normal(
+                key, lead + (cfg.n_vision_tokens, cfg.d_vision),
+                jnp.bfloat16)
+        return b
+    return data_fn

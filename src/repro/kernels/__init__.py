@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``lut_matmul``: LUT-gather int8 matmul -- the approximate-MAC emulation
+  hot spot (the paper's systolic-array inference path, TPU-adapted);
+* ``cgp_eval``: bit-parallel gate-netlist evaluation over packed test
+  vectors -- the paper's CGP fitness-evaluation hot spot;
+* ``wkv``: chunked RWKV-6 linear-attention recurrence (the rwkv6
+  architecture's sequence-mix hot loop; state carried across the grid's
+  sequential chunk axis in VMEM scratch).
+
+Each kernel ships kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp oracle) and is
+validated with ``interpret=True`` shape/dtype sweeps in tests/.
+"""

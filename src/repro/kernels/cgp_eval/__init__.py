@@ -1,0 +1,1 @@
+from repro.kernels.cgp_eval.ops import cgp_eval  # noqa: F401

@@ -1,0 +1,33 @@
+"""Public wrappers for the cgp_eval Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cgp_eval.kernel import cgp_eval_kernel
+
+_INTERPRET = True  # CPU container; False on real TPU
+
+
+def cgp_eval(nodes, outs, in_planes, *, n_i: int, bw: int = 512):
+    """Single-genome evaluation; pads W to a block multiple."""
+    W = in_planes.shape[1]
+    bw = min(bw, W)
+    pad = (-W) % bw
+    if pad:
+        in_planes = jnp.pad(in_planes, ((0, 0), (0, pad)))
+    out = cgp_eval_kernel(jnp.asarray(nodes, jnp.int32),
+                          jnp.asarray(outs, jnp.int32),
+                          jnp.asarray(in_planes, jnp.uint32),
+                          n_i=n_i, bw=bw, interpret=_INTERPRET)
+    return out[:, :W]
+
+
+def cgp_eval_population(nodes_pop, outs_pop, in_planes, *, n_i: int,
+                        bw: int = 512):
+    """vmap over a population (P, c, 3) / (P, n_o)."""
+    return jax.vmap(lambda n, o: cgp_eval(n, o, in_planes, n_i=n_i, bw=bw))(
+        nodes_pop, outs_pop)

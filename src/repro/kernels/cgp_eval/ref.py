@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the cgp_eval kernel (independent of repro.core.cgp)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def cgp_eval_ref(nodes: jax.Array, outs: jax.Array, in_planes: jax.Array,
+                 n_i: int) -> jax.Array:
+    """nodes (c,3) int32; outs (n_o,) int32; in_planes (n_i, W) uint32."""
+    c = nodes.shape[0]
+    W = in_planes.shape[1]
+    buf = jnp.zeros((n_i + c, W), jnp.uint32).at[:n_i].set(in_planes)
+
+    def body(k, buf):
+        a = buf[nodes[k, 0]]
+        b = buf[nodes[k, 1]]
+        f = nodes[k, 2]
+        ts = [jnp.where((f >> i) & 1, FULL, jnp.uint32(0)) for i in range(4)]
+        out = ((ts[0] & ~a & ~b) | (ts[1] & ~a & b)
+               | (ts[2] & a & ~b) | (ts[3] & a & b))
+        return buf.at[n_i + k].set(out)
+
+    buf = jax.lax.fori_loop(0, c, body, buf)
+    return buf[outs]

@@ -1,0 +1,1 @@
+from repro.kernels.lut_matmul.ops import lut_matmul, lut_matmul_f32  # noqa: F401

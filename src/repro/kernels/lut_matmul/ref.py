@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the LUT matmul kernel.
+
+Independent of repro.core.approx_matmul (so kernel tests have a separate
+source of truth): Y[m, n] = sum_k LUT[(A[m,k] << w) | B[k,n]].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_matmul_ref(a_pat: jax.Array, b_pat: jax.Array, lut_flat: jax.Array,
+                   w: int = 8) -> jax.Array:
+    """a_pat (M, K) data patterns in [0, 2^w); b_pat (K, N) weight patterns
+    (the WMED-characterized operand -> LUT row); lut (2^2w,)."""
+    idx = (b_pat[None, :, :].astype(jnp.int32) << w) \
+        | a_pat[:, :, None].astype(jnp.int32)
+    return jnp.sum(jnp.take(lut_flat, idx, axis=0), axis=1,
+                   dtype=jnp.int32)

@@ -1,0 +1,1 @@
+from repro.kernels.wkv.ops import wkv_chunked  # noqa: F401

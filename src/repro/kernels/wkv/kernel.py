@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: chunked WKV (RWKV-6 linear-attention recurrence).
+
+One grid step processes one (batch*head, chunk) tile; the (n x n) WKV state
+lives in a VMEM scratch that persists across the sequential chunk axis of
+the grid (initialized at chunk 0).  Within a chunk the pairwise-safe decay
+matrix (all exponents <= 0, see repro/nn/rwkv.py) turns the recurrence into
+two small matmuls + one masked (L x L) attention product -- MXU work -- and
+the cross-chunk carry is O(n^2).
+
+Grid: (B*H, S/L); blocks r/k/v/logw/out (1, L, n); scratch (n, n) f32.
+Validated in interpret mode against the naive recurrence oracle (ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_out_ref, s_scratch):
+    # note: outputs precede scratch in the kernel signature
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scratch[...] = jnp.zeros_like(s_scratch)
+
+    # full-block reads + explicit squeeze (scalar-index dim-dropping is
+    # ambiguous across pallas interpret versions)
+    r = jnp.squeeze(r_ref[...], 0).astype(jnp.float32)   # (L, n)
+    k = jnp.squeeze(k_ref[...], 0).astype(jnp.float32)
+    v = jnp.squeeze(v_ref[...], 0).astype(jnp.float32)
+    lw = jnp.squeeze(lw_ref[...], 0).astype(jnp.float32)  # (L, n), < 0
+    u = u_ref[...].reshape(-1).astype(jnp.float32)         # (n,)
+    s = s_scratch[...]                      # (n, n) carried state
+    L = r.shape[0]
+
+    cum = jnp.cumsum(lw, axis=0)            # (L, n)
+    cum_prev = cum - lw
+    r_dec = r * jnp.exp(cum_prev)           # exp(<=0), safe
+    inter = r_dec @ s                       # (L, n)
+    # intra-chunk pairwise decays: exponent cum_prev[t] - cum[j] <= 0 f. j<t
+    dmat = jnp.exp(jnp.clip(cum_prev[:, None, :] - cum[None, :, :],
+                            -60.0, 0.0))    # (L, L, n)
+    att = jnp.sum(r[:, None, :] * k[None, :, :] * dmat, axis=-1)  # (L, L)
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32), k=-1)
+    att = att * tri
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)                  # (L,)
+    out = inter + att @ v + bonus[:, None] * v
+    o_ref[...] = out[None].astype(o_ref.dtype)
+
+    w_tot = jnp.exp(cum[-1])                # (n,)
+    k_tail = k * jnp.exp(cum[-1][None, :] - cum)   # decays after j, <= 1
+    s_new = w_tot[:, None] * s + k_tail.T @ v
+    s_scratch[...] = s_new
+    s_out_ref[...] = s_new[None].astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked_kernel(r, k, v, logw, u, *, chunk: int = 32,
+                       interpret: bool = True):
+    """r/k/v/logw: (BH, S, n) flattened batch*heads; u: (BH, n).
+
+    Returns (out (BH, S, n), s_end (BH, n, n)).  S % chunk == 0 (ops pads).
+    """
+    BH, S, n = r.shape
+    grid = (BH, S // chunk)
+    out, s_end = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),  # r
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),  # k
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),  # v
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),  # logw
+            pl.BlockSpec((1, n), lambda b, c: (b, 0)),            # u
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n, n), lambda b, c: (b, 0, 0)),      # revisited
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, n), jnp.float32),
+            jax.ShapeDtypeStruct((BH, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return out, s_end

@@ -1,0 +1,26 @@
+"""Public wrapper for the WKV Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv_chunked_kernel
+
+_INTERPRET = True  # CPU container; False on real TPU
+
+
+def wkv_chunked(r, k, v, logw, u, *, chunk: int = 32):
+    """r/k/v/logw: (B,H,S,n); u: (H,n).  Returns (out (B,H,S,n),
+    s_end (B,H,n,n)).  Pads S to a chunk multiple (decays of the pad region
+    do not affect the causal prefix outputs; s_end is taken at the true S
+    only when S % chunk == 0 -- ops-level contract, asserted)."""
+    B, H, S, n = r.shape
+    assert S % chunk == 0, "pad the sequence to a chunk multiple"
+    flat = lambda t: t.reshape(B * H, S, n)
+    u_f = jnp.broadcast_to(u[None], (B, H, n)).reshape(B * H, n)
+    out, s_end = wkv_chunked_kernel(
+        flat(r).astype(jnp.float32), flat(k).astype(jnp.float32),
+        flat(v).astype(jnp.float32), flat(logw).astype(jnp.float32),
+        u_f.astype(jnp.float32), chunk=chunk, interpret=_INTERPRET)
+    return out.reshape(B, H, S, n), s_end.reshape(B, H, n, n)

@@ -1,0 +1,24 @@
+"""Naive per-token recurrence oracle for the WKV kernel (RWKV-6)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, s0):
+    """r/k/v/logw: (B,H,S,n); u: (H,n); s0: (B,H,n,n) -> (out, s_end).
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t;  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t).
+    """
+    w = jnp.exp(logw)
+
+    def step(s, t):
+        kv = jnp.einsum("bhn,bhm->bhnm", k[:, :, t], v[:, :, t])
+        o = jnp.einsum("bhn,bhnm->bhm", r[:, :, t],
+                       s + u[None, ..., None] * kv)
+        s = w[:, :, t, :, None] * s + kv
+        return s, o
+
+    s_end, outs = jax.lax.scan(step, s0, jnp.arange(r.shape[2]))
+    return jnp.moveaxis(outs, 0, 2), s_end

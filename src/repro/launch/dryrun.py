@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first initialization).  Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the jitted step (train_step / prefill / decode_step) with
+     deployment shardings attached to ShapeDtypeStruct inputs (launch/specs),
+  2. ``.lower().compile()`` on the production mesh -- success IS the test:
+     sharding mismatches, OOM-at-compile and unsupported collectives all
+     surface here,
+  3. records ``memory_analysis()``, ``cost_analysis()`` and the static HLO
+     analysis (exact FLOPs/bytes/collectives incl. loop trip counts --
+     launch/hlo_analysis) into results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+
+
+# per-(arch, shape) execution overrides: grad accumulation + seq-sharded
+# residuals (Megatron-SP-style) + int8 Adam moments for the big models.
+TRAIN_OVERRIDES = {
+    ("llama3_405b", "train_4k"): dict(grad_accum=4, seq_shard=True,
+                                      moments_int8=True),
+    ("arctic_480b", "train_4k"): dict(grad_accum=8, seq_shard=True,
+                                      moments_int8=True),
+    ("yi_34b", "train_4k"): dict(grad_accum=2, seq_shard=True,
+                                 moments_int8=True),
+    ("llama4_scout_17b", "train_4k"): dict(grad_accum=2, seq_shard=True,
+                                           moments_int8=True),
+    ("llama32_vision_11b", "train_4k"): dict(grad_accum=2, seq_shard=False),
+}
+
+
+def cell_list():
+    from repro.configs import ARCH_IDS, SHAPES, get_config
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shp in SHAPES.items():
+            if sname == "long_500k" and not cfg.supports_long:
+                cells.append((arch, sname, "SKIP:full-attention arch is "
+                              "quadratic at 524k ctx (DESIGN.md §4)"))
+            else:
+                cells.append((arch, sname, None))
+    return cells
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             pod_reduction: str = "compressed", force: bool = False,
+             mac_mode: str = None, tag: str = ""):
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.launch import hlo_analysis, specs
+    from repro.launch.mesh import devices_per_pod, make_production_mesh
+    from repro.nn import transformer as T
+    from repro.nn.layers import MacCtx
+    from repro.train import train_loop as TL
+    from repro.dist import sharding as sh
+
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}_{shape_name}_{mesh_kind}{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[dryrun] {name}: cached")
+        return json.load(open(path))
+
+    cfg = get_config(arch)
+    if mac_mode:
+        cfg = dataclasses.replace(cfg, mac_mode=mac_mode)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_pod = mesh.shape.get("pod", 1)
+    ov = TRAIN_OVERRIDES.get((arch, shape_name), {})
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "mesh_shape": dict(mesh.shape), "overrides": ov,
+              "pod_reduction": pod_reduction if multi else "n/a"}
+
+    t0 = time.time()
+    try:
+        with jax.sharding.set_mesh(mesh):
+            rules = {"seq": "model"} if ov.get("seq_shard") else {}
+            with sh.rules(rules):
+                if cfg.mac_mode.startswith("lut"):
+                    # representative evolved-family LUT (truncated signed
+                    # mult) -- the dry-run needs a concrete multiplier
+                    from repro.core import luts as luts_mod
+                    from repro.core.approx_matmul import ApproxMul
+                    mult = luts_mod.truncated_multiplier(8, 3, signed=True)
+                    mac = MacCtx(mode=cfg.mac_mode,
+                                 mul=ApproxMul.from_lut(mult.lut))
+                else:
+                    mac = MacCtx(mode=cfg.mac_mode)
+                if shape.kind == "train":
+                    from repro.train.optimizer import OptConfig
+                    lead_pod = multi and pod_reduction == "compressed"
+                    tcfg = TL.TrainConfig(
+                        grad_accum=ov.get("grad_accum", 1),
+                        pod_reduction=(pod_reduction if multi else "plain"),
+                        opt=OptConfig(
+                            moments_int8=ov.get("moments_int8", False)))
+                    step = TL.make_train_step(cfg, tcfg, mac=mac,
+                                              n_pod=n_pod if lead_pod else 1)
+                    st = specs.state_specs(cfg, tcfg, mesh,
+                                           n_pod=n_pod if lead_pod else 1)
+                    bt = specs.batch_specs(cfg, shape, mesh,
+                                           lead_pod=lead_pod)
+                    # donate the train state: in/out alias on deployment
+                    lowered = jax.jit(step, donate_argnums=(0,)).lower(st, bt)
+                elif shape.kind == "prefill":
+                    ps = specs.params_specs(cfg, mesh)
+                    bs = specs.prefill_specs(cfg, shape, mesh)
+                    fn = lambda p, b: T.prefill(
+                        cfg, p, b["tokens"],
+                        vision_embeds=b.get("vision_embeds"), mac=mac)
+                    lowered = jax.jit(fn).lower(ps, bs)
+                else:  # decode
+                    ps = specs.params_specs(cfg, mesh)
+                    cs = specs.cache_specs(cfg, shape, mesh)
+                    ts = specs.token_specs(cfg, shape, mesh)
+                    vspec = None
+                    if cfg.cross_attn_every:
+                        vspec = specs.sds(
+                            (shape.global_batch, cfg.n_vision_tokens,
+                             cfg.d_vision), jax.numpy.bfloat16, mesh,
+                            jax.sharding.PartitionSpec(None, None, None))
+                        fn = lambda p, c, t, v: T.decode_step(
+                            cfg, p, c, t, vision_embeds=v, mac=mac)
+                        lowered = jax.jit(fn).lower(ps, cs, ts, vspec)
+                    else:
+                        fn = lambda p, c, t: T.decode_step(cfg, p, c, t,
+                                                           mac=mac)
+                        lowered = jax.jit(fn).lower(ps, cs, ts)
+
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+
+        # ---- analyses ----
+        try:
+            ma = compiled.memory_analysis()
+            result["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes")
+                if hasattr(ma, k)} if ma is not None else str(ma)
+        except Exception as e:  # CPU backend may not support it
+            result["memory_analysis"] = f"unavailable: {e}"
+        try:
+            ca = compiled.cost_analysis()
+            result["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds")}
+        except Exception as e:
+            result["cost_analysis"] = f"unavailable: {e}"
+
+        hlo = compiled.as_text()
+        import gzip
+        with gzip.open(os.path.join(out_dir, name + ".hlo.gz"), "wt") as f:
+            f.write(hlo)  # kept so analyzer improvements re-run offline
+        result["hlo_analysis"] = hlo_analysis.analyze_text(
+            hlo, devices_per_pod=devices_per_pod(mesh))
+        result["timings"] = {"lower_s": round(t_lower, 1),
+                             "compile_s": round(t_compile, 1)}
+        result["status"] = "ok"
+        print(f"[dryrun] {name}: OK lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s "
+              f"flops/dev={result['hlo_analysis']['flops']:.3e} "
+              f"ici={result['hlo_analysis']['ici_wire_bytes']:.3e}B "
+              f"dcn={result['hlo_analysis']['dcn_wire_bytes']:.3e}B")
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {name}: FAILED {type(e).__name__}: {e}")
+
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def reanalyze(out_dir: str):
+    """Re-run the static HLO analysis from saved .hlo.gz (no recompiles)."""
+    import gzip
+    import glob
+    from repro.launch import hlo_analysis
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        hlo_path = path.replace(".json", ".hlo.gz")
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        dpp = 256
+        if rec.get("mesh_shape", {}).get("pod"):
+            total = 1
+            for v in rec["mesh_shape"].values():
+                total *= v
+            dpp = total // rec["mesh_shape"]["pod"]
+        rec["hlo_analysis"] = hlo_analysis.analyze_text(
+            hlo, devices_per_pod=dpp)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[reanalyze] {os.path.basename(path)}: "
+              f"flops={rec['hlo_analysis']['flops']:.3e} "
+              f"bytes={rec['hlo_analysis']['bytes']:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute analyses from stored .hlo.gz")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--pod-reduction", default="compressed",
+                    choices=["compressed", "plain"])
+    ap.add_argument("--mac-mode", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze(args.out)
+        return 0
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    ok = fail = skip = 0
+    for arch, sname, skip_reason in cell_list():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and sname != args.shape:
+            continue
+        for mk in meshes:
+            if skip_reason:
+                os.makedirs(args.out, exist_ok=True)
+                with open(os.path.join(
+                        args.out, f"{arch}_{sname}_{mk}{args.tag}.json"),
+                        "w") as f:
+                    json.dump({"arch": arch, "shape": sname, "mesh": mk,
+                               "status": "skipped",
+                               "reason": skip_reason}, f, indent=1)
+                print(f"[dryrun] {arch}_{sname}_{mk}: {skip_reason}")
+                skip += 1
+                continue
+            r = run_cell(arch, sname, mk, args.out,
+                         pod_reduction=args.pod_reduction,
+                         force=args.force, mac_mode=args.mac_mode,
+                         tag=args.tag)
+            ok += r.get("status") == "ok"
+            fail += r.get("status") == "error"
+    print(f"[dryrun] done: {ok} ok, {fail} failed, {skip} skipped")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

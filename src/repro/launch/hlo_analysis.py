@@ -1,0 +1,464 @@
+"""Static analyzer for optimized HLO text: exact FLOPs / bytes / collectives.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis does NOT multiply
+``while`` bodies by their trip counts, so a 126-layer ``lax.scan`` model
+reports the FLOPs of *one* layer (verified empirically -- see DESIGN.md §8).
+Since scan-over-layers is mandatory for compile-time control, we parse the
+optimized HLO module instead and walk the call graph (entry -> fusions /
+calls / whiles / conditionals), multiplying each computation's cost by the
+product of enclosing loop trip counts (XLA records them in
+``backend_config={"known_trip_count":{"n":...}}``).
+
+Counted per top-level op (the module is the *per-device* SPMD program, so
+every number is per-chip):
+
+* FLOPs: dot (2*M*N*K from dot_dimension_numbers), convolution
+  (2 * out_elems * kernel_macs), elementwise arithmetic (1/elem),
+  reduce (in_elems);
+* bytes: operands + outputs of non-fused ops (fusion internals are free --
+  the fusion boundary is what touches HBM); dynamic-update-slice counts the
+  updated window only (in-place semantics);
+* collectives: bytes + participant-group metadata for all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute, classified
+  as intra-pod (ICI) vs pod-crossing (DCN) from replica groups; wire bytes
+  use the standard ring model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "s4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "u4": 0.5, "token": 0, "opaque": 0,
+}
+
+_ELEMWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "exponential",
+    "log", "tanh", "rsqrt", "sqrt", "power", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "sign", "cosine", "sine",
+    "atan2", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "clamp", "expm1", "log1p", "logistic",
+    "popcnt", "clz", "erf", "cbrt", "tan",
+}
+
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "opt-barrier", "partition-id", "replica-id",
+    "domain", "add-dependency",
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ------------------------------------------------------------- shape parse
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_shape(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """'(s32[], bf16[8,64]{1,0})' -> [('s32', ()), ('bf16', (8, 64))]."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    return sum(DTYPE_BYTES[dt] * float(np.prod(s, dtype=np.float64))
+               for dt, s in shapes)
+
+
+def _nelems(shapes) -> float:
+    return sum(float(np.prod(s, dtype=np.float64)) for dt, s in shapes)
+
+
+# --------------------------------------------------------------- op parse
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_shapes: list
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, list]   # op/param name -> shapes
+
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},\s/]+?))\s*"
+    r"([\w\-]+)\((.*)$")
+_PARAM_DECL = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[^,)]+))")
+
+
+def _split_operands(s: str) -> List[str]:
+    """Operand list from the text after '(' up to matching ')'."""
+    depth, cur, out = 0, "", []
+    for ch in s:
+        if ch == "(" or ch == "{" or ch == "[":
+            depth += 1
+        elif ch == ")" or ch == "}" or ch == "]":
+            if ch == ")" and depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur.strip())
+    return out
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith(("HloModule", "//", "#")):
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        head = _COMP_HEAD.match(line)
+        if head and line.rstrip().endswith("{"):
+            cur = Computation(head.group(1), [], {})
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            # parameter declarations carry types
+            for pm in _PARAM_DECL.finditer(head.group(2)):
+                cur.shapes[pm.group(1)] = _parse_shape(pm.group(2))
+            continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        operand_text = rest
+        operands = [o for o in _split_operands(operand_text)
+                    if o.startswith("%")]
+        operands = [o.split()[0].lstrip("%") for o in operands]
+        # attrs = everything after the closing paren of the operand list
+        depth = 0
+        idx = 0
+        for idx, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+        attrs = rest[idx + 1:]
+        op = Op(name, opcode, _parse_shape(type_str), operands, attrs, line)
+        cur.ops.append(op)
+        cur.shapes[name] = op.out_shapes
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+# ------------------------------------------------------------- group parse
+
+def _parse_replica_groups(attrs: str) -> Optional[List[List[int]]]:
+    m = re.search(r"replica_groups=\{(\{[\d,{}\s]*\})\}", attrs)
+    if m:
+        groups = re.findall(r"\{([\d,\s]*)\}", m.group(1))
+        return [[int(x) for x in g.split(",") if x.strip()] for g in groups]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\(([\d,]+)\))?",
+                  attrs)
+    if m:
+        a, b = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(5):
+            perm = [int(x) for x in m.group(5).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(a, b).tolist()
+    return None
+
+
+# --------------------------------------------------------------- analysis
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendental: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+    bytes_by_src: dict = dataclasses.field(default_factory=dict)
+
+    def add_bytes(self, op, b: float):
+        self.bytes += b
+        m = re.search(r'op_name="([^"]*)"', op.attrs)
+        key = (m.group(1)[-70:] if m else op.opcode)
+        self.bytes_by_src[key] = self.bytes_by_src.get(key, 0.0) + b
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendental += other.transcendental * mult
+        for k, v in other.bytes_by_src.items():
+            self.bytes_by_src[k] = self.bytes_by_src.get(k, 0.0) + v * mult
+        for c in other.collectives:
+            c2 = dict(c)
+            c2["count"] = c.get("count", 1) * mult
+            self.collectives.append(c2)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    lhs = comp.shapes.get(op.operands[0], [])
+    if not lhs:
+        return 0.0
+    _, lshape = lhs[0]
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    cdims = [int(x) for x in cdims.group(1).split(",")] if cdims and \
+        cdims.group(1) else []
+    k = float(np.prod([lshape[d] for d in cdims])) if cdims else 1.0
+    out_elems = _nelems(op.out_shapes)
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    rhs = comp.shapes.get(op.operands[1], [])
+    if not rhs:
+        return 0.0
+    _, rshape = rhs[0]
+    out_elems = _nelems(op.out_shapes)
+    # output features = last dim per usual dim_labels ...->b01f
+    out_feat = op.out_shapes[0][1][-1] if op.out_shapes[0][1] else 1
+    macs_per_out = float(np.prod(rshape)) / max(out_feat, 1)
+    return 2.0 * out_elems * macs_per_out
+
+
+def _pod_boundary(groups: Optional[List[List[int]]],
+                  devices_per_pod: int) -> bool:
+    if not groups:
+        return False
+    for g in groups[:8]:  # sampling the first groups is enough
+        pods = {d // devices_per_pod for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+def _wire_bytes(opcode: str, op: Op, comp: Computation, n: int) -> float:
+    """Ring-model bytes on the wire per participating device."""
+    out_b = _nbytes(op.out_shapes)
+    in_b = sum(_nbytes(comp.shapes.get(o, [])) for o in op.operands)
+    if n <= 1:
+        return 0.0
+    r = (n - 1) / n
+    if opcode.startswith("all-gather"):
+        return out_b * r
+    if opcode.startswith("all-reduce"):
+        return 2.0 * in_b * r
+    if opcode.startswith("reduce-scatter"):
+        return in_b * r
+    if opcode.startswith("all-to-all"):
+        return in_b * r
+    if opcode.startswith("collective-permute"):
+        return in_b
+    return in_b
+
+
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+
+def _sliced_param_bytes(comp: Computation) -> Dict[int, float]:
+    """Parameter index -> effective read bytes, for parameters whose only
+    consumers inside the computation are slice-like ops."""
+    # map param op-name -> index
+    param_idx = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)", op.line)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    uses: Dict[str, list] = {p: [] for p in param_idx}
+    for op in comp.ops:
+        for o in op.operands:
+            if o in uses:
+                uses[o].append(op)
+    out = {}
+    for pname, ops in uses.items():
+        if ops and all(u.opcode in _SLICE_OPS and u.operands
+                       and u.operands[0] == pname for u in ops):
+            out[param_idx[pname]] = sum(_nbytes(u.out_shapes) for u in ops)
+    return out
+
+
+def analyze(comps: Dict[str, Computation], devices_per_pod: int = 256,
+            _memo=None) -> Cost:
+    memo: Dict[str, Cost] = {} if _memo is None else _memo
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps[name]
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _ZERO_COST:
+                continue
+            called = re.findall(r"(?:calls|to_apply|body|condition|"
+                                r"true_computation|false_computation|"
+                                r"branch_computations)=\{?%?([\w.\-,%\s]+)\}?",
+                                op.attrs)
+            if oc == "while":
+                trip = 1.0
+                m = re.search(r'known_trip_count[^\d]*(\d+)', op.attrs)
+                if m:
+                    trip = float(m.group(1))
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if body:
+                    total.add(comp_cost(body.group(1)), trip)
+                if cond:
+                    total.add(comp_cost(cond.group(1)), trip)
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs)
+                called = m.group(1) if m and m.group(1) in comps else None
+                if called:
+                    sub = comp_cost(called)
+                    total.flops += sub.flops
+                    total.transcendental += sub.transcendental
+                    for c in sub.collectives:
+                        total.collectives.append(dict(c))
+                # bytes: fusion boundary only; parameters that are *only*
+                # sliced/gathered inside the fusion contribute their slice
+                # size, not the full buffer (crucial under loop trip counts)
+                in_b = 0.0
+                sliced = _sliced_param_bytes(comps[called]) if called else {}
+                for i, o in enumerate(op.operands):
+                    if i in sliced:
+                        in_b += sliced[i]
+                    else:
+                        in_b += _nbytes(comp.shapes.get(o, []))
+                total.add_bytes(op, in_b + _nbytes(op.out_shapes))
+                continue
+            if oc == "conditional":
+                for cn in re.findall(r"%([\w.\-]+)", op.attrs):
+                    if cn in comps:
+                        total.add(comp_cost(cn), 1.0)
+                continue
+            if any(oc.startswith(c) for c in COLLECTIVES):
+                if oc.endswith("-done"):
+                    continue
+                groups = _parse_replica_groups(op.attrs)
+                n = len(groups[0]) if groups else 1
+                wire = _wire_bytes(oc, op, comp, n)
+                src = re.search(r'op_name="([^"]*)"', op.attrs)
+                total.collectives.append({
+                    "op": oc, "group_size": n,
+                    "crosses_pod": _pod_boundary(groups, devices_per_pod),
+                    "wire_bytes": wire,
+                    "payload_bytes": _nbytes(op.out_shapes),
+                    "count": 1.0,
+                    "src": (src.group(1)[-90:] if src else ""),
+                })
+                total.add_bytes(op, _nbytes(op.out_shapes) + sum(
+                    _nbytes(comp.shapes.get(o, [])) for o in op.operands))
+                continue
+
+            # plain op: bytes always; flops by category.
+            # Slicing/gather ops read only what they produce -- counting the
+            # full operand would multiply whole stacked buffers by loop trip
+            # counts (the scan-over-layers pattern) and wildly overstate HBM
+            # traffic.  dynamic-update-slice writes only the update window.
+            out_b = _nbytes(op.out_shapes)
+            if oc == "dynamic-update-slice":
+                upd = comp.shapes.get(op.operands[1], []) if \
+                    len(op.operands) > 1 else []
+                total.add_bytes(op, 2 * _nbytes(upd))
+            elif oc in ("dynamic-slice", "slice", "gather", "take"):
+                total.add_bytes(op, 2 * out_b)
+            elif oc == "scatter":
+                upd = comp.shapes.get(op.operands[2], []) if \
+                    len(op.operands) > 2 else []
+                total.add_bytes(op, 2 * _nbytes(upd))
+            elif oc in ("broadcast", "iota", "constant"):
+                total.add_bytes(op, out_b)
+            else:
+                in_b = sum(_nbytes(comp.shapes.get(o, []))
+                           for o in op.operands)
+                total.add_bytes(op, in_b + out_b)
+
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp)
+            elif oc == "convolution":
+                total.flops += _conv_flops(op, comp)
+            elif oc in ("reduce", "reduce-window"):
+                in_e = sum(_nelems(comp.shapes.get(o, []))
+                           for o in op.operands[:1])
+                total.flops += in_e
+            elif oc in _ELEMWISE_1FLOP:
+                total.flops += _nelems(op.out_shapes)
+                if oc in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                          "power", "logistic", "erf", "cosine", "sine"):
+                    total.transcendental += _nelems(op.out_shapes)
+        memo[name] = total
+        return total
+
+    return comp_cost("__entry__")
+
+
+def analyze_text(text: str, devices_per_pod: int = 256) -> dict:
+    comps = parse_hlo(text)
+    cost = analyze(comps, devices_per_pod)
+    coll = defaultdict(lambda: {"wire_bytes": 0.0, "count": 0.0, "srcs": {}})
+    ici_bytes = dcn_bytes = 0.0
+    for c in cost.collectives:
+        key = (c["op"], c["group_size"], c["crosses_pod"])
+        b = c["wire_bytes"] * c["count"]
+        coll[key]["wire_bytes"] += b
+        coll[key]["count"] += c["count"]
+        src = c.get("src", "")
+        if src:
+            coll[key]["srcs"][src] = coll[key]["srcs"].get(src, 0.0) + b
+        if c["crosses_pod"]:
+            dcn_bytes += b
+        else:
+            ici_bytes += b
+    out_coll = []
+    for k, v in sorted(coll.items(), key=lambda kv: -kv[1]["wire_bytes"]):
+        top_srcs = sorted(v["srcs"].items(), key=lambda s: -s[1])[:3]
+        out_coll.append({"op": k[0], "group_size": k[1], "crosses_pod": k[2],
+                         "wire_bytes": v["wire_bytes"], "count": v["count"],
+                         "top_sources": [
+                             {"src": s, "bytes": b} for s, b in top_srcs]})
+    top_bytes = sorted(cost.bytes_by_src.items(), key=lambda s: -s[1])[:10]
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "top_bytes": [{"src": s, "bytes": b} for s, b in top_bytes],
+        "transcendental": cost.transcendental,
+        "ici_wire_bytes": ici_bytes,
+        "dcn_wire_bytes": dcn_bytes,
+        "collectives": out_coll,
+    }

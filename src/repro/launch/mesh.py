@@ -1,0 +1,33 @@
+"""Production mesh definition (the dry-run target topology).
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is the
+DCN-connected dimension (gradient traffic crossing it goes through the
+compressed hierarchical reduction -- dist/collectives.py).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small ones on forced host devices)."""
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=axis_types)
+
+
+def devices_per_pod(mesh) -> int:
+    if "pod" not in mesh.axis_names:
+        return mesh.size
+    return mesh.size // mesh.shape["pod"]

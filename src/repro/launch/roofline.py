@@ -1,0 +1,137 @@
+"""Three-term roofline analysis from the dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw   (ICI + DCN separately)
+
+HLO_FLOPs/bytes come from the static HLO analysis (launch/hlo_analysis),
+which -- unlike ``cost_analysis()`` -- multiplies while-loop bodies by their
+trip counts, so scanned-layer models are counted exactly.  All values are
+per-chip because the compiled SPMD module is the per-device program.
+
+Hardware constants (TPU v5e-like, per the assignment brief):
+  197 TFLOP/s bf16 | 819 GB/s HBM | ~50 GB/s/link ICI.
+  DCN (pod axis) modelled at 2.5 GB/s/chip (25 GB/s per 8-chip host NIC).
+
+MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params,
+D = tokens processed; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes
+remat/waste overheads.
+
+Usage:  python -m repro.launch.roofline --dir results/dryrun [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+DCN_BW = 2.5e9             # B/s / chip (cross-pod)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful-FLOPs per step (global)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze_cell(rec: dict) -> dict:
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    h = rec["hlo_analysis"]
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    t_comp = h["flops"] / PEAK_FLOPS
+    t_mem = h["bytes"] / HBM_BW
+    t_ici = h["ici_wire_bytes"] / ICI_BW
+    t_dcn = h["dcn_wire_bytes"] / DCN_BW
+    t_coll = t_ici + t_dcn
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape)
+    ratio = mf / (h["flops"] * chips) if h["flops"] else 0.0
+    # roofline fraction: useful-compute time / achievable step time
+    t_useful = (mf / chips) / PEAK_FLOPS
+    frac = t_useful / bound if bound > 0 else 0.0
+    return {
+        "cell": f'{rec["arch"]}/{rec["shape"]}/{rec["mesh"]}',
+        "chips": chips,
+        "compute_s": t_comp, "memory_s": t_mem,
+        "ici_s": t_ici, "dcn_s": t_dcn, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_per_chip": h["flops"],
+        "useful_ratio": ratio,
+        "roofline_frac": frac,
+    }
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    rows, skipped, failed = [], [], []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        if args.mesh and rec.get("mesh") != args.mesh:
+            continue
+        if rec.get("status") == "skipped":
+            skipped.append(f'{rec["arch"]}/{rec["shape"]}/{rec["mesh"]}')
+            continue
+        if rec.get("status") != "ok":
+            failed.append(f'{rec["arch"]}/{rec["shape"]}/{rec["mesh"]}')
+            continue
+        rows.append(analyze_cell(rec))
+
+    hdr = (f'| {"cell":42s} | chips | compute | memory | ici | dcn '
+           f'| dominant | MODEL/HLO | roofline |')
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: r["cell"]):
+        lines.append(
+            f'| {r["cell"]:42s} | {r["chips"]:5d} | {fmt_s(r["compute_s"]):>7s} '
+            f'| {fmt_s(r["memory_s"]):>6s} | {fmt_s(r["ici_s"]):>6s} '
+            f'| {fmt_s(r["dcn_s"]):>6s} | {r["dominant"]:10s} '
+            f'| {r["useful_ratio"]:9.3f} | {r["roofline_frac"]:8.3f} |')
+    text = "\n".join(lines)
+    if skipped:
+        text += "\n\nskipped: " + ", ".join(skipped)
+    if failed:
+        text += "\nFAILED: " + ", ".join(failed)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    return 0 if not failed else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

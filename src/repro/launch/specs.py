@@ -1,0 +1,170 @@
+"""ShapeDtypeStruct input specs per (arch x shape x mesh) -- no allocation.
+
+Shardings are attached directly to the ShapeDtypeStructs, so
+``jax.jit(step).lower(**specs)`` sees exactly the distribution the real
+deployment would use:
+
+* parameters / optimizer state: ``dist.sharding.param_pspec`` (FSDP over
+  ``data``, TP over ``model``, experts over ``model``);
+* batch: ``(pod, data)`` over the batch dim (leading pod dim when the
+  compressed gradient reduction is on);
+* KV caches: batch over ``data`` when batch >= mesh, otherwise the sequence
+  dim is sharded over ``model`` (long-context, batch=1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import param_pspec
+from repro.nn import transformer as T
+from repro.train import train_loop as TL
+
+
+def _has(mesh, ax):
+    return ax in mesh.axis_names
+
+
+def _batch_spec(mesh, lead_pod: bool):
+    axes = tuple(a for a in (("data",) if lead_pod else ("pod", "data"))
+                 if _has(mesh, a))
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """Input shardings must divide evenly (GSPMD pads internal constraints
+    but not argument layouts): drop axes that don't divide the dim."""
+    out = []
+    for d, entry in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        size = 1
+        for a in axes:
+            n = mesh.shape.get(a, 1)
+            if shape[d] % (size * n) == 0:
+                kept.append(a)
+                size *= n
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+def sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, _sanitize(spec, shape,
+                                                             mesh)))
+
+
+def tree_sds(tree_shapes, mesh, pspec_fn):
+    """eval_shape pytree -> SDS pytree with path-derived shardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_shapes)
+    out = []
+    for path, leaf in flat:
+        pathstr = "/".join(str(k) for k in path)
+        spec = pspec_fn(pathstr, leaf.shape)
+        out.append(sds(leaf.shape, leaf.dtype, mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_specs(cfg: ModelConfig, tcfg, mesh, n_pod: int = 1):
+    shapes = jax.eval_shape(
+        lambda: TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg,
+                                    n_pod=n_pod))
+
+    def pspec_fn(path, shape):
+        if path.startswith("ef/"):
+            base = param_pspec(path, shape[1:])
+            return P("pod", *base)
+        return param_pspec(path, shape)
+
+    return tree_sds(shapes, mesh, pspec_fn)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                lead_pod: bool = False) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    bspec = _batch_spec(mesh, lead_pod)
+    n_pod = mesh.shape.get("pod", 1) if lead_pod else 1
+    lead = ("pod",) if lead_pod else ()
+    bdims = (n_pod, B // n_pod) if lead_pod else (B,)
+
+    def tok(shape_):
+        return sds(shape_, jnp.int32, mesh, P(*lead, bspec, None))
+
+    out = {"tokens": tok(bdims + (S,)), "labels": tok(bdims + (S,))}
+    if cfg.cross_attn_every:
+        out["vision_embeds"] = sds(
+            bdims + (cfg.n_vision_tokens, cfg.d_vision), jnp.bfloat16,
+            mesh, P(*lead, bspec, None, None))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Stacked decode caches with deployment shardings."""
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: T.init_caches(cfg, B, S))
+    data_size = mesh.shape.get("data", 1)
+    batch_shardable = B >= data_size and B % data_size == 0
+
+    def pspec_fn(path, shp):
+        if len(shp) < 2:  # per-layer scalars (cache lengths)
+            return P(*([None] * len(shp)))
+        # stacked caches: dim0 = layers; find batch/seq dims by family
+        if "rwkv" in path or "ssm" in path:
+            # (L, B, ...) small states: batch over data if possible
+            if batch_shardable and len(shp) >= 2:
+                return P(None, "data", *([None] * (len(shp) - 2)))
+            return P(*([None] * len(shp)))
+        # kv/mla: (L, B, S_max, H, hd) or (L, B, S_max, r)
+        model_size = mesh.shape.get("model", 1)
+        if batch_shardable:
+            spec = [None, "data"] + [None] * (len(shp) - 2)
+            if len(shp) >= 5 and shp[3] % model_size == 0:
+                spec[3] = "model"       # heads over model when divisible
+            elif len(shp) >= 3 and shp[2] % model_size == 0:
+                spec[2] = "model"       # else sequence over model
+            return P(*spec)
+        # batch too small (long_500k): shard the sequence dim over model
+        spec = [None, None] + [None] * (len(shp) - 2)
+        if len(shp) >= 3:
+            spec[2] = "model"
+        return P(*spec)
+
+    return tree_sds(shapes, mesh, pspec_fn)
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B = shape.global_batch
+    data_size = mesh.shape.get("data", 1)
+    bspec = "data" if (B >= data_size and B % data_size == 0) else None
+    return sds((B, 1), jnp.int32, mesh, P(bspec, None))
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B, S = shape.global_batch, shape.seq_len
+    data_size = mesh.shape.get("data", 1)
+    if B >= data_size and B % data_size == 0:
+        bspec, sspec = _batch_spec(mesh, False), None
+    else:
+        bspec, sspec = None, "data" if _has(mesh, "data") else None
+    out = {"tokens": sds((B, S), jnp.int32, mesh, P(bspec, sspec))}
+    if cfg.cross_attn_every:
+        out["vision_embeds"] = sds((B, cfg.n_vision_tokens, cfg.d_vision),
+                                   jnp.bfloat16, mesh, P(bspec, None, None))
+    return out
+
+
+def params_specs(cfg: ModelConfig, mesh):
+    shapes = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    return tree_sds(shapes, mesh, param_pspec)

@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo (no flax/optax): layers, attention variants, MoE,
+SSM/RWKV blocks, generic decoder LM, and the paper's image classifiers."""

@@ -1,0 +1,282 @@
+"""Attention variants: GQA (optionally sliding-window), MLA, cross-attention.
+
+All functions support two phases:
+
+* ``forward`` (train / prefill): full-sequence causal attention; returns the
+  per-layer KV cache when ``return_cache`` so prefill can hand off to decode;
+* ``decode``: one new token against an existing cache (the shape families
+  ``decode_32k`` / ``long_500k`` lower this step).
+
+KV caches may be int8-quantized (per-head scales) -- a framework feature in
+the same spirit as the paper (approximate storage under a known
+distribution); controlled by ``kv_int8``.
+
+Shapes: x (B, S, D); q/k/v (B, S, H, hd); caches (B, S_max, H_kv, hd).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.nn.layers import MacCtx, EXACT, apply_rope, dense, normal_init, rms_norm
+from repro.quant.fixed_point import decode_int8, encode_int8
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array              # (B, S_max, Hkv, hd) bf16 or int8
+    v: jax.Array
+    k_scale: Optional[jax.Array] = None  # (B, S_max, Hkv, 1) when int8
+    v_scale: Optional[jax.Array] = None
+    length: jax.Array = jnp.zeros((), jnp.int32)
+
+
+def init_gqa(key, d_model, n_heads, n_kv, head_dim, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": normal_init(kq, (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": normal_init(kk, (d_model, n_kv * head_dim), dtype=dtype),
+        "wv": normal_init(kv, (d_model, n_kv * head_dim), dtype=dtype),
+        "w_o": normal_init(ko, (n_heads * head_dim, d_model), dtype=dtype),
+    }
+
+
+def _attend(q, k, v, *, causal: bool, window: int | None,
+            q_offset: jax.Array | int = 0, kv_len: jax.Array | None = None):
+    """Grouped scaled-dot-product attention.
+
+    q: (B, S, Hq, hd); k/v: (B, T, Hkv, hd); Hq = G * Hkv.
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: valid prefix length of k/v (decode with preallocated cache).
+    """
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= 1.0 / np.sqrt(hd)
+
+    qpos = jnp.arange(S)[:, None] + q_offset          # (S, 1)
+    kpos = jnp.arange(T)[None, :]                     # (1, T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", p, v)
+    return out.reshape(B, S, Hq, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def _maybe_quant_cache(k, v, kv_int8: bool) -> KVCache:
+    if not kv_int8:
+        return KVCache(k, v, None, None, jnp.int32(k.shape[1]))
+    kc, ks = encode_int8(k, axis=-1)
+    vc, vs = encode_int8(v, axis=-1)
+    return KVCache(kc, vc, ks, vs, jnp.int32(k.shape[1]))
+
+
+def _dequant_cache(cache: KVCache, dtype):
+    if cache.k_scale is None:
+        return cache.k.astype(dtype), cache.v.astype(dtype)
+    return (decode_int8(cache.k, cache.k_scale).astype(dtype),
+            decode_int8(cache.v, cache.v_scale).astype(dtype))
+
+
+def gqa_forward(params, x, cos, sin, *, n_heads, n_kv, head_dim,
+                window: int | None = None, mac: MacCtx = EXACT,
+                kv_int8: bool = False, return_cache: bool = False):
+    B, S, D = x.shape
+    q = dense(x, params["wq"], mac).reshape(B, S, n_heads, head_dim)
+    k = dense(x, params["wk"], mac).reshape(B, S, n_kv, head_dim)
+    v = dense(x, params["wv"], mac).reshape(B, S, n_kv, head_dim)
+    q = apply_rope(q, cos[:S], sin[:S])
+    k = apply_rope(k, cos[:S], sin[:S])
+    q = shard(q, "batch", None, "tp", None)
+    k = shard(k, "batch", None, "tp", None)
+    out = _attend(q, k, v, causal=True, window=window)
+    y = dense(out.reshape(B, S, n_heads * head_dim), params["w_o"], mac)
+    if return_cache:
+        return y, _maybe_quant_cache(k, v, kv_int8)
+    return y
+
+
+def gqa_decode(params, x, cache: KVCache, cos, sin, *, n_heads, n_kv,
+               head_dim, window: int | None = None, mac: MacCtx = EXACT):
+    """One-token decode: x (B, 1, D); cache preallocated to S_max."""
+    B, S, D = x.shape
+    assert S == 1
+    pos = cache.length
+    q = dense(x, params["wq"], mac).reshape(B, 1, n_heads, head_dim)
+    k = dense(x, params["wk"], mac).reshape(B, 1, n_kv, head_dim)
+    v = dense(x, params["wv"], mac).reshape(B, 1, n_kv, head_dim)
+    cos_t = jax.lax.dynamic_slice_in_dim(cos, pos, 1, axis=0)
+    sin_t = jax.lax.dynamic_slice_in_dim(sin, pos, 1, axis=0)
+    q = apply_rope(q, cos_t, sin_t)
+    k = apply_rope(k, cos_t, sin_t)
+
+    if cache.k_scale is not None:
+        kc, ks = encode_int8(k, axis=-1)
+        vc, vs = encode_int8(v, axis=-1)
+        new_cache = KVCache(
+            jax.lax.dynamic_update_slice_in_dim(cache.k, kc, pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cache.v, vc, pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, pos, axis=1),
+            pos + 1)
+    else:
+        new_cache = KVCache(
+            jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), pos, axis=1),
+            jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), pos, axis=1),
+            None, None, pos + 1)
+    kk, vv = _dequant_cache(new_cache, x.dtype)
+    out = _attend(q, kk, vv, causal=False, window=window,
+                  q_offset=pos, kv_len=pos + 1)
+    y = dense(out.reshape(B, 1, n_heads * head_dim), params["w_o"], mac)
+    return y, new_cache
+
+
+def init_kv_cache(batch, s_max, n_kv, head_dim, dtype=jnp.bfloat16,
+                  kv_int8: bool = False) -> KVCache:
+    if kv_int8:
+        return KVCache(jnp.zeros((batch, s_max, n_kv, head_dim), jnp.int8),
+                       jnp.zeros((batch, s_max, n_kv, head_dim), jnp.int8),
+                       jnp.ones((batch, s_max, n_kv, 1), jnp.float32),
+                       jnp.ones((batch, s_max, n_kv, 1), jnp.float32),
+                       jnp.zeros((), jnp.int32))
+    return KVCache(jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+                   jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+                   None, None, jnp.zeros((), jnp.int32))
+
+
+# ----------------------------------------------------------------- MLA
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # (B, S_max, r_kv) compressed latent
+    k_rope: jax.Array   # (B, S_max, rope_dim) shared rotary key
+    length: jax.Array = jnp.zeros((), jnp.int32)
+
+
+def init_mla(key, d_model, n_heads, *, q_rank=768, kv_rank=256,
+             nope_dim=64, rope_dim=32, v_dim=64, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    qk_dim = nope_dim + rope_dim
+    return {
+        "w_dq": normal_init(ks[0], (d_model, q_rank), dtype=dtype),
+        "q_norm": jnp.ones((q_rank,), dtype),
+        "w_uq": normal_init(ks[1], (q_rank, n_heads * qk_dim), dtype=dtype),
+        "w_dkv": normal_init(ks[2], (d_model, kv_rank), dtype=dtype),
+        "kv_norm": jnp.ones((kv_rank,), dtype),
+        "w_ukv": normal_init(
+            ks[3], (kv_rank, n_heads * (nope_dim + v_dim)), dtype=dtype),
+        "w_kr": normal_init(ks[4], (d_model, rope_dim), dtype=dtype),
+        "w_o": normal_init(ks[5], (n_heads * v_dim, d_model), dtype=dtype),
+    }
+
+
+def _mla_qkv(params, x, c_kv, k_rope_all, cos, sin, *, n_heads, nope_dim,
+             rope_dim, v_dim, mac, q_positions):
+    """Build q (current x) and k/v (from latents covering the whole prefix)."""
+    B, S, _ = x.shape
+    T = c_kv.shape[1]
+    qk_dim = nope_dim + rope_dim
+    cq = rms_norm(dense(x, params["w_dq"], mac), params["q_norm"])
+    q = dense(cq, params["w_uq"], mac).reshape(B, S, n_heads, qk_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    q_rope = apply_rope(q_rope, cos[q_positions], sin[q_positions])
+
+    kv = dense(c_kv, params["w_ukv"], mac).reshape(
+        B, T, n_heads, nope_dim + v_dim)
+    k_nope, v = kv[..., :nope_dim], kv[..., nope_dim:]
+    k_rope = k_rope_all[:, :, None, :]  # single shared rope head (B,T,1,r)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, n_heads, rope_dim))], axis=-1)
+    return q_full, k_full, v
+
+
+def mla_forward(params, x, cos, sin, *, n_heads, nope_dim=64, rope_dim=32,
+                v_dim=64, mac: MacCtx = EXACT, return_cache: bool = False):
+    B, S, _ = x.shape
+    c_kv = rms_norm(dense(x, params["w_dkv"], mac), params["kv_norm"])
+    k_rope = dense(x, params["w_kr"], mac)[:, :, None, :]   # (B,S,1,r)
+    k_rope = apply_rope(k_rope, cos[:S], sin[:S])[:, :, 0]
+    q, k, v = _mla_qkv(params, x, c_kv, k_rope, cos, sin, n_heads=n_heads,
+                       nope_dim=nope_dim, rope_dim=rope_dim, v_dim=v_dim,
+                       mac=mac, q_positions=jnp.arange(S))
+    out = _attend(q, k, v, causal=True, window=None)
+    y = dense(out.reshape(B, S, n_heads * v_dim), params["w_o"], mac)
+    if return_cache:
+        return y, MLACache(c_kv, k_rope, jnp.int32(S))
+    return y
+
+
+def mla_decode(params, x, cache: MLACache, cos, sin, *, n_heads, nope_dim=64,
+               rope_dim=32, v_dim=64, mac: MacCtx = EXACT):
+    B, S, _ = x.shape
+    assert S == 1
+    pos = cache.length
+    c_new = rms_norm(dense(x, params["w_dkv"], mac), params["kv_norm"])
+    kr_new = dense(x, params["w_kr"], mac)[:, :, None, :]
+    cos_t = jax.lax.dynamic_slice_in_dim(cos, pos, 1, axis=0)
+    sin_t = jax.lax.dynamic_slice_in_dim(sin, pos, 1, axis=0)
+    kr_new = apply_rope(kr_new, cos_t, sin_t)[:, :, 0]
+    cache = MLACache(
+        jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1),
+        jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1),
+        pos + 1)
+    q, k, v = _mla_qkv(params, x, cache.c_kv.astype(x.dtype),
+                       cache.k_rope.astype(x.dtype), cos, sin,
+                       n_heads=n_heads, nope_dim=nope_dim, rope_dim=rope_dim,
+                       v_dim=v_dim, mac=mac, q_positions=pos[None])
+    out = _attend(q, k, v, causal=False, window=None,
+                  q_offset=pos, kv_len=pos + 1)
+    y = dense(out.reshape(B, 1, n_heads * v_dim), params["w_o"], mac)
+    return y, cache
+
+
+def init_mla_cache(batch, s_max, kv_rank=256, rope_dim=32, dtype=jnp.bfloat16):
+    return MLACache(jnp.zeros((batch, s_max, kv_rank), dtype),
+                    jnp.zeros((batch, s_max, rope_dim), dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+# ----------------------------------------------------------- cross-attention
+
+def init_cross_attn(key, d_model, n_heads, n_kv, head_dim, d_vision,
+                    dtype=jnp.float32):
+    kq, kk, kv, ko, kg = jax.random.split(key, 5)
+    return {
+        "wq": normal_init(kq, (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": normal_init(kk, (d_vision, n_kv * head_dim), dtype=dtype),
+        "wv": normal_init(kv, (d_vision, n_kv * head_dim), dtype=dtype),
+        "w_o": normal_init(ko, (n_heads * head_dim, d_model), dtype=dtype),
+        "gate": jnp.zeros((1,), dtype),
+    }
+
+
+def cross_attn(params, x, vision_kv, *, n_heads, n_kv, head_dim,
+               mac: MacCtx = EXACT):
+    """x (B,S,D) attends over precomputed vision embeddings (B,T,Dv)."""
+    B, S, _ = x.shape
+    T = vision_kv.shape[1]
+    q = dense(x, params["wq"], mac).reshape(B, S, n_heads, head_dim)
+    k = dense(vision_kv, params["wk"], mac).reshape(B, T, n_kv, head_dim)
+    v = dense(vision_kv, params["wv"], mac).reshape(B, T, n_kv, head_dim)
+    out = _attend(q, k, v, causal=False, window=None)
+    y = dense(out.reshape(B, S, n_heads * head_dim), params["w_o"], mac)
+    return jnp.tanh(params["gate"]).astype(x.dtype) * y

@@ -1,0 +1,347 @@
+"""Blocked (flash-style) attention in pure JAX with a custom blockwise VJP.
+
+Why this exists: full-sequence logits for the assigned shapes do not fit any
+memory (llama3-405b train_4k would materialize ~137 GB of logits per device;
+prefill_32k is 64x worse).  The classic online-softmax block algorithm keeps
+the working set at (block_q x block_k) per (batch, kv-head) and the custom
+VJP recomputes blocks in the backward pass instead of saving them.
+
+Structure is fully *static* (scan over all kv blocks with a block skip mask)
+so the dry-run HLO analyzer can attribute exact FLOPs; the causal waste of
+the baseline scheme (~2x on strictly-masked blocks) is one of the §Perf
+hillclimb targets (see ``balanced`` mode below).
+
+Supports: causal masking with query offset, sliding windows, valid-length
+masking (decode against preallocated caches), GQA grouping (q carries an
+extra group dim), distinct k/v head dims (MLA).
+
+Shapes: q (B, H_kv, G, S, dk), k (B, H_kv, T, dk), v (B, H_kv, T, dv).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, *, causal, window, kv_len):
+    """(Bq, Bk) boolean mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    return m
+
+
+def _fwd_one_qblock(q_blk, k, v, q_pos, *, scale, causal, window, kv_len,
+                    block_k):
+    """Online-softmax pass of one query block over all kv blocks.
+
+    q_blk: (G, Bq, dk); k: (T, dk); v: (T, dv).  Returns (out (G,Bq,dv),
+    lse (G,Bq)).
+    """
+    G, Bq, dk = q_blk.shape
+    T, dv = v.shape[0], v.shape[-1]
+    nkb = T // block_k
+
+    def step(carry, kb):
+        m_i, l_i, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, kb * block_k, block_k, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, kb * block_k, block_k, axis=0)
+        k_pos = kb * block_k + jnp.arange(block_k)
+        s = jnp.einsum("gqd,kd->gqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                           kv_len=kv_len)
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = corr * l_i + jnp.sum(p, axis=-1)
+        acc_new = corr[..., None] * acc + jnp.einsum(
+            "gqk,kv->gqv", p.astype(v.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        # block-level skip: if no position in this kv block is visible,
+        # keep the old stats (the compute still happens -- static schedule).
+        any_vis = jnp.any(mask)
+        keep = lambda new, old: jnp.where(any_vis, new, old)
+        return (keep(m_new, m_i), keep(l_new, l_i), keep(acc_new, acc)), None
+
+    m0 = jnp.full((G, Bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G, Bq), jnp.float32)
+    a0 = jnp.zeros((G, Bq, dv), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nkb))
+    l_safe = jnp.maximum(l_f, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m_f + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd_impl(q, k, v, *, scale, causal, window, kv_len, block_q,
+                    block_k):
+    B, Hkv, G, S, dk = q.shape
+    T = k.shape[2]
+    nqb = S // block_q
+
+    def per_bh(q_bh, k_bh, v_bh):
+        def one_block(qb):
+            q_blk = jax.lax.dynamic_slice_in_dim(
+                q_bh, qb * block_q, block_q, axis=1)  # (G, Bq, dk)
+            q_pos = qb * block_q + jnp.arange(block_q)
+            return _fwd_one_qblock(q_blk, k_bh, v_bh, q_pos, scale=scale,
+                                   causal=causal, window=window,
+                                   kv_len=kv_len, block_k=block_k)
+        outs, lses = jax.lax.map(one_block, jnp.arange(nqb))
+        # outs: (nqb, G, Bq, dv) -> (G, S, dv)
+        out = jnp.moveaxis(outs, 0, 1).reshape(G, S, -1)
+        lse = jnp.moveaxis(lses, 0, 1).reshape(G, S)
+        return out, lse
+
+    out, lse = jax.vmap(jax.vmap(per_bh))(q, k, v)
+    return out.reshape(B, Hkv, G, S, -1), lse.reshape(B, Hkv, G, S)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def flash_attention(q, k, v, window, scale, causal, kv_len, block_q, block_k):
+    """``window`` is a traced int32 scalar array (use >= T for "no window");
+    it rides in a differentiable slot (zero cotangent) so per-layer windows
+    can be scanned over."""
+    out, _ = _flash_fwd_impl(q, k, v, scale=scale, causal=causal,
+                             window=window, kv_len=kv_len, block_q=block_q,
+                             block_k=block_k)
+    return out
+
+
+def _flash_fwd(q, k, v, window, scale, causal, kv_len, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, scale=scale, causal=causal,
+                               window=window, kv_len=kv_len, block_q=block_q,
+                               block_k=block_k)
+    return out, (q, k, v, window, out, lse)
+
+
+def _flash_bwd(scale, causal, kv_len, block_q, block_k, res, g):
+    q, k, v, window, out, lse = res
+    B, Hkv, G, S, dk = q.shape
+    T, dv = k.shape[2], v.shape[-1]
+    nqb, nkb = S // block_q, T // block_k
+    g = g.astype(jnp.float32)
+    delta = jnp.sum(g * out.astype(jnp.float32), axis=-1)  # (B,Hkv,G,S)
+
+    def per_bh(q_bh, k_bh, v_bh, g_bh, lse_bh, delta_bh):
+        # ---- pass 1: dq per query block (scan kv blocks) ----
+        def dq_block(qb):
+            q_blk = jax.lax.dynamic_slice_in_dim(q_bh, qb * block_q, block_q, 1)
+            g_blk = jax.lax.dynamic_slice_in_dim(g_bh, qb * block_q, block_q, 1)
+            lse_blk = jax.lax.dynamic_slice_in_dim(lse_bh, qb * block_q,
+                                                   block_q, 1)
+            d_blk = jax.lax.dynamic_slice_in_dim(delta_bh, qb * block_q,
+                                                 block_q, 1)
+            q_pos = qb * block_q + jnp.arange(block_q)
+
+            def step(dq, kb):
+                k_blk = jax.lax.dynamic_slice_in_dim(k_bh, kb * block_k,
+                                                     block_k, 0)
+                v_blk = jax.lax.dynamic_slice_in_dim(v_bh, kb * block_k,
+                                                     block_k, 0)
+                k_pos = kb * block_k + jnp.arange(block_k)
+                s = jnp.einsum("gqd,kd->gqk", q_blk, k_blk,
+                               preferred_element_type=jnp.float32) * scale
+                mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                                   kv_len=kv_len)
+                s = jnp.where(mask[None], s, NEG_INF)
+                p = jnp.exp(s - lse_blk[..., None])
+                dp = jnp.einsum("gqv,kv->gqk", g_blk,
+                                v_blk.astype(jnp.float32))
+                ds = p * (dp - d_blk[..., None]) * scale
+                dq_new = dq + jnp.einsum("gqk,kd->gqd", ds,
+                                         k_blk.astype(jnp.float32))
+                return jnp.where(jnp.any(mask), dq_new, dq), None
+
+            dq0 = jnp.zeros((G, block_q, dk), jnp.float32)
+            dq, _ = jax.lax.scan(step, dq0, jnp.arange(nkb))
+            return dq
+
+        dqs = jax.lax.map(dq_block, jnp.arange(nqb))  # (nqb, G, Bq, dk)
+        dq = jnp.moveaxis(dqs, 0, 1).reshape(G, S, dk)
+
+        # ---- pass 2: dk/dv per kv block (scan query blocks) ----
+        def dkv_block(kb):
+            k_blk = jax.lax.dynamic_slice_in_dim(k_bh, kb * block_k, block_k, 0)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_bh, kb * block_k, block_k, 0)
+            k_pos = kb * block_k + jnp.arange(block_k)
+
+            def step(carry, qb):
+                dk_acc, dv_acc = carry
+                q_blk = jax.lax.dynamic_slice_in_dim(q_bh, qb * block_q,
+                                                     block_q, 1)
+                g_blk = jax.lax.dynamic_slice_in_dim(g_bh, qb * block_q,
+                                                     block_q, 1)
+                lse_blk = jax.lax.dynamic_slice_in_dim(lse_bh, qb * block_q,
+                                                       block_q, 1)
+                d_blk = jax.lax.dynamic_slice_in_dim(delta_bh, qb * block_q,
+                                                     block_q, 1)
+                q_pos = qb * block_q + jnp.arange(block_q)
+                s = jnp.einsum("gqd,kd->gqk", q_blk, k_blk,
+                               preferred_element_type=jnp.float32) * scale
+                mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                                   kv_len=kv_len)
+                s = jnp.where(mask[None], s, NEG_INF)
+                p = jnp.exp(s - lse_blk[..., None])
+                dv_new = dv_acc + jnp.einsum("gqk,gqv->kv", p, g_blk)
+                dp = jnp.einsum("gqv,kv->gqk", g_blk,
+                                v_blk.astype(jnp.float32))
+                ds = p * (dp - d_blk[..., None]) * scale
+                dk_new = dk_acc + jnp.einsum("gqk,gqd->kd", ds,
+                                             q_blk.astype(jnp.float32))
+                vis = jnp.any(mask)
+                return (jnp.where(vis, dk_new, dk_acc),
+                        jnp.where(vis, dv_new, dv_acc)), None
+
+            z = (jnp.zeros((block_k, dk), jnp.float32),
+                 jnp.zeros((block_k, dv), jnp.float32))
+            (dk_b, dv_b), _ = jax.lax.scan(step, z, jnp.arange(nqb))
+            return dk_b, dv_b
+
+        dks, dvs = jax.lax.map(dkv_block, jnp.arange(nkb))
+        return dq, dks.reshape(T, dk), dvs.reshape(T, dv)
+
+    dq, dk_, dv_ = jax.vmap(jax.vmap(per_bh))(
+        q.astype(jnp.float32).reshape(B, Hkv, G, S, dk),
+        k.astype(jnp.float32), v.astype(jnp.float32),
+        g.reshape(B, Hkv, G, S, dv), lse, delta)
+    d_window = np.zeros(np.shape(window), dtype=jax.dtypes.float0)
+    return (dq.reshape(q.shape).astype(q.dtype), dk_.astype(k.dtype),
+            dv_.astype(v.dtype), d_window)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attend_blocked_windowed(q, k, v, *, window: int, block_q=512,
+                            block_k=512):
+    """Sliding-window attention with a *static* window: each query block
+    attends a static-length KV slice (window + block_q, front-padded), so
+    the kv loop runs ceil((window+Bq)/Bk) steps instead of all T/Bk blocks
+    -- the §Perf D2 fix for SWA layers (no masked-out block ever computed).
+
+    q (B,S,Hq,dk), k/v (B,S,Hkv,d*); causal + window semantics identical to
+    ``attend_blocked(causal=True, window=window)`` (asserted by tests).
+    """
+    B, S, Hq, dk = q.shape
+    Hkv, dv = k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    bq = min(block_q, max(S, 16))
+    Sp = -(-S // bq) * bq
+    # KV window slice length per q block, padded to a block_k multiple
+    win_len = window - 1 + bq
+    bk = min(block_k, win_len)
+    Lw = -(-win_len // bk) * bk
+    pad_front = Lw - bq   # so slice [s0 + bq - Lw .. s0 + bq) is in range
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (pad_front, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad_front, Sp - S), (0, 0), (0, 0)))
+    qh = jnp.moveaxis(qp.reshape(B, Sp, Hkv, G, dk), 1, 3)   # (B,Hkv,G,S,dk)
+    kh = jnp.moveaxis(kp, 1, 2)                               # (B,Hkv,T,dk)
+    vh = jnp.moveaxis(vp, 1, 2)
+    scale = 1.0 / np.sqrt(dk)
+    nqb = Sp // bq
+
+    def per_bh(q_bh, k_bh, v_bh):
+        def one_block(qb):
+            q_blk = jax.lax.dynamic_slice_in_dim(q_bh, qb * bq, bq, axis=1)
+            q_pos = qb * bq + jnp.arange(bq)
+            # absolute kv positions covered: [qb*bq + bq - Lw, qb*bq + bq)
+            start = qb * bq  # in the padded array == abs pos - pad_front
+            k_win = jax.lax.dynamic_slice_in_dim(k_bh, start, Lw, axis=0)
+            v_win = jax.lax.dynamic_slice_in_dim(v_bh, start, Lw, axis=0)
+            k_pos = start - pad_front + jnp.arange(Lw)
+            # local flash over the window slice (masks handle edges/padding)
+            out, _ = _fwd_one_qblock_pos(
+                q_blk, k_win, v_win, q_pos, k_pos, scale=scale,
+                window=jnp.int32(window), block_k=bk)
+            return out
+        outs = jax.lax.map(one_block, jnp.arange(nqb))
+        return jnp.moveaxis(outs, 0, 1).reshape(G, Sp, dv)
+
+    out = jax.vmap(jax.vmap(per_bh))(qh, kh, vh)   # (B,Hkv,G,Sp,dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sp, Hq, dv)[:, :S]
+    return out.astype(q.dtype)
+
+
+def _fwd_one_qblock_pos(q_blk, k, v, q_pos, k_pos_all, *, scale, window,
+                        block_k):
+    """Like _fwd_one_qblock but with explicit absolute kv positions (the
+    window path slices a shifted kv view); causal + window + validity
+    (k_pos >= 0) masks."""
+    G, Bq, dk = q_blk.shape
+    T, dv = v.shape[0], v.shape[-1]
+    nkb = T // block_k
+
+    def step(carry, kb):
+        m_i, l_i, acc = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k, kb * block_k, block_k, 0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, kb * block_k, block_k, 0)
+        k_pos = jax.lax.dynamic_slice_in_dim(k_pos_all, kb * block_k,
+                                             block_k, 0)
+        s = jnp.einsum("gqd,kd->gqk", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = ((k_pos[None, :] <= q_pos[:, None])
+                & (k_pos[None, :] > q_pos[:, None] - window)
+                & (k_pos[None, :] >= 0))
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = corr * l_i + jnp.sum(p, axis=-1)
+        acc_new = corr[..., None] * acc + jnp.einsum(
+            "gqk,kv->gqv", p.astype(v.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((G, Bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((G, Bq), jnp.float32)
+    a0 = jnp.zeros((G, Bq, dv), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nkb))
+    l_safe = jnp.maximum(l_f, 1e-30)
+    return acc / l_safe[..., None], m_f + jnp.log(l_safe)
+
+
+def attend_blocked(q, k, v, *, causal=True, window=None, kv_len=None,
+                   block_q=512, block_k=512):
+    """Grouped blocked attention; q (B,S,Hq,dk), k/v (B,T,Hkv,d*).
+
+    Pads S/T up to block multiples, runs flash, unpads.  Output
+    (B, S, Hq, dv).
+    """
+    B, S, Hq, dk = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    dv = v.shape[-1]
+    bq, bk = min(block_q, max(S, 16)), min(block_k, max(T, 16))
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    # layout (B, Hkv, G, S, d)
+    qh = jnp.moveaxis(qp.reshape(B, Sp, Hkv, G, dk), 1, 3)
+    kh = jnp.moveaxis(kp, 1, 2)
+    vh = jnp.moveaxis(vp, 1, 2)
+    # kv_len must stay a static python int (custom_vjp nondiff argument);
+    # window rides as a traced int32 scalar (>= T disables it).
+    eff_kv_len = int(T) if (kv_len is None and Tp != T) else kv_len
+    assert eff_kv_len is None or isinstance(eff_kv_len, int)
+    win = jnp.asarray(Tp + 1 if window is None else window, jnp.int32)
+    out = flash_attention(qh, kh, vh, win, 1.0 / np.sqrt(dk), causal,
+                          eff_kv_len, bq, bk)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sp, Hq, dv)[:, :S]
+    return out.astype(q.dtype)

@@ -1,0 +1,168 @@
+"""Basic layers.  Conventions:
+
+* params are nested dicts of jnp arrays; ``init_*`` builds them, ``apply``
+  style functions are pure;
+* every matmul goes through ``dense()`` which honours a ``MacCtx`` -- the
+  hook where the paper's approximate MAC is injected (mode "exact_bf16" for
+  performance runs, "int8" for the quantized reference, "lut" for the
+  evolved approximate multiplier, "lut_kernel" to use the Pallas kernel);
+* compute dtype is bf16 by default with f32 accumulation/normalization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.approx_matmul import ApproxMul, approx_dense
+from repro.quant.fixed_point import QuantParams
+
+
+@dataclasses.dataclass(frozen=True)
+class MacCtx:
+    """How to execute MAC-dominated ops (the paper's selectable feature)."""
+
+    mode: str = "exact_bf16"          # exact_bf16 | int8 | lut | lut_onehot | lut_kernel
+    mul: Optional[ApproxMul] = None   # LUT for lut* modes
+    x_qp: QuantParams = QuantParams(8, 5, True)
+    w_qp: QuantParams = QuantParams(8, 7, True)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+EXACT = MacCtx()
+
+
+def dense(x: jax.Array, w: jax.Array, mac: MacCtx = EXACT) -> jax.Array:
+    """x @ w with the configured MAC implementation (leading dims broadcast)."""
+    if mac.mode == "exact_bf16":
+        return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if mac.mode == "int8":
+        # quantize-dequantize emulation of exact int8 MACs (Ristretto ref).
+        from repro.quant.fixed_point import dequantize, quantize
+        xq = quantize(x, mac.x_qp)
+        wq = quantize(w, mac.w_qp)
+        y = jnp.einsum("...k,kn->...n", xq.astype(jnp.float32),
+                       wq.astype(jnp.float32))
+        return (y * (mac.x_qp.scale * mac.w_qp.scale)).astype(x.dtype)
+    if mac.mode in ("lut", "lut_onehot", "lut_kernel"):
+        assert mac.mul is not None, "lut mode requires a multiplier LUT"
+        inner = {"lut": "lut_gather", "lut_onehot": "lut_onehot",
+                 "lut_kernel": "lut_gather"}[mac.mode]
+        if mac.mode == "lut_kernel":
+            from repro.kernels.lut_matmul.ops import lut_matmul_f32
+            return lut_matmul_f32(x, w, mac.mul, mac.x_qp, mac.w_qp).astype(x.dtype)
+        return approx_dense(x, w, mac.mul, mac.x_qp, mac.w_qp,
+                            mode=inner).astype(x.dtype)
+    raise ValueError(f"unknown mac mode {mac.mode}")
+
+
+# ------------------------------------------------------------------- inits
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.uniform(key, shape, dtype, -s, s)
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * std
+
+
+# ------------------------------------------------------------------- norms
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, max_seq: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_seq)
+    ang = np.outer(t, inv).astype(np.float32)  # (S, hd/2)
+    return np.cos(ang), np.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (S, hd/2) (or (1, hd/2) at decode)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :].astype(x.dtype)
+    s = sin[..., :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ------------------------------------------------------------------- ffn
+
+def init_swiglu(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": normal_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": normal_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_out": normal_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def swiglu(params, x, mac: MacCtx = EXACT):
+    from repro.dist.sharding import shard
+    g = dense(x, params["w_in"], mac)
+    u = dense(x, params["w_up"], mac)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", None, "tp")
+    return dense(h, params["w_out"], mac)
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": normal_init(k1, (d_model, d_ff), dtype=dtype),
+            "w_out": normal_init(k2, (d_ff, d_model), dtype=dtype)}
+
+
+def mlp_gelu(params, x, mac: MacCtx = EXACT):
+    h = jax.nn.gelu(dense(x, params["w_in"], mac).astype(jnp.float32))
+    return dense(h.astype(x.dtype), params["w_out"], mac)
+
+
+# ------------------------------------------------------------------- conv
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+           padding: str = "VALID", mac: MacCtx = EXACT) -> jax.Array:
+    """NHWC conv via im2col + dense so the approximate MAC applies.
+
+    x: (B, H, W, Cin); w: (kh, kw, Cin, Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))  # (B, Ho, Wo, kh*kw*cin)
+    # conv_general_dilated_patches emits channel-major (cin, kh, kw) feature
+    # order; reorder the weight matrix to match.
+    wm = jnp.transpose(w, (2, 0, 1, 3)).reshape(kh * kw * cin, cout)
+    return dense(patches, wm, mac)
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def avg_pool(x, window=2, stride=2):
+    s = jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, window, window, 1),
+                              (1, stride, stride, 1), "VALID")
+    return s / (window * window)

@@ -1,0 +1,44 @@
+"""Paper Sec. V: LeNet-5 (modified for 32x32 SVHN-class RGB digits).
+
+Three conv layers + two pools + one fully connected layer of 120 neurons
+outputting 10 classes, per the paper's description.  Convs are im2col-based
+so the approximate-MAC hook applies to all ~278k multiplications/inference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import EXACT, MacCtx, avg_pool, conv2d, dense, uniform_init
+
+
+def init_lenet5(key, in_ch=3, n_out=10, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    return {
+        "c1": uniform_init(ks[0], (5, 5, in_ch, 6), dtype=dtype),
+        "c2": uniform_init(ks[1], (5, 5, 6, 16), dtype=dtype),
+        "c3": uniform_init(ks[2], (5, 5, 16, 120), dtype=dtype),
+        "fc1": uniform_init(ks[3], (120, 84), dtype=dtype),
+        "fc2": uniform_init(ks[4], (84, n_out), dtype=dtype),
+    }
+
+
+def lenet5_forward(params, x, mac: MacCtx = EXACT):
+    """x: (B, 32, 32, C) in [0, 1] -> logits (B, 10)."""
+    h = jax.nn.relu(conv2d(x, params["c1"], mac=mac))       # (B,28,28,6)
+    h = avg_pool(h)                                         # (B,14,14,6)
+    h = jax.nn.relu(conv2d(h, params["c2"], mac=mac))       # (B,10,10,16)
+    h = avg_pool(h)                                         # (B,5,5,16)
+    h = jax.nn.relu(conv2d(h, params["c3"], mac=mac))       # (B,1,1,120)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(dense(h, params["fc1"], mac))
+    return dense(h, params["fc2"], mac)
+
+
+def accuracy(params, x, y, mac: MacCtx = EXACT, batch: int = 256):
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = lenet5_forward(params, x[i:i + batch], mac)
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return hits / x.shape[0]

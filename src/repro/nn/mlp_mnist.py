@@ -1,0 +1,37 @@
+"""Paper Sec. V: MLP 784-300-10 for MNIST-class digit classification.
+
+Every matmul runs through the MacCtx hook, so the same network evaluates
+with exact float, exact-int8 (Ristretto reference), or any evolved
+approximate multiplier LUT -- the paper's Table I / Fig. 7 pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import EXACT, MacCtx, dense, uniform_init
+
+
+def init_mlp300(key, n_in=784, n_hidden=300, n_out=10, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": uniform_init(k1, (n_in, n_hidden), dtype=dtype),
+        "b1": jnp.zeros((n_hidden,), dtype),
+        "w2": uniform_init(k2, (n_hidden, n_out), dtype=dtype),
+        "b2": jnp.zeros((n_out,), dtype),
+    }
+
+
+def mlp300_forward(params, x, mac: MacCtx = EXACT):
+    """x: (B, 784) in [0, 1] -> logits (B, 10)."""
+    h = jax.nn.relu(dense(x, params["w1"], mac) + params["b1"])
+    return dense(h, params["w2"], mac) + params["b2"]
+
+
+def accuracy(params, x, y, mac: MacCtx = EXACT, batch: int = 512):
+    hits = 0
+    for i in range(0, x.shape[0], batch):
+        logits = mlp300_forward(params, x[i:i + batch], mac)
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return hits / x.shape[0]

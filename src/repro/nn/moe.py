@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Dispatch is sort-free: position-in-expert comes from a cumsum over the
+one-hot assignment matrix (tokens x experts, int32 -- cheap), tokens are
+scattered into per-expert capacity buffers, experts run as a vmapped dense
+FFN (E is a leading dim, shardable over the ``model`` axis = expert
+parallelism), and results gather back with the routing weights.  Under
+GSPMD, the scatter from batch-sharded tokens into expert-sharded buffers
+lowers to the expected all-to-all traffic.
+
+Tokens beyond an expert's capacity are *dropped* (contribute zero); with
+capacity_factor >= 1.25 and top-k routing this matches GShard/Switch
+semantics.  Router z-loss and load-balance aux loss included (training).
+
+Variants used by the assigned archs:
+* arctic-480b: 128 experts top-2 + a *dense residual* FFN in parallel;
+* llama4-scout: 16 experts top-1 + always-on shared expert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.nn.layers import MacCtx, EXACT, dense, normal_init
+
+
+def init_moe(key, d_model, d_ff, n_experts, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": normal_init(k1, (d_model, n_experts), std=0.02, dtype=dtype),
+        "experts": {
+            "w_in": normal_init(k2, (n_experts, d_model, d_ff), dtype=dtype),
+            "w_up": normal_init(k3, (n_experts, d_model, d_ff), dtype=dtype),
+            "w_out": normal_init(k4, (n_experts, d_ff, d_model), dtype=dtype),
+        },
+    }
+
+
+def _expert_ffn(wp, x, mac: MacCtx):
+    """x: (E, C, D) through per-expert SwiGLU; weights (E, D, F)/(E, F, D)."""
+    g = jnp.einsum("ecd,edf->ecf", x, wp["w_in"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x, wp["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "expert", None, None)
+    return jnp.einsum("ecf,efd->ecd", h, wp["w_out"].astype(x.dtype))
+
+
+def moe_ffn(params, x, *, top_k: int, capacity_factor: float = 1.25,
+            mac: MacCtx = EXACT, return_aux: bool = True):
+    """x: (B, S, D) -> (B, S, D), aux losses dict.
+
+    Routing/dispatch per batch row (group) keeps token locality and bounds
+    the dispatch tensors to (S, E) per row.
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[-1]
+    C = int(max(top_k * S * capacity_factor / E, 4))  # per-row capacity
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    def route_row(xb, idx_b, val_b):
+        # one-hot (S, k, E) -> position of each (token, k) within its expert
+        oh = jax.nn.one_hot(idx_b, E, dtype=jnp.int32)        # (S, k, E)
+        flat = oh.reshape(S * top_k, E)
+        pos = jnp.cumsum(flat, axis=0) - flat                 # (S*k, E)
+        pos_tok = jnp.sum(pos * flat, axis=-1)                # (S*k,)
+        exp_tok = idx_b.reshape(S * top_k)
+        # scatter TOKEN INDICES (E*C*4 bytes) instead of token data: a data
+        # scatter into an expert-sharded buffer lowers to a full-buffer
+        # all-reduce under GSPMD (§Perf iteration B1, refuted); the index
+        # scatter is tiny and the data then moves via a plain gather, which
+        # GSPMD shards with token (not buffer) traffic.
+        slot_tok = jnp.full((E, C), S, jnp.int32)             # S -> pad row
+        tok_of = jnp.arange(S * top_k, dtype=jnp.int32) // top_k
+        slot_tok = slot_tok.at[exp_tok, pos_tok].set(tok_of, mode="drop")
+        xb_pad = jnp.concatenate([xb, jnp.zeros((1, D), xb.dtype)])
+        expert_in = xb_pad[slot_tok]                          # (E, C, D)
+        return expert_in, exp_tok, pos_tok
+
+    expert_in, exp_toks, pos_toks = jax.vmap(route_row)(x, gate_idx,
+                                                        gate_vals)
+    expert_in = shard(expert_in, "batch", "expert", None, None)
+    out_buf = jax.vmap(lambda ei: _expert_ffn(params["experts"], ei, mac))(
+        expert_in)                                            # (B, E, C, D)
+    out_buf = shard(out_buf, "batch", "expert", None, None)
+
+    def gather_row(ob, exp_tok, pos_tok, val_b):
+        y = ob.at[exp_tok, pos_tok].get(mode="fill",
+                                        fill_value=0)         # (S*k, D)
+        w = val_b.reshape(S * top_k).astype(y.dtype)
+        return jnp.sum((y * w[:, None]).reshape(S, top_k, D), axis=1)
+
+    y = jax.vmap(gather_row)(out_buf, exp_toks, pos_toks, gate_vals)
+
+    aux = {}
+    if return_aux:
+        # Switch-style load-balance loss + router z-loss
+        me = jnp.mean(probs, axis=(0, 1))                     # (E,)
+        ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1))
+        aux["load_balance"] = E * jnp.sum(me * ce)
+        aux["router_z"] = jnp.mean(
+            jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,226 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Recurrence per head (head dim n):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: n x n)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with w_t in (0,1) data-dependent (LoRA-projected), u the "bonus" for the
+current token.  Train/prefill uses the *chunked* linear-attention form: all
+cross-chunk decay ratios are products of w <= 1 (computed in log space as
+differences of cumulative logs -- never a division), so it is numerically
+safe; within a chunk the (L x L) decay-weighted attention matrix is formed
+explicitly (MXU-friendly).  Decode carries (shift token, state) explicitly.
+
+Simplifications vs. the reference implementation (noted in DESIGN.md): the
+five ddlerp token-shift mixes share one LoRA; gating uses silu.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.nn.layers import normal_init, rms_norm
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array   # (B, 1, D) last token (time-mix)
+    shift_cm: jax.Array   # (B, 1, D) last token (channel-mix)
+    s: jax.Array          # (B, H, n, n) wkv state
+
+
+def init_rwkv_block(key, d_model, head_dim=64, lora_rank=64, ffn_mult=3.5,
+                    dtype=jnp.float32):
+    H = d_model // head_dim
+    d_ff = int(d_model * ffn_mult)
+    ks = jax.random.split(key, 12)
+    return {
+        "tm_mix": 0.5 * jnp.ones((5, d_model), dtype),   # r,k,v,w,g lerp
+        "w_rkvg": normal_init(ks[0], (4, d_model, d_model), dtype=dtype),
+        "w_lora_a": normal_init(ks[1], (d_model, lora_rank), dtype=dtype),
+        "w_lora_b": normal_init(ks[2], (lora_rank, d_model), std=0.01,
+                                dtype=dtype),
+        "w_bias": jnp.full((d_model,), -4.0, dtype),     # decay base
+        "u_bonus": jnp.zeros((H, head_dim), dtype),
+        "ln_x": jnp.ones((d_model,), dtype),
+        "w_o": normal_init(ks[3], (d_model, d_model), dtype=dtype),
+        "cm_mix": 0.5 * jnp.ones((2, d_model), dtype),
+        "w_cm_k": normal_init(ks[4], (d_model, d_ff), dtype=dtype),
+        "w_cm_v": normal_init(ks[5], (d_ff, d_model), dtype=dtype),
+        "w_cm_r": normal_init(ks[6], (d_model, d_model), dtype=dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """x_{t-1} stream: prev is (B,1,D) carry (zeros at t=0)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """Chunked WKV.  r/k/v: (B,H,S,n); logw: (B,H,S,n) (<0); s0: (B,H,n,n).
+
+    Returns (out (B,H,S,n), s_end).
+    """
+    B, H, S, n = r.shape
+    nc = S // chunk
+
+    def per_chunk(s, idx):
+        sl = lambda z: jax.lax.dynamic_slice_in_dim(z, idx * chunk, chunk, 2)
+        rc, kc, vc, lwc = sl(r), sl(k), sl(v), sl(logw)
+        cum = jnp.cumsum(lwc, axis=2)                      # (B,H,L,n)
+        # inter-chunk: r_t against start state, decayed by cum_{t-1}
+        cum_prev = cum - lwc                               # exclusive cumsum
+        r_dec = rc * jnp.exp(cum_prev)                     # exp(<=0), safe
+        inter = jnp.einsum("bhln,bhnm->bhlm", r_dec, s)
+        # intra-chunk attention, pairwise-safe: for j < t the exponent
+        # cum_prev[t] - cum[j] = sum_{j<i<t} logw_i <= 0, so exp never
+        # overflows.  (The factored r*exp(cum_prev) @ k*exp(-cum) form would
+        # overflow for fast decays -- see DESIGN.md.)
+        L = chunk
+        dmat = jnp.exp(jnp.clip(
+            cum_prev[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0))
+        att = jnp.einsum("bhln,bhlmn->bhlm", rc,
+                         kc[:, :, None, :, :] * dmat)
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        bonus = jnp.einsum("bhln,bhln->bhl", rc * u[None, :, None], kc)
+        intra = jnp.einsum("bhlm,bhmn->bhln", att, vc)
+        intra = intra + bonus[..., None] * vc
+        out_c = inter + intra
+        # end state: s_end = diag(prod w) s + sum_j (prod_{i>j} w_i) k_j v_j
+        w_tot = jnp.exp(cum[:, :, -1])                     # (B,H,n)
+        k_tail = kc * jnp.exp(cum[:, :, -1:None] - cum)    # decay after j, <=1
+        s_new = (w_tot[..., None] * s
+                 + jnp.einsum("bhln,bhlm->bhnm", k_tail, vc))
+        return s_new, out_c
+
+    # checkpoint the chunk body: autodiff would otherwise stack the
+    # (B,H,L,L,n) intra-chunk decay tensors per chunk for the backward --
+    # 86 % of the train step's HBM bytes (§Perf iteration F); recomputing
+    # them costs ~30 % extra chunk FLOPs.
+    s_end, outs = jax.lax.scan(jax.checkpoint(per_chunk), s0, jnp.arange(nc))
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, S, n)
+    return out, s_end
+
+
+def rwkv_time_mix(params, x, *, head_dim=64, chunk=32,
+                  state: RWKVState | None = None):
+    B, S, D = x.shape
+    H = D // head_dim
+    prev = (jnp.zeros((B, 1, D), x.dtype) if state is None else
+            state.shift_tm.astype(x.dtype))
+    xs = _token_shift(x, prev)
+    mixed = [x + (xs - x) * params["tm_mix"][i].astype(x.dtype)
+             for i in range(5)]
+    xr, xk, xv, xw, xg = mixed
+    r = xr @ params["w_rkvg"][0].astype(x.dtype)
+    k = xk @ params["w_rkvg"][1].astype(x.dtype)
+    v = xv @ params["w_rkvg"][2].astype(x.dtype)
+    g = xg @ params["w_rkvg"][3].astype(x.dtype)
+    # data-dependent decay (LoRA)
+    wdelta = jnp.tanh(xw @ params["w_lora_a"].astype(x.dtype)) @ \
+        params["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp((params["w_bias"].astype(jnp.float32)
+                     + wdelta.astype(jnp.float32)))        # (B,S,D), < 0
+    logw = jnp.maximum(logw, -12.0)                        # keep exp() sane
+
+    hd = lambda t: jnp.moveaxis(
+        t.reshape(B, S, H, head_dim), 2, 1).astype(jnp.float32)
+    r_, k_, v_, lw_ = hd(r), hd(k), hd(v), hd(logw)
+    s0 = (jnp.zeros((B, H, head_dim, head_dim), jnp.float32)
+          if state is None else state.s)
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r_, k_, v_, lw_ = zp(r_), zp(k_), zp(v_), zp(lw_)
+    out, s_end = _wkv_chunked(r_, k_, v_, lw_,
+                              params["u_bonus"].astype(jnp.float32), s0,
+                              chunk=min(chunk, r_.shape[2]))
+    out = out[:, :, :S]
+    y = jnp.moveaxis(out, 1, 2).reshape(B, S, D)
+    y = rms_norm(y.astype(x.dtype), params["ln_x"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = y @ params["w_o"].astype(x.dtype)
+    new_tm_shift = x[:, -1:]
+    return y, new_tm_shift, s_end
+
+
+def rwkv_channel_mix(params, x, state: RWKVState | None = None):
+    B, S, D = x.shape
+    prev = (jnp.zeros((B, 1, D), x.dtype) if state is None else
+            state.shift_cm.astype(x.dtype))
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * params["cm_mix"][0].astype(x.dtype)
+    xr = x + (xs - x) * params["cm_mix"][1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ params["w_cm_k"].astype(x.dtype)))
+    kk = shard(kk, "batch", None, "tp")
+    vv = kk @ params["w_cm_v"].astype(x.dtype)
+    return jax.nn.sigmoid(
+        (xr @ params["w_cm_r"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype) * vv, x[:, -1:]
+
+
+def rwkv_block(params, x, *, head_dim=64, chunk=32,
+               state: RWKVState | None = None, return_state: bool = False):
+    """Full RWKV block (pre-norm handled by the caller)."""
+    y, tm_shift, s_end = rwkv_time_mix(params, x, head_dim=head_dim,
+                                       chunk=chunk, state=state)
+    x = x + y
+    y2, cm_shift = rwkv_channel_mix(params, x, state=state)
+    x = x + y2
+    if return_state:
+        return x, RWKVState(tm_shift, cm_shift, s_end)
+    return x
+
+
+def rwkv_decode(params, x, state: RWKVState, *, head_dim=64):
+    """Single-token recurrent step.  x: (B, 1, D)."""
+    B, _, D = x.shape
+    H = D // head_dim
+    x_in = x  # block input feeds the next step's time-mix shift
+    xs = state.shift_tm.astype(x.dtype)
+    mixed = [x + (xs - x) * params["tm_mix"][i].astype(x.dtype)
+             for i in range(5)]
+    xr, xk, xv, xw, xg = mixed
+    r = (xr @ params["w_rkvg"][0].astype(x.dtype)).reshape(B, H, head_dim)
+    k = (xk @ params["w_rkvg"][1].astype(x.dtype)).reshape(B, H, head_dim)
+    v = (xv @ params["w_rkvg"][2].astype(x.dtype)).reshape(B, H, head_dim)
+    g = xg @ params["w_rkvg"][3].astype(x.dtype)
+    wdelta = jnp.tanh(xw @ params["w_lora_a"].astype(x.dtype)) @ \
+        params["w_lora_b"].astype(x.dtype)
+    logw = -jnp.exp(params["w_bias"].astype(jnp.float32)
+                    + wdelta.astype(jnp.float32))
+    logw = jnp.maximum(logw, -12.0).reshape(B, H, head_dim)
+    w = jnp.exp(logw)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = params["u_bonus"].astype(jnp.float32)
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    o = jnp.einsum("bhn,bhnm->bhm", rf, state.s + u[None, ..., None] * kv)
+    s_new = w[..., None] * state.s + kv
+    y = o.reshape(B, 1, D).astype(x.dtype)
+    y = rms_norm(y, params["ln_x"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    x = x + y @ params["w_o"].astype(x.dtype)
+
+    cm_in = x  # channel-mix input feeds the next step's channel-mix shift
+    xs2 = state.shift_cm.astype(x.dtype)
+    xk2 = x + (xs2 - x) * params["cm_mix"][0].astype(x.dtype)
+    xr2 = x + (xs2 - x) * params["cm_mix"][1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk2 @ params["w_cm_k"].astype(x.dtype)))
+    vv = kk @ params["w_cm_v"].astype(x.dtype)
+    x = x + jax.nn.sigmoid(
+        (xr2 @ params["w_cm_r"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype) * vv
+    return x, RWKVState(x_in[:, -1:], cm_in[:, -1:], s_new)
+
+
+def init_rwkv_state(batch, d_model, head_dim=64) -> RWKVState:
+    H = d_model // head_dim
+    return RWKVState(jnp.zeros((batch, 1, d_model), jnp.float32),
+                     jnp.zeros((batch, 1, d_model), jnp.float32),
+                     jnp.zeros((batch, H, head_dim, head_dim), jnp.float32))

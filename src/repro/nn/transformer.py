@@ -1,0 +1,458 @@
+"""Generic decoder-only LM covering all ten assigned architectures.
+
+One parameterized block assembled from ``ModelConfig``:
+
+    x -> [cross-attn (VLM, every Nth)] ->
+         norm -> (attention [GQA|MLA]  ||  SSM branch (hymba)) -> +res ->
+         norm -> (dense FFN | MoE [+dense residual|+shared expert]) -> +res
+
+or the RWKV-6 block for the attention-free family.  Layers run under
+``lax.scan`` over stacked parameters (compile-size control at 126 layers /
+512 devices) with optional remat; VLM cross-attention layers use a
+superblock scan (one cross layer + k self layers per step).
+
+Three entry points (the dry-run lowers exactly these):
+* ``train_step_fn``   -- loss/grads-ready forward (caller wraps in grad);
+* ``prefill``         -- forward + KV/state cache construction;
+* ``decode_step``     -- one token through preallocated caches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.nn import attention as A
+from repro.nn import moe as M
+from repro.nn import rwkv as R
+from repro.nn import ssm as S
+from repro.nn.flash import attend_blocked, attend_blocked_windowed
+from repro.nn.layers import (EXACT, MacCtx, dense, init_mlp, init_swiglu,
+                             mlp_gelu, normal_init, rms_norm, rope_freqs,
+                             swiglu)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------- init
+
+def init_layer(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family == "mla":
+        p["attn"] = A.init_mla(ks[0], cfg.d_model, cfg.n_heads,
+                               q_rank=cfg.q_rank, kv_rank=cfg.kv_rank,
+                               nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                               v_dim=cfg.v_dim, dtype=dtype)
+    else:
+        p["attn"] = A.init_gqa(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.hd, dtype=dtype)
+    if cfg.has_ssm:
+        p["ssm"] = S.init_ssm(ks[1], cfg.d_model, 2 * cfg.d_model,
+                              n_state=cfg.ssm_state, dtype=dtype)
+        p["ssm_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.is_moe:
+        p["moe"] = M.init_moe(ks[2], cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                              cfg.n_experts, dtype=dtype)
+        if cfg.dense_residual:
+            p["ffn"] = init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.shared_expert:
+            p["ffn"] = init_swiglu(ks[3], cfg.d_model,
+                                   cfg.moe_d_ff or cfg.d_ff, dtype)
+    else:
+        p["ffn"] = (init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dtype)
+                    if cfg.ffn_kind == "swiglu"
+                    else init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_cross, k_out = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": normal_init(k_emb, (cfg.vocab, cfg.d_model), std=0.02,
+                             dtype=dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_out, (cfg.d_model, cfg.vocab),
+                                        std=0.02, dtype=dtype)
+    if cfg.family == "rwkv":
+        lkeys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: R.init_rwkv_block(
+                k, cfg.d_model, head_dim=cfg.rwkv_head_dim,
+                ffn_mult=cfg.d_ff / cfg.d_model, dtype=dtype))(lkeys)
+        return params
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: init_layer(k, cfg, dtype))(lkeys)
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        ckeys = jax.random.split(k_cross, n_cross)
+        params["cross"] = jax.vmap(
+            lambda k: dict(
+                A.init_cross_attn(k, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                  cfg.hd, cfg.d_vision, dtype=dtype),
+                ln=jnp.ones((cfg.d_model,), dtype)))(ckeys)
+    return params
+
+
+# ------------------------------------------------------------------- blocks
+
+def _window_array(cfg: ModelConfig, seq_len: int) -> np.ndarray:
+    """Per-layer attention windows; 'global' layers get window >= seq."""
+    if cfg.window is None:
+        return np.full(cfg.n_layers, max(seq_len, 1) + 1, np.int32)
+    w = np.full(cfg.n_layers, cfg.window, np.int32)
+    for g in cfg.global_layers:
+        w[g] = max(seq_len, 1) + 1
+    return w
+
+
+def self_attn_branch(cfg: ModelConfig, p, x, cos, sin, window, mac,
+                     use_flash: bool, static_window=None):
+    """``static_window``: None -> traced per-layer window (scanned flag
+    path); 0 -> full causal; >0 -> static sliding window (banded flash,
+    no masked-out block ever computed -- §Perf iteration D2)."""
+    if cfg.family == "mla":
+        return A.mla_forward(p["attn"], x, cos, sin, n_heads=cfg.n_heads,
+                             nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                             v_dim=cfg.v_dim, mac=mac)
+    B, Sq, _ = x.shape
+    q = dense(x, p["attn"]["wq"], mac).reshape(B, Sq, cfg.n_heads, cfg.hd)
+    k = dense(x, p["attn"]["wk"], mac).reshape(B, Sq, cfg.n_kv, cfg.hd)
+    v = dense(x, p["attn"]["wv"], mac).reshape(B, Sq, cfg.n_kv, cfg.hd)
+    from repro.nn.layers import apply_rope
+    q = apply_rope(q, cos[:Sq], sin[:Sq])
+    k = apply_rope(k, cos[:Sq], sin[:Sq])
+    q = shard(q, "batch", None, "tp", None)
+    if use_flash:
+        if static_window is not None and static_window > 0:
+            out = attend_blocked_windowed(q, k, v, window=static_window,
+                                          block_q=cfg.flash_block_q,
+                                          block_k=cfg.flash_block_k)
+        else:
+            win = None if static_window == 0 else window
+            out = attend_blocked(q, k, v, causal=True, window=win,
+                                 block_q=cfg.flash_block_q,
+                                 block_k=cfg.flash_block_k)
+    else:
+        out = A._attend(q, k, v, causal=True, window=window)
+    return dense(out.reshape(B, Sq, cfg.n_heads * cfg.hd),
+                 p["attn"]["w_o"], mac)
+
+
+def ffn_branch(cfg: ModelConfig, p, x, mac):
+    aux = {}
+    if cfg.is_moe:
+        y, aux = M.moe_ffn(p["moe"], x, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor, mac=mac)
+        if cfg.dense_residual or cfg.shared_expert:
+            y = y + swiglu(p["ffn"], x, mac)
+        return y, aux
+    if cfg.ffn_kind == "swiglu":
+        return swiglu(p["ffn"], x, mac), aux
+    return mlp_gelu(p["ffn"], x, mac), aux
+
+
+def decoder_layer(cfg: ModelConfig, p, x, cos, sin, window, mac,
+                  use_flash=True, static_window=None):
+    """One standard block; returns (x, aux_losses).
+
+    Sequence-parallel boundaries are explicit (Megatron-SP style): the
+    residual stream and norms live seq-sharded; each block region gathers
+    the sequence ONCE at the norm output and reduce-scatters at its output
+    (the trailing seq-sharded constraint).  Without this, GSPMD re-gathers
+    the activations per projection -- §Perf iteration A measured 4.4x
+    cross-chip traffic from exactly that.
+    """
+    h = rms_norm(x, p["ln1"])
+    h = shard(h, "batch", None, None)   # one AG per region (no-op w/o SP)
+    attn_out = self_attn_branch(cfg, p, h, cos, sin, window, mac, use_flash,
+                                static_window=static_window)
+    if cfg.has_ssm:
+        # hymba: attention and mamba heads in parallel, mean-combined
+        ssm_out = S.ssm_forward(p["ssm"], rms_norm(x, p["ssm_norm"]),
+                                chunk=cfg.ssm_chunk)
+        attn_out = 0.5 * (attn_out + ssm_out)
+    attn_out = shard(attn_out, "batch", "seq", None)  # RS back to SP region
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"])
+    h = shard(h, "batch", None, None)
+    y, aux = ffn_branch(cfg, p, h, mac)
+    y = shard(y, "batch", "seq", None)
+    x = x + y
+    x = shard(x, "batch", "seq", None)
+    return x, aux
+
+
+# ------------------------------------------------------------------ forward
+
+def forward(cfg: ModelConfig, params, tokens, *,
+            vision_embeds=None, mac: MacCtx = EXACT,
+            use_flash: bool = True):
+    """tokens (B, S) int32 -> logits (B, S, V)."""
+    B, Sq = tokens.shape
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = shard(x, "batch", "seq", None)
+
+    if cfg.family == "rwkv":
+        def body(x, lp):
+            y = R.rwkv_block(lp, x, head_dim=cfg.rwkv_head_dim,
+                             chunk=cfg.rwkv_chunk)
+            return shard(y, "batch", "seq", None), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        aux_total = {}
+    else:
+        cos, sin = rope_freqs(
+            cfg.rope_dim if cfg.family == "mla" else cfg.hd,
+            Sq, cfg.rope_theta)
+        cos, sin = jnp.asarray(cos), jnp.asarray(sin)
+        windows = jnp.asarray(_window_array(cfg, Sq))
+
+        def body(x, scanned):
+            lp, window = scanned
+            y, aux = decoder_layer(cfg, lp, x, cos, sin, window, mac,
+                                   use_flash)
+            return y, (aux.get("load_balance", 0.0), aux.get("router_z", 0.0))
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        if (cfg.window is not None and use_flash
+                and not cfg.cross_attn_every):
+            # segmented scan: static window per segment -> the banded
+            # windowed flash runs on SWA segments, full causal on the
+            # sparse global layers (§Perf D2).
+            segs = []
+            idx = 0
+            for g in sorted(cfg.global_layers):
+                if g > idx:
+                    segs.append((idx, g - idx, False))
+                segs.append((g, 1, True))
+                idx = g + 1
+            if idx < cfg.n_layers:
+                segs.append((idx, cfg.n_layers - idx, False))
+            for s0, cnt, is_global in segs:
+                sp = jax.tree.map(lambda t: t[s0:s0 + cnt], params["layers"])
+                swin = 0 if is_global else cfg.window
+
+                def body_seg(x, lp, _swin=swin):
+                    y, aux = decoder_layer(cfg, lp, x, cos, sin, None, mac,
+                                           use_flash, static_window=_swin)
+                    return y, (aux.get("load_balance", 0.0),
+                               aux.get("router_z", 0.0))
+                if cfg.remat:
+                    body_seg = jax.checkpoint(
+                        body_seg,
+                        policy=jax.checkpoint_policies.nothing_saveable)
+                x, _ = jax.lax.scan(body_seg, x, sp)
+            aux_total = {}
+            x = rms_norm(x, params["ln_f"])
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = dense(x, head, mac)
+            logits = shard(logits, "batch", "seq", "vocab")
+            return logits, aux_total
+
+        if cfg.cross_attn_every:
+            k = cfg.cross_attn_every
+            n_sb = cfg.n_layers // k
+            self_stack = jax.tree.map(
+                lambda t: t.reshape((n_sb, k) + t.shape[1:]), params["layers"])
+            win_stack = windows.reshape(n_sb, k)
+
+            def superblock(x, scanned):
+                cp, sp, wins = scanned
+                h = rms_norm(x, cp["ln"])
+                x = x + A.cross_attn(cp, h, vision_embeds.astype(x.dtype),
+                                     n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                     head_dim=cfg.hd, mac=mac)
+                x, auxs = jax.lax.scan(body, x, (sp, wins))
+                return x, jax.tree.map(jnp.sum, auxs)
+            if cfg.remat:
+                superblock = jax.checkpoint(superblock)
+            x, auxs = jax.lax.scan(superblock, x,
+                                   (params["cross"], self_stack, win_stack))
+        else:
+            x, auxs = jax.lax.scan(body, x, (params["layers"], windows))
+        aux_total = {"load_balance": jnp.sum(auxs[0]),
+                     "router_z": jnp.sum(auxs[1])} if cfg.is_moe else {}
+
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = dense(x, head, mac)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux_total
+
+
+def _xent(cfg, logits, labels, mask, aux, aux_weight):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if aux:
+        loss = loss + aux_weight * (aux["load_balance"] + aux["router_z"])
+    return loss
+
+
+def loss_fn(cfg: ModelConfig, params, batch, mac: MacCtx = EXACT):
+    """Unified loss entry: batch = {tokens, labels[, vision_embeds, mask]}."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          vision_embeds=batch.get("vision_embeds"), mac=mac)
+    return _xent(cfg, logits, batch["labels"], batch.get("mask"), aux, 0.01)
+
+
+# ---------------------------------------------------------------- serving
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int):
+    """Stacked per-layer caches for decode (scan-compatible pytree)."""
+    dtype = _dtype(cfg)
+    L = cfg.n_layers
+    stack = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), t)
+    if cfg.family == "rwkv":
+        return {"rwkv": stack(R.init_rwkv_state(batch, cfg.d_model,
+                                                cfg.rwkv_head_dim))}
+    out = {}
+    if cfg.family == "mla":
+        out["mla"] = stack(A.init_mla_cache(batch, s_max, cfg.kv_rank,
+                                            cfg.rope_dim, dtype))
+    else:
+        out["kv"] = stack(A.init_kv_cache(batch, s_max, cfg.n_kv, cfg.hd,
+                                          dtype, kv_int8=cfg.kv_int8))
+    if cfg.has_ssm:
+        out["ssm"] = stack(S.init_ssm_state(batch, 2 * cfg.d_model,
+                                            cfg.ssm_state))
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, caches, token, *,
+                vision_embeds=None, mac: MacCtx = EXACT):
+    """One-token decode.  token (B, 1) int32 -> (logits (B,1,V), caches)."""
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    x = shard(x, "batch", None, None)
+    B = token.shape[0]
+
+    if cfg.family == "rwkv":
+        def body(x, sc):
+            lp, st = sc
+            y, st_new = R.rwkv_decode(lp, x, R.RWKVState(*st),
+                                      head_dim=cfg.rwkv_head_dim)
+            return y, tuple(st_new)
+        x, new_state = jax.lax.scan(
+            body, x, (params["layers"], tuple(caches["rwkv"])))
+        new_caches = {"rwkv": R.RWKVState(*new_state)}
+    else:
+        s_max = (caches["mla"].c_kv.shape[2] if cfg.family == "mla"
+                 else caches["kv"].k.shape[2])
+        cos, sin = rope_freqs(
+            cfg.rope_dim if cfg.family == "mla" else cfg.hd,
+            s_max, cfg.rope_theta)
+        cos, sin = jnp.asarray(cos), jnp.asarray(sin)
+        windows = jnp.asarray(_window_array(cfg, s_max))
+
+        def body(x, scanned):
+            if cfg.family == "mla":
+                lp, window, mla_c = scanned
+                cache = A.MLACache(*mla_c)
+                h = rms_norm(x, lp["ln1"])
+                attn_out, cache = A.mla_decode(
+                    lp["attn"], h, cache, cos, sin, n_heads=cfg.n_heads,
+                    nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                    v_dim=cfg.v_dim, mac=mac)
+            else:
+                lp, window, kv_c = scanned
+                cache = A.KVCache(*kv_c)
+                h = rms_norm(x, lp["ln1"])
+                attn_out, cache = A.gqa_decode(
+                    lp["attn"], h, cache, cos, sin, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv, head_dim=cfg.hd, window=window, mac=mac)
+            x = x + attn_out
+            h = rms_norm(x, lp["ln2"])
+            y, _ = ffn_branch(cfg, lp, h, mac)
+            return x + y, tuple(cache)
+
+        # SSM/hybrid needs a joint scan over (kv cache, ssm state)
+        if cfg.has_ssm:
+            def body_h(x, scanned):
+                lp, window, kv_c, ssm_c = scanned
+                cache = A.KVCache(*kv_c)
+                st = S.SSMState(*ssm_c)
+                h = rms_norm(x, lp["ln1"])
+                attn_out, cache = A.gqa_decode(
+                    lp["attn"], h, cache, cos, sin, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv, head_dim=cfg.hd, window=window, mac=mac)
+                ssm_out, st = S.ssm_decode(
+                    lp["ssm"], rms_norm(x, lp["ssm_norm"]), st)
+                x = x + 0.5 * (attn_out + ssm_out)
+                h = rms_norm(x, lp["ln2"])
+                y, _ = ffn_branch(cfg, lp, h, mac)
+                return x + y, (tuple(cache), tuple(st))
+            x, (kv_new, ssm_new) = jax.lax.scan(
+                body_h, x, (params["layers"], windows,
+                            tuple(caches["kv"]), tuple(caches["ssm"])))
+            new_caches = {"kv": A.KVCache(*kv_new),
+                          "ssm": S.SSMState(*ssm_new)}
+        elif cfg.family == "mla":
+            x, mla_new = jax.lax.scan(
+                body, x, (params["layers"], windows, tuple(caches["mla"])))
+            new_caches = {"mla": A.MLACache(*mla_new)}
+        elif cfg.cross_attn_every:
+            # VLM decode: superblock scan (cross layer + k self layers)
+            k = cfg.cross_attn_every
+            n_sb = cfg.n_layers // k
+            resb = lambda t: jax.tree.map(
+                lambda a: a.reshape((n_sb, k) + a.shape[1:]), t)
+            self_stack = resb(params["layers"])
+            kv_stack = resb(tuple(caches["kv"]))
+            win_stack = windows.reshape(n_sb, k)
+
+            def superblock(x, scanned):
+                cp, sp, wins, kv_c = scanned
+                h = rms_norm(x, cp["ln"])
+                x = x + A.cross_attn(cp, h, vision_embeds.astype(x.dtype),
+                                     n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                     head_dim=cfg.hd, mac=mac)
+                x, kv_new = jax.lax.scan(body, x, (sp, wins, kv_c))
+                return x, kv_new
+            x, kv_new = jax.lax.scan(
+                superblock, x,
+                (params["cross"], self_stack, win_stack, kv_stack))
+            merged = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), kv_new)
+            new_caches = {"kv": A.KVCache(*merged)}
+        else:
+            x, kv_new = jax.lax.scan(
+                body, x, (params["layers"], windows, tuple(caches["kv"])))
+            new_caches = {"kv": A.KVCache(*kv_new)}
+
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = dense(x, head, mac)
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, vision_embeds=None,
+            mac: MacCtx = EXACT):
+    """Prefill forward: returns last-position logits (cache construction is
+    exercised per-layer; full stacked-cache export is decode-path work)."""
+    logits, _ = forward(cfg, params, tokens, vision_embeds=vision_embeds,
+                        mac=mac)
+    return logits[:, -1:]

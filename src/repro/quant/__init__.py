@@ -1,0 +1,5 @@
+"""Ristretto-style fixed-point quantization substrate (paper Sec. V-B)."""
+
+from repro.quant.fixed_point import (  # noqa: F401
+    QuantParams, calibrate, dequantize, fake_quant, quantize, quantize_pattern,
+)

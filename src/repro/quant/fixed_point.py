@@ -1,0 +1,119 @@
+"""Power-of-two fixed-point quantization (Ristretto-like, paper Sec. V-B).
+
+The paper quantizes both NNs to 8-bit *fixed point* with Ristretto [15]:
+per-tensor power-of-two scales (a pure bit-width/fraction-length trimming
+analysis).  We reproduce that:
+
+* ``QuantParams(bits, frac_bits, signed)`` -- scale = 2^-frac_bits;
+* ``calibrate`` picks the smallest fraction length that covers the observed
+  dynamic range (max-abs or percentile);
+* ``quantize_pattern`` returns the *bit pattern* (uint index) used to address
+  multiplier LUTs -- two's complement for signed values;
+* ``fake_quant`` is the straight-through-estimator view used during
+  quantization-aware fine-tuning (paper Table I "after finetuning").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantParams(NamedTuple):
+    bits: int = 8
+    frac_bits: int = 7      # scale = 2^-frac_bits
+    signed: bool = True
+
+    @property
+    def scale(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+
+def calibrate(x, bits: int = 8, signed: bool = True,
+              percentile: float = 100.0) -> QuantParams:
+    """Choose frac_bits so the observed range fits (trimming analysis)."""
+    x = np.asarray(x, dtype=np.float64)
+    if percentile >= 100.0:
+        m = float(np.max(np.abs(x))) if x.size else 1.0
+    else:
+        m = float(np.percentile(np.abs(x), percentile)) if x.size else 1.0
+    m = max(m, 1e-12)
+    # need m <= (2^{bits-1}-1) * 2^{-f}  =>  f <= bits-1 - log2(m) (approx)
+    int_bits = int(np.ceil(np.log2(m + 1e-30))) + 1  # +1 covers the value m
+    f = (bits - 1 if signed else bits) - int_bits
+    return QuantParams(bits=bits, frac_bits=int(f), signed=signed)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Float -> integer code (int32 domain, values in [qmin, qmax])."""
+    q = jnp.round(x * (2.0 ** qp.frac_bits))
+    return jnp.clip(q, qp.qmin, qp.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:
+    return q.astype(jnp.float32) * qp.scale
+
+
+def quantize_pattern(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Float -> LUT-addressable bit pattern in [0, 2^bits).
+
+    Signed values map to their two's-complement pattern (``v mod 2^bits``),
+    matching how exhaustive circuit evaluation and LUTs index operands.
+    """
+    q = quantize(x, qp)
+    return jnp.mod(q, 1 << qp.bits).astype(jnp.int32)
+
+
+@jax.custom_vjp
+def _fake_quant(x, scale_pow2, qmin, qmax):
+    q = jnp.clip(jnp.round(x / scale_pow2), qmin, qmax)
+    return q * scale_pow2
+
+
+def _fq_fwd(x, scale_pow2, qmin, qmax):
+    y = _fake_quant(x, scale_pow2, qmin, qmax)
+    mask = (x / scale_pow2 >= qmin) & (x / scale_pow2 <= qmax)
+    return y, mask
+
+
+def _fq_bwd(mask, g):
+    # straight-through inside the representable range, zero outside
+    return (g * mask.astype(g.dtype), None, None, None)
+
+
+_fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant(x: jax.Array, qp: QuantParams) -> jax.Array:
+    """Quantize-dequantize with straight-through gradients (QAT)."""
+    return _fake_quant(x, jnp.float32(qp.scale),
+                       jnp.float32(qp.qmin), jnp.float32(qp.qmax))
+
+
+# ------------------------------------------------------- int8 tensor codecs
+# Shared by the KV-cache quantizer, the gradient compressor and the 8-bit
+# optimizer states: symmetric per-slice int8 with a float scale.  This is the
+# paper's "approximate storage under a known distribution" insight applied to
+# training-state tensors.
+
+def encode_int8(x: jax.Array, axis=None):
+    """Symmetric int8 encode; returns (codes int8, scale f32)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def decode_int8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale

@@ -1,0 +1,2 @@
+"""Serving: batched prefill + decode engine with slot-based continuous
+batching and int8 KV caches."""

@@ -1,0 +1,105 @@
+"""Failure injection + straggler mitigation scaffolding.
+
+* ``FailureInjector`` raises a simulated node failure at a chosen step --
+  the driver's retry loop restores the last checkpoint and resumes;
+  tests assert the final parameters are bitwise identical to an
+  uninterrupted run (deterministic data pipeline + checkpointed RNG).
+
+* ``StepMonitor`` implements the deadline policy used against stragglers:
+  per-step wall-time EWMA; a step exceeding ``deadline_factor`` x EWMA is
+  logged and counted.  On a real deployment the monitor's callback triggers
+  backup-shard re-issue (the deterministic pipeline makes any host able to
+  recompute any microbatch); in this single-process container the policy is
+  exercised with injected delays (tests/test_fault.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    fail_at_steps: tuple = ()
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class StepMonitor:
+    deadline_factor: float = 3.0
+    ewma_alpha: float = 0.2
+    _ewma: Optional[float] = None
+    stragglers: List[int] = field(default_factory=list)
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step breached the deadline."""
+        if self._ewma is None:
+            self._ewma = dt
+            return False
+        breach = dt > self.deadline_factor * self._ewma
+        if breach:
+            self.stragglers.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt)
+        # EWMA excludes breaches so one straggler doesn't poison the baseline
+        if not breach:
+            self._ewma = (1 - self.ewma_alpha) * self._ewma \
+                + self.ewma_alpha * dt
+        return breach
+
+
+def run_with_recovery(train_fn, *, n_steps: int, ckpt_every: int,
+                      ckpt_root: str, state, data_fn,
+                      injector: Optional[FailureInjector] = None,
+                      monitor: Optional[StepMonitor] = None,
+                      max_retries: int = 5):
+    """Checkpoint/restart driver: train_fn(state, batch) -> (state, metrics).
+
+    On (simulated) failure, restores the latest checkpoint and replays from
+    there -- the deterministic ``data_fn(step)`` regenerates exactly the
+    batches that followed the checkpoint.
+    """
+    from repro.train import checkpoint as ckpt
+
+    start = ckpt.latest_step(ckpt_root)
+    if start is not None:
+        state = ckpt.restore(ckpt_root, state, step=start)
+        step = start
+    else:
+        ckpt.save(ckpt_root, 0, state)
+        step = 0
+
+    retries = 0
+    history = []
+    while step < n_steps:
+        try:
+            t0 = time.time()
+            if injector is not None:
+                injector.check(step + 1)
+            state, metrics = train_fn(state, data_fn(step))
+            if monitor is not None:
+                monitor.observe(step, time.time() - t0)
+            step += 1
+            history.append({k: float(v) for k, v in metrics.items()})
+            if step % ckpt_every == 0 or step == n_steps:
+                ckpt.save(ckpt_root, step, state)
+        except SimulatedFailure:
+            retries += 1
+            if retries > max_retries:
+                raise
+            restored = ckpt.latest_step(ckpt_root)
+            state = ckpt.restore(ckpt_root, state, step=restored)
+            step = restored
+    return state, history

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose -- unit tests run on
+the single real CPU device; only the dry-run forces 512 host devices."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

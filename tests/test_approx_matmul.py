@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx_matmul as am
+from repro.core import luts, wmed
+from repro.quant.fixed_point import calibrate, quantize
+
+
+MUL = am.exact_mul(8, signed=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 33), st.integers(1, 48), st.integers(1, 17),
+       st.integers(0, 2 ** 31 - 1))
+def test_gather_onehot_exact_agree(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.randint(key, (m, k), 0, 256)
+    b = jax.random.randint(jax.random.PRNGKey(seed + 1), (k, n), 0, 256)
+    y_g = am.matmul_lut_gather(a, b, MUL)
+    y_o = am.matmul_lut_onehot(a, b, MUL)
+    y_e = am.matmul_exact_int(a, b, 8, True)
+    assert (y_g == y_e).all()
+    assert (y_o == y_e).all()
+
+
+def test_approx_dense_matches_float_for_exact_lut():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 8)) * 0.1
+    xqp, wqp = calibrate(np.asarray(x)), calibrate(np.asarray(w))
+    y = am.approx_dense(x, w, MUL, xqp, wqp)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.05  # only quantization error remains
+
+
+def test_truncated_lut_biases_output_down():
+    t = luts.truncated_multiplier(8, 6, signed=True)
+    mul = am.ApproxMul.from_lut(t.lut)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (8, 64))) + 0.5
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (64, 4))) * 0.1 + 0.01
+    xqp, wqp = calibrate(np.asarray(x)), calibrate(np.asarray(w))
+    y_exact = am.approx_dense(x, w, MUL, xqp, wqp)
+    y_trunc = am.approx_dense(x, w, mul, xqp, wqp)
+    # truncation drops partial products -> underestimates positive products
+    assert float(jnp.mean(y_trunc - y_exact)) < 0.0
+
+
+def test_blocked_gather_matches_direct():
+    a = jax.random.randint(jax.random.PRNGKey(0), (130, 300), 0, 256)
+    b = jax.random.randint(jax.random.PRNGKey(1), (300, 24), 0, 256)
+    y1 = am.matmul_lut_gather(a, b, MUL)
+    y2 = am.matmul_lut_gather_blocked(a, b, MUL, bm=64, bk=128)
+    assert (y1 == y2).all()
+
+
+def test_ste_gradients_match_exact_linear():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 4)) * 0.1
+    xqp, wqp = calibrate(np.asarray(x)), calibrate(np.asarray(w))
+
+    def f(x, w):
+        return jnp.sum(am.approx_dense(x, w, MUL, xqp, wqp) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    # STE backward = gradients of the float bilinear form at the approx output
+    y = am.approx_dense(x, w, MUL, xqp, wqp)
+    assert jnp.allclose(gx, 2 * y @ w.T, rtol=1e-4, atol=1e-4)
+    assert jnp.allclose(gw, 2 * x.T @ y, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,92 @@
+"""CGP genome evaluation / mutation / cost-model tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cellcost as cc
+from repro.core import cgp, netlist as nl
+
+
+def test_eval_matches_numpy_oracle():
+    for seed in range(5):
+        g = cgp.random_genome(jax.random.PRNGKey(seed), n_i=8, c=40, n_o=6,
+                              allowed_fns=np.arange(16, dtype=np.int32))
+        planes = nl.pack_exhaustive_inputs(4)
+        got = np.asarray(cgp.eval_genome(g, jnp.asarray(planes), n_i=8))
+        want = nl.eval_netlist_np(np.asarray(g.nodes), np.asarray(g.outs),
+                                  8, planes)
+        assert (got == want).all()
+
+
+def test_all_16_functions_truth_tables():
+    # evaluate each function on the 4 input combinations; vector v carries
+    # (a, b) = (v >> 1, v & 1) so the output word equals the truth table f
+    planes = jnp.asarray(np.array([[0b1100], [0b1010]], dtype=np.uint32))
+    for f in range(16):
+        g = cgp.Genome(jnp.asarray([[0, 1, f]], jnp.int32),
+                       jnp.asarray([2], jnp.int32))
+        out = int(np.asarray(cgp.eval_genome(g, planes, n_i=2))[0, 0]) & 0xF
+        assert out == f, f"function {f} truth table mismatch"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_mutation_preserves_validity(seed):
+    g = cgp.random_genome(jax.random.PRNGKey(seed), n_i=16, c=30, n_o=8,
+                          allowed_fns=cc.STANDARD_FNS)
+    allowed = jnp.asarray(cc.STANDARD_FNS)
+    g2 = cgp.mutate(g, jax.random.PRNGKey(seed + 1), allowed, n_i=16, h=5)
+    nodes = np.asarray(g2.nodes)
+    for k in range(nodes.shape[0]):
+        assert 0 <= nodes[k, 0] < 16 + k
+        assert 0 <= nodes[k, 1] < 16 + k
+        assert nodes[k, 2] in set(np.asarray(cc.STANDARD_FNS)) \
+            or nodes[k, 2] in set(range(16))
+    assert ((np.asarray(g2.outs) >= 0) & (np.asarray(g2.outs) < 46)).all()
+
+
+def test_active_mask_and_area():
+    # single AND gate used by output 0; second gate dead
+    nodes = jnp.asarray([[0, 1, cc.AND], [0, 1, cc.XOR]], jnp.int32)
+    outs = jnp.asarray([2], jnp.int32)
+    g = cgp.Genome(nodes, outs)
+    act = np.asarray(cgp.active_mask(g, n_i=2))
+    assert act.tolist() == [True, False]
+    a = float(cgp.area(g, n_i=2))
+    assert np.isclose(a, float(cc.AREA[cc.AND]))
+
+
+def test_critical_path_monotone():
+    m4 = nl.array_multiplier(4)
+    m8 = nl.array_multiplier(8)
+    d4 = float(cgp.critical_path_ps(cgp.genome_from_netlist(m4), n_i=8))
+    d8 = float(cgp.critical_path_ps(cgp.genome_from_netlist(m8), n_i=16))
+    assert d8 > d4 > 0
+
+
+def test_signal_probs_uniform_inputs():
+    # AND of two independent uniform bits -> p = 0.25
+    nodes = jnp.asarray([[0, 1, cc.AND]], jnp.int32)
+    outs = jnp.asarray([2], jnp.int32)
+    g = cgp.Genome(nodes, outs)
+    planes = jnp.asarray(nl.pack_exhaustive_inputs(1))  # 2 inputs, 4 vecs
+    wts = jnp.full((planes.shape[1] * 32,), 0.0).at[:4].set(0.25)
+    p = np.asarray(cgp.signal_probs(g, planes, wts, n_i=2))
+    assert np.isclose(p[0], 0.25, atol=1e-6)
+
+
+def test_power_positive_and_distribution_sensitive():
+    m = nl.array_multiplier(8)
+    g = cgp.genome_from_netlist(m)
+    planes = jnp.asarray(nl.pack_exhaustive_inputs(8))
+    from repro.core import distributions as dist
+    p_uni = float(cgp.power_nw(g, planes, jnp.asarray(
+        dist.vector_weights(dist.uniform_pmf(8), 8)), n_i=16))
+    p_hn = float(cgp.power_nw(g, planes, jnp.asarray(
+        dist.vector_weights(dist.half_normal_pmf(8), 8)), n_i=16))
+    assert p_uni > 0 and p_hn > 0
+    # half-normal concentrates near zero operands -> lower switching power
+    assert p_hn < p_uni

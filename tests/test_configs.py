@@ -1,0 +1,60 @@
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_configs_load_and_are_consistent(arch):
+    cfg = get_config(arch)
+    smoke = get_config(arch, smoke=True)
+    assert cfg.family == smoke.family
+    assert cfg.is_moe == smoke.is_moe
+    assert (cfg.has_ssm, cfg.cross_attn_every > 0) \
+        == (smoke.has_ssm, smoke.cross_attn_every > 0)
+    assert cfg.vocab % 256 == 0 or cfg.vocab in (2048, 32000, 64000, 65536)
+    if cfg.family not in ("rwkv",):
+        assert cfg.n_heads % cfg.n_kv == 0
+    assert cfg.param_count() > smoke.param_count()
+
+
+def test_assigned_dimensions_exact():
+    """The brief's numbers, verbatim (vocab modulo the documented padding)."""
+    expect = {
+        "hymba_1p5b": (32, 1600, 25, 5, 5504),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400),
+        "yi_6b": (32, 4096, 32, 4, 11008),
+        "llama3_405b": (126, 16384, 128, 8, 53248),
+        "yi_34b": (60, 7168, 56, 8, 20480),
+        "llama32_vision_11b": (40, 4096, 32, 8, 14336),
+        "arctic_480b": (35, 7168, 56, 8, 4864),
+        "llama4_scout_17b": (48, 5120, 40, 8, 8192),
+        "musicgen_large": (48, 2048, 32, 32, 8192),
+        "rwkv6_1p6b": (24, 2048, 32, 32, 7168),
+    }
+    for arch, (L, D, H, KV, F) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff) \
+            == (L, D, H, KV, F), arch
+
+
+def test_moe_configs():
+    a = get_config("arctic_480b")
+    assert a.n_experts == 128 and a.top_k == 2 and a.dense_residual
+    s = get_config("llama4_scout_17b")
+    assert s.n_experts == 16 and s.top_k == 1 and s.shared_expert
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_support_flags():
+    assert get_config("hymba_1p5b").supports_long
+    assert get_config("rwkv6_1p6b").supports_long
+    for a in ("yi_6b", "llama3_405b", "musicgen_large"):
+        assert not get_config(a).supports_long

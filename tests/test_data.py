@@ -1,0 +1,44 @@
+import numpy as np
+import pytest
+
+from repro.data import digits
+from repro.data.pipeline import token_batch
+
+
+def test_token_batch_deterministic_and_stateless():
+    a = token_batch(0, 5, 4, 64, 1000)
+    b = token_batch(0, 5, 4, 64, 1000)
+    assert (np.asarray(a["tokens"]) == np.asarray(b["tokens"])).all()
+    c = token_batch(0, 6, 4, 64, 1000)
+    assert not (np.asarray(a["tokens"]) == np.asarray(c["tokens"])).all()
+
+
+def test_token_batch_labels_shifted():
+    b = token_batch(1, 0, 2, 16, 100)
+    t, l = np.asarray(b["tokens"]), np.asarray(b["labels"])
+    assert (l[:, :-1] == t[:, 1:]).all()
+
+
+def test_token_zipf_head_heavy():
+    b = token_batch(0, 0, 16, 256, 5000)
+    t = np.asarray(b["tokens"]).ravel()
+    assert (t < 10).mean() > 0.5         # power-law head
+    assert t.max() < 5000 and t.min() >= 0
+
+
+def test_mnist_like_shapes_and_separability():
+    x, y = digits.mnist_like(400, seed=0)
+    assert x.shape == (400, 784) and y.shape == (400,)
+    assert x.min() >= 0 and x.max() <= 1
+    assert len(np.unique(y)) == 10
+    # nearest-centroid accuracy far above chance -> classes are learnable
+    cent = np.stack([x[y == d].mean(0) for d in range(10)])
+    pred = np.argmin(((x[:, None] - cent[None]) ** 2).sum(-1), axis=1)
+    assert (pred == y).mean() > 0.5
+
+
+def test_svhn_like_shapes():
+    x, y = digits.svhn_like(64, seed=1)
+    assert x.shape == (64, 32, 32, 3)
+    assert x.min() >= 0 and x.max() <= 1
+    assert len(np.unique(y)) >= 8

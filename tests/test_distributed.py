@@ -1,0 +1,148 @@
+"""Multi-device behaviours (8 forced host devices, run in a subprocess so
+the main pytest session keeps its single-device world)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    out = _run("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.data.pipeline import make_lm_data_fn
+        from repro.train import train_loop as TL
+        from repro.train.optimizer import OptConfig
+        from repro.launch.mesh import make_mesh
+
+        cfg = get_config('yi_6b', smoke=True)
+        shape = ShapeConfig('t', 'train', 32, 8)
+        tcfg = TL.TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=1,
+                                            decay_steps=20))
+        data = make_lm_data_fn(cfg, shape, seed=5)
+
+        def losses(mesh_ctx):
+            state = TL.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+            step = jax.jit(TL.make_train_step(cfg, tcfg))
+            out = []
+            for i in range(4):
+                state, m = step(state, data(i))
+                out.append(float(m['loss']))
+            return out
+
+        base = losses(None)
+        mesh = make_mesh((4, 2), ('data', 'model'))
+        with jax.sharding.set_mesh(mesh):
+            shd = losses(mesh)
+        print('BASE', base)
+        print('SHRD', shd)
+        assert all(abs(a - b) < 5e-2 for a, b in zip(base, shd)), (base, shd)
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_compressed_pod_mean_and_ef():
+    out = _run("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist.collectives import compressed_pod_mean
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+        g = {'w': jnp.stack([jnp.full((4, 64), 1.0),
+                             jnp.full((4, 64), 3.0)])}   # per-pod grads
+        ef = {'w': jnp.zeros((2, 4, 64))}
+        with jax.sharding.set_mesh(mesh):
+            gp = jax.device_put(g['w'], NamedSharding(mesh, P('pod')))
+            fn = jax.jit(lambda g, e: compressed_pod_mean(g, e))
+            mean, ef2 = fn({'w': gp}, ef)
+        np.testing.assert_allclose(np.asarray(mean['w']),
+                                   np.full((4, 64), 2.0), rtol=1e-2)
+        # int8 all-gather visible in HLO
+        with jax.sharding.set_mesh(mesh):
+            txt = jax.jit(lambda g, e: compressed_pod_mean(g, e)).lower(
+                {'w': jax.ShapeDtypeStruct((2, 4, 64), jnp.float32,
+                 sharding=NamedSharding(mesh, P('pod')))},
+                ef).compile().as_text()
+        assert 's8' in txt and ('all-gather' in txt or 'all-to-all' in txt), \
+            txt[:2000]
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_elastic_restart_different_mesh():
+    out = _run("""
+        import jax, numpy as np, tempfile
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train import checkpoint as ck
+        from repro.launch.mesh import make_mesh
+
+        tree = {'w': jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                'b': jnp.ones((8,))}
+        d = tempfile.mkdtemp()
+        mesh1 = make_mesh((4, 2), ('data', 'model'))
+        with jax.sharding.set_mesh(mesh1):
+            t1 = {'w': jax.device_put(tree['w'],
+                                      NamedSharding(mesh1, P('data', None))),
+                  'b': jax.device_put(tree['b'],
+                                      NamedSharding(mesh1, P()))}
+            ck.save(d, 1, t1)
+        # restore onto a DIFFERENT topology
+        mesh2 = make_mesh((2, 4), ('data', 'model'))
+        with jax.sharding.set_mesh(mesh2):
+            r = ck.restore(d, tree, sharding_fn=lambda p, s:
+                           NamedSharding(mesh2, P('model', None)
+                                         if len(s) == 2 else P()))
+        np.testing.assert_array_equal(np.asarray(r['w']),
+                                      np.asarray(tree['w']))
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_dryrun_smoke_tiny_mesh():
+    """The dry-run driver machinery works on a small mesh in-process."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.launch import specs
+        from repro.launch.mesh import make_mesh
+        from repro.nn import transformer as T
+        from repro.configs.base import ShapeConfig
+
+        cfg = get_config('yi_6b', smoke=True)
+        mesh = make_mesh((4, 2), ('data', 'model'))
+        shape = ShapeConfig('p', 'prefill', 64, 8)
+        with jax.sharding.set_mesh(mesh):
+            ps = specs.params_specs(cfg, mesh)
+            bs = specs.prefill_specs(cfg, shape, mesh)
+            fn = lambda p, b: T.prefill(cfg, p, b['tokens'])
+            compiled = jax.jit(fn).lower(ps, bs).compile()
+        assert compiled.cost_analysis()['flops'] > 0
+        print('OK')
+    """)
+    assert "OK" in out

@@ -1,0 +1,37 @@
+import numpy as np
+import pytest
+
+from repro.core import distributions as dist
+
+
+@pytest.mark.parametrize("pmf_fn", [
+    dist.uniform_pmf, dist.normal_pmf, dist.half_normal_pmf,
+    dist.signed_normal_pmf, dist.gaussian_kernel_pmf])
+def test_pmfs_normalized(pmf_fn):
+    p = pmf_fn(8)
+    assert p.shape == (256,)
+    assert np.isclose(p.sum(), 1.0)
+    assert (p >= 0).all()
+
+
+def test_empirical_pmf_signed_patterns():
+    vals = np.array([-1, -1, 0, 3])
+    p = dist.empirical_pmf(vals, w=8, signed=True, smooth=0.0)
+    assert np.isclose(p[255], 0.5)   # -1 -> pattern 255
+    assert np.isclose(p[0], 0.25)
+    assert np.isclose(p[3], 0.25)
+
+
+def test_vector_weights_structure():
+    pmf = dist.half_normal_pmf(4)
+    vw = dist.vector_weights(pmf, 4)
+    assert vw.shape == (256,)
+    assert np.isclose(vw.sum(), 1.0, atol=1e-6)
+    # row x has total weight pmf[x]
+    assert np.allclose(vw.reshape(16, 16).sum(1), pmf, atol=1e-6)
+
+
+def test_signed_normal_centered_at_zero():
+    p = dist.signed_normal_pmf(8, std=10.0)
+    assert p[0] == p.max()
+    assert p[1] > p[10] > p[100]

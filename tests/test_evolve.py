@@ -1,0 +1,45 @@
+"""Evolution-strategy behaviour: Eq. 1 fitness semantics + area descent."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cgp, distributions as dist, evolve as ev, netlist as nl
+
+
+@pytest.mark.parametrize("signed", [False, True])
+def test_short_evolution_reduces_area(signed):
+    w = 8
+    seed_nl = (nl.baugh_wooley_multiplier(w) if signed
+               else nl.array_multiplier(w))
+    g0 = cgp.genome_from_netlist(seed_nl)
+    area0 = float(cgp.area(g0, n_i=2 * w))
+    pmf = (dist.signed_normal_pmf(w, std=20.0) if signed
+           else dist.half_normal_pmf(w))
+    cfg = ev.EvolveConfig(w=w, signed=signed, generations=300,
+                          gens_per_jit_block=100, seed=1)
+    res = ev.evolve(cfg, g0, pmf, level=0.02)
+    assert res.wmed <= 0.02 + 1e-6          # constraint respected
+    assert res.area < area0                  # area minimized
+    assert res.area > 0
+
+
+def test_wmed_constraint_never_violated_in_result():
+    w = 8
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    cfg = ev.EvolveConfig(w=w, signed=False, generations=100,
+                          gens_per_jit_block=50, seed=3)
+    for level in (0.001, 0.05):
+        res = ev.evolve(cfg, g0, dist.uniform_pmf(w), level=level)
+        assert res.wmed <= level + 1e-6
+
+
+def test_tighter_level_costs_more_area():
+    w = 8
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    pmf = dist.uniform_pmf(w)
+    cfg = ev.EvolveConfig(w=w, signed=False, generations=400,
+                          gens_per_jit_block=100, seed=7)
+    tight = ev.evolve(cfg, g0, pmf, level=0.0005)
+    loose = ev.evolve(cfg, g0, pmf, level=0.1)
+    assert loose.area <= tight.area

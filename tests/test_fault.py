@@ -1,0 +1,73 @@
+"""Fault tolerance: bitwise-identical recovery after injected failure, and
+the straggler deadline policy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_lm_data_fn
+from repro.train import train_loop as TL
+from repro.train.fault import (FailureInjector, SimulatedFailure,
+                               StepMonitor, run_with_recovery)
+from repro.train.optimizer import OptConfig
+
+CFG = get_config("yi_6b", smoke=True)
+SHAPE = ShapeConfig("t", "train", 32, 4)
+TCFG = TL.TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, decay_steps=40))
+
+
+def _final_params(tmp, fail_at, n_steps=14):
+    state = TL.init_train_state(jax.random.PRNGKey(0), CFG, TCFG)
+    step = jax.jit(TL.make_train_step(CFG, TCFG))
+    data = make_lm_data_fn(CFG, SHAPE, seed=11)
+    injector = FailureInjector((fail_at,) if fail_at else ())
+    state, hist = run_with_recovery(
+        step, n_steps=n_steps, ckpt_every=5, ckpt_root=str(tmp),
+        state=state, data_fn=data, injector=injector)
+    return state["params"], hist
+
+
+def test_recovery_bitwise_identical(tmp_path):
+    p_clean, h_clean = _final_params(tmp_path / "clean", None)
+    p_fail, h_fail = _final_params(tmp_path / "fail", 8)
+    for a, b in zip(jax.tree.leaves(p_clean), jax.tree.leaves(p_fail)):
+        assert (np.asarray(a) == np.asarray(b)).all(), \
+            "recovered run diverged from uninterrupted run"
+
+
+def test_injector_raises_once():
+    inj = FailureInjector((3,))
+    inj.check(2)
+    with pytest.raises(SimulatedFailure):
+        inj.check(3)
+    inj.check(3)  # second pass does not re-fire
+
+
+def test_too_many_failures_raises(tmp_path):
+    state = TL.init_train_state(jax.random.PRNGKey(0), CFG, TCFG)
+    step = jax.jit(TL.make_train_step(CFG, TCFG))
+    data = make_lm_data_fn(CFG, SHAPE, seed=1)
+
+    class AlwaysFail(FailureInjector):
+        def check(self, step):
+            raise SimulatedFailure("flaky node")
+
+    with pytest.raises(SimulatedFailure):
+        run_with_recovery(step, n_steps=6, ckpt_every=2,
+                          ckpt_root=str(tmp_path), state=state,
+                          data_fn=data, injector=AlwaysFail(),
+                          max_retries=3)
+
+
+def test_straggler_monitor():
+    mon = StepMonitor(deadline_factor=3.0)
+    hits = []
+    mon.on_straggler = lambda s, dt: hits.append(s)
+    for s, dt in enumerate([1.0, 1.1, 0.9, 1.0, 5.0, 1.0]):
+        mon.observe(s, dt)
+    assert mon.stragglers == [4] and hits == [4]
+    # EWMA not poisoned by the straggler
+    assert mon._ewma < 1.5

@@ -1,0 +1,29 @@
+import numpy as np
+import pytest
+
+from repro.apps import gaussian_filter as gf
+from repro.core import luts
+
+
+def test_exact_lut_is_reference():
+    imgs = gf.make_images(3, size=32)
+    exact = luts.truncated_multiplier(8, 0).lut
+    p = gf.evaluate_multiplier(exact, imgs, exact)
+    assert p >= 99.0
+
+
+def test_truncation_degrades_psnr_monotonically():
+    imgs = gf.make_images(5, size=32)
+    exact = luts.truncated_multiplier(8, 0).lut
+    psnrs = [gf.evaluate_multiplier(luts.truncated_multiplier(8, t).lut,
+                                    imgs, exact) for t in (0, 3, 6, 9)]
+    assert all(a >= b - 0.5 for a, b in zip(psnrs, psnrs[1:]))
+    assert psnrs[0] > psnrs[-1]
+
+
+def test_filter_preserves_range():
+    imgs = gf.make_images(2, size=24)
+    exact = luts.truncated_multiplier(8, 0).lut
+    out = gf.filter_image(imgs[0], exact)
+    assert out.dtype == np.uint8
+    assert out.shape == (22, 22)

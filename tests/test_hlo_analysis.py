@@ -1,0 +1,91 @@
+"""Static HLO analyzer: trip-count multiplication, dot FLOPs, collectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_text, parse_hlo
+
+
+def test_scan_trip_count_multiplied():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=13)
+        return y
+
+    x = jnp.zeros((8, 64), jnp.bfloat16)
+    w = jnp.zeros((64, 64), jnp.bfloat16)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    r = analyze_text(txt)
+    per_mm = 2 * 8 * 64 * 64
+    assert 13 * per_mm <= r["flops"] <= 13 * per_mm * 1.2
+
+
+def test_dot_flops_exact():
+    f = lambda a, b: a @ b
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    assert analyze_text(txt)["flops"] == 2 * 128 * 256 * 512
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bij,bjk->bik", a, b)
+    a = jnp.zeros((4, 32, 64), jnp.float32)
+    b = jnp.zeros((4, 64, 16), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    assert analyze_text(txt)["flops"] == 2 * 4 * 32 * 64 * 16
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d * 2.0 + 1.0, None
+            d, _ = jax.lax.scan(inner, c, None, length=5)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jnp.zeros((128,), jnp.float32)
+    txt = jax.jit(f).lower(x).compile().as_text()
+    r = analyze_text(txt)
+    # 3 * 5 * (mul + add) * 128 elements = 3840 elementwise flops minimum
+    assert r["flops"] >= 3 * 5 * 2 * 128
+
+
+FIXTURE = """
+HloModule fixture, entry_computation_layout={()->f32[]}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  ROOT %out = f32[64,128]{1,0} add(%ag, %p0)
+}
+"""
+
+
+def test_collective_from_fixture():
+    r = analyze_text(FIXTURE, devices_per_pod=4)
+    assert len(r["collectives"]) == 1
+    c = r["collectives"][0]
+    assert c["op"] == "all-reduce"
+    assert c["group_size"] == 4
+    assert not c["crosses_pod"]
+    # ring all-reduce wire bytes: 2 * size * (n-1)/n
+    assert np.isclose(c["wire_bytes"], 2 * 64 * 128 * 4 * 3 / 4)
+
+
+def test_pod_crossing_fixture():
+    txt = FIXTURE.replace("{{0,1,2,3},{4,5,6,7}}", "{{0,4},{1,5},{2,6},{3,7}}")
+    r = analyze_text(txt, devices_per_pod=4)
+    assert r["collectives"][0]["crosses_pod"]
+    assert r["dcn_wire_bytes"] > 0

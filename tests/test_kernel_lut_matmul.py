@@ -1,0 +1,54 @@
+"""Pallas lut_matmul kernel vs the pure-jnp oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import luts, wmed
+from repro.kernels.lut_matmul.ops import lut_matmul, lut_matmul_f32
+from repro.kernels.lut_matmul.ref import lut_matmul_ref
+from repro.core.approx_matmul import ApproxMul
+from repro.quant.fixed_point import calibrate
+
+EXACT_LUT = jnp.asarray(wmed.exact_products(8, True).astype(np.int32))
+
+
+@pytest.mark.parametrize("shape", [
+    (16, 16, 16), (128, 128, 128), (64, 256, 32), (100, 70, 50),
+    (8, 8, 8), (257, 129, 65)])
+def test_kernel_matches_ref_shapes(shape):
+    M, K, N = shape
+    a = jax.random.randint(jax.random.PRNGKey(0), (M, K), 0, 256)
+    b = jax.random.randint(jax.random.PRNGKey(1), (K, N), 0, 256)
+    assert (lut_matmul(a, b, EXACT_LUT) == lut_matmul_ref(a, b, EXACT_LUT)).all()
+
+
+@pytest.mark.parametrize("w", [4, 6, 8])
+def test_kernel_width_sweep(w):
+    lut = jnp.asarray(wmed.exact_products(w, False).astype(np.int32))
+    n = 1 << w
+    a = jax.random.randint(jax.random.PRNGKey(2), (32, 48), 0, n)
+    b = jax.random.randint(jax.random.PRNGKey(3), (48, 16), 0, n)
+    assert (lut_matmul(a, b, lut, w=w)
+            == lut_matmul_ref(a, b, lut, w=w)).all()
+
+
+def test_kernel_with_approximate_lut():
+    t = luts.truncated_multiplier(8, 5, signed=True)
+    lut = jnp.asarray(t.lut.reshape(-1))
+    a = jax.random.randint(jax.random.PRNGKey(4), (64, 64), 0, 256)
+    b = jax.random.randint(jax.random.PRNGKey(5), (64, 64), 0, 256)
+    assert (lut_matmul(a, b, lut) == lut_matmul_ref(a, b, lut)).all()
+
+
+def test_f32_bridge_and_grads():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 4)) * 0.1
+    xqp, wqp = calibrate(np.asarray(x)), calibrate(np.asarray(w))
+    mul = ApproxMul(EXACT_LUT, 8)
+    y = lut_matmul_f32(x, w, mul, xqp, wqp)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.05
+    g = jax.grad(lambda x: jnp.sum(lut_matmul_f32(x, w, mul, xqp, wqp)))(x)
+    assert bool(jnp.isfinite(g).all())

@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import layers as L
+
+
+def test_conv2d_matches_lax_conv():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 12, 12, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (5, 5, 3, 7))
+    got = L.conv2d(x, w)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pools():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    mp = L.max_pool(x)
+    ap = L.avg_pool(x)
+    assert mp[0, 0, 0, 0] == 5.0
+    assert ap[0, 0, 0, 0] == (0 + 1 + 4 + 5) / 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_rms_norm_unit_scale(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * 3.0
+    y = L.rms_norm(x, jnp.ones((32,)))
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, -1))
+    assert bool(jnp.all(jnp.abs(rms - 1.0) < 1e-2))
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    cos, sin = L.rope_freqs(16, 32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 2, 16))
+    y = L.apply_rope(x, jnp.asarray(cos), jnp.asarray(sin))
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jnp.ones((1, 32, 1, 16))
+    qr = L.apply_rope(q, jnp.asarray(cos), jnp.asarray(sin))
+    d1 = jnp.sum(qr[0, 5, 0] * qr[0, 3, 0])
+    d2 = jnp.sum(qr[0, 25, 0] * qr[0, 23, 0])
+    assert abs(float(d1 - d2)) < 1e-3
+
+
+def test_dense_mac_modes_close():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.2
+    y_f = L.dense(x, w, L.MacCtx(mode="exact_bf16"))
+    from repro.quant.fixed_point import calibrate
+    from repro.core.approx_matmul import exact_mul
+    mac8 = L.MacCtx(mode="int8", x_qp=calibrate(np.asarray(x)),
+                    w_qp=calibrate(np.asarray(w)))
+    y_8 = L.dense(x, w, mac8)
+    mac_lut = L.MacCtx(mode="lut", mul=exact_mul(),
+                       x_qp=mac8.x_qp, w_qp=mac8.w_qp)
+    y_l = L.dense(x, w, mac_lut)
+    ref = x @ w
+    for y in (y_f, y_8, y_l):
+        rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.06
+    # int8 emulation and exact-LUT agree bit-for-bit after dequant
+    np.testing.assert_allclose(np.asarray(y_8), np.asarray(y_l),
+                               rtol=1e-5, atol=1e-5)

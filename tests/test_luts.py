@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+
+from repro.core import cgp, distributions as dist, luts, netlist as nl, wmed
+
+
+def test_genome_to_lut_exact():
+    g = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
+    lut = luts.genome_to_lut(g, 8, signed=True)
+    v = np.arange(65536)
+    n = 256
+    xp, yp = v >> 8, v & 255
+    x = np.where(xp < 128, xp, xp - n)
+    y = np.where(yp < 128, yp, yp - n)
+    assert (lut.reshape(-1) == x * y).all()
+
+
+def test_truncated_multiplier_t0_is_exact():
+    m = luts.truncated_multiplier(8, 0)
+    exact = wmed.exact_products(8, False)
+    assert (m.lut.reshape(-1) == exact).all()
+    assert m.wmed == 0.0
+
+
+def test_truncation_monotone_error_and_area():
+    ms = [luts.truncated_multiplier(8, t) for t in (0, 2, 4, 6)]
+    for a, b in zip(ms, ms[1:]):
+        assert b.med >= a.med
+        assert b.area_um2 <= a.area_um2
+
+
+def test_bam_breaks_reduce_cost():
+    full = luts.broken_array_multiplier(8, hbl=7, vbl=0)
+    broken = luts.broken_array_multiplier(8, hbl=5, vbl=4)
+    assert broken.area_um2 < full.area_um2
+    assert broken.med >= full.med
+
+
+def test_zero_guarded():
+    base = luts.truncated_multiplier(8, 4)
+    zg = luts.zero_guarded(base)
+    assert (zg.lut[0, :] == 0).all() and (zg.lut[:, 0] == 0).all()
+    assert zg.area_um2 > base.area_um2
+
+
+def test_characterize_and_roundtrip(tmp_path):
+    g = cgp.genome_from_netlist(nl.array_multiplier(8))
+    m = luts.characterize("exact8", g, 8, False, dist.uniform_pmf(8))
+    assert m.wmed == 0.0 and m.area_um2 > 0 and m.power_nw > 0
+    p = str(tmp_path / "lib.npz")
+    luts.save_library(p, [m])
+    lib = luts.load_library(p)
+    assert lib[0].name == "exact8"
+    assert (lib[0].lut == m.lut).all()
+    assert np.isclose(lib[0].pdp_fj, m.pdp_fj)

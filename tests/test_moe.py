@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import moe as M
+
+
+def _params(d=16, f=32, e=4, seed=0):
+    return M.init_moe(jax.random.PRNGKey(seed), d, f, e)
+
+
+def test_moe_shapes_and_finite():
+    p = _params()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, aux = M.moe_ffn(p, x, top_k=2)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux["load_balance"]) > 0
+
+
+def test_top1_equals_manual_expert_selection():
+    """With generous capacity, top-1 MoE == routing each token through its
+    argmax expert with gate weight 1."""
+    p = _params(e=4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 16))
+    y, _ = M.moe_ffn(p, x, top_k=1, capacity_factor=16.0)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    eidx = jnp.argmax(logits, -1)[0]
+    wp = p["experts"]
+    manual = []
+    for t in range(16):
+        e = int(eidx[t])
+        xt = x[0, t]
+        g = xt @ wp["w_in"][e]
+        u = xt @ wp["w_up"][e]
+        h = jax.nn.silu(g) * u
+        manual.append(h @ wp["w_out"][e])
+    manual = jnp.stack(manual)[None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(manual),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_tokens():
+    """With capacity 0-ish, output collapses toward zero (tokens dropped)."""
+    p = _params()
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 16))
+    y_full, _ = M.moe_ffn(p, x, top_k=1, capacity_factor=8.0)
+    y_tiny, _ = M.moe_ffn(p, x, top_k=1, capacity_factor=0.10)
+    assert float(jnp.linalg.norm(y_tiny)) < float(jnp.linalg.norm(y_full))
+
+
+def test_moe_grads_flow_to_router_and_experts():
+    p = _params()
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 16))
+
+    def loss(p):
+        y, aux = M.moe_ffn(p, x, top_k=2)
+        return jnp.sum(y ** 2) + 0.01 * aux["load_balance"]
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).max()) > 0
+    assert float(jnp.abs(g["experts"]["w_in"]).max()) > 0

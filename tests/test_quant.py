@@ -1,0 +1,51 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.fixed_point import (QuantParams, calibrate, decode_int8,
+                                     dequantize, encode_int8, fake_quant,
+                                     quantize, quantize_pattern)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.01, 100.0), st.integers(0, 2 ** 31 - 1))
+def test_calibrate_covers_range(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, scale, 1000)
+    qp = calibrate(x, bits=8)
+    q = quantize(jnp.asarray(x), qp)
+    # no saturation beyond the extreme code for max-abs calibration
+    assert int(jnp.sum(jnp.abs(q) >= 127)) <= 2
+
+
+def test_quantize_roundtrip_error_bound():
+    qp = QuantParams(8, 5, True)
+    x = jnp.linspace(-3.9, 3.9, 1001)
+    err = jnp.abs(dequantize(quantize(x, qp), qp) - x)
+    assert float(err.max()) <= qp.scale / 2 + 1e-7
+
+
+def test_quantize_pattern_twos_complement():
+    qp = QuantParams(8, 0, True)
+    pats = quantize_pattern(jnp.asarray([-1.0, -128.0, 5.0]), qp)
+    assert pats.tolist() == [255, 128, 5]
+
+
+def test_fake_quant_ste_gradient():
+    qp = QuantParams(8, 5, True)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, qp)))(
+        jnp.asarray([0.1, 3.0, 100.0]))
+    assert g.tolist() == [1.0, 1.0, 0.0]  # out-of-range clipped to zero grad
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_int8_codec_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (16, 64)).astype(np.float32))
+    codes, scale = encode_int8(x, axis=-1)
+    err = jnp.abs(decode_int8(codes, scale) - x)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert bool((err <= amax / 127.0 * 0.5 + 1e-6).all())

@@ -1,0 +1,44 @@
+import numpy as np
+import pytest
+
+from repro.core import distributions as dist, luts, selection
+
+
+@pytest.fixture(scope="module")
+def library():
+    lib = [luts.truncated_multiplier(8, t, signed=True) for t in (0, 3, 6)]
+    lib += [luts.broken_array_multiplier(8, 6, 4, signed=True)]
+    return lib
+
+
+def test_rescore_exact_is_zero(library):
+    exact = library[0]  # trunc0 == exact
+    assert selection.rescore(exact, dist.signed_normal_pmf(8)) == 0.0
+
+
+def test_selection_respects_budget(library):
+    pmfs = {"layer0": dist.signed_normal_pmf(8, std=5.0),
+            "layer1": dist.signed_normal_pmf(8, std=40.0)}
+    sel = selection.select_per_layer(library, pmfs, budget=1e-3)
+    for name, m in sel.items():
+        assert selection.rescore(m, pmfs[name]) <= 1e-3
+
+
+def test_tighter_budget_costs_more_power(library):
+    pmfs = {"l": dist.signed_normal_pmf(8, std=20.0)}
+    loose = selection.select_per_layer(library, pmfs, budget=0.05)["l"]
+    tight = selection.select_per_layer(library, pmfs, budget=1e-5)["l"]
+    assert tight.power_nw >= loose.power_nw
+
+
+def test_fallback_when_infeasible(library):
+    pmfs = {"l": dist.uniform_pmf(8)}
+    sel = selection.select_per_layer(library[2:], pmfs, budget=1e-9)
+    assert sel["l"] is not None  # lowest-WMED fallback
+
+
+def test_library_savings(library):
+    exact = library[0]
+    sel = {"a": library[2], "b": library[1]}
+    s = selection.library_savings(sel, exact, {"a": 100, "b": 50})
+    assert 0.0 < s < 1.0

@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as sh
+from repro.launch import specs
+from repro.launch.mesh import make_mesh
+
+
+def test_shard_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = sh.shard(x, "batch", "tp")
+    assert (x == y).all()
+
+
+def test_logical_rules_dedupe():
+    mesh = make_mesh((1,), ("model",))
+    with jax.sharding.set_mesh(mesh):
+        with sh.rules({"seq": "model"}):
+            spec = sh.logical_to_pspec(("batch", "seq", "vocab"))
+            # both seq and vocab map to 'model'; only the first wins
+            assert spec == P(None, "model", None)
+
+
+def test_param_pspec_patterns():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with jax.sharding.set_mesh(mesh):
+        assert sh.param_pspec("layers/ffn/w_in", (64, 256)) \
+            == P("data", "model")
+        assert sh.param_pspec("layers/ffn/w_out", (256, 64)) \
+            == P("model", "data")
+        assert sh.param_pspec("embed", (1024, 64)) == P("model", "data")
+        assert sh.param_pspec("layers/ln1", (64,)) == P()
+        assert sh.param_pspec("layers/moe/experts/w_in", (2, 8, 64, 256)) \
+            == P(None, "model", "data", None)
+        # stacked (L, in, out)
+        assert sh.param_pspec("layers/attn/wq", (4, 64, 256)) \
+            == P(None, "data", "model")
+
+
+def test_sds_sanitize_drops_nondivisible():
+    mesh = make_mesh((1,), ("model",))  # size-1 axes always divide
+    s = specs._sanitize(P("model", None), (7, 4), mesh)
+    assert s == P("model", None)        # 7 % 1 == 0
+    mesh4 = make_mesh((1, 1), ("data", "model"))
+    s2 = specs._sanitize(P(("data", "model"), None), (6, 4), mesh4)
+    assert s2 == P(("data", "model"), None) or s2 is not None

@@ -1,0 +1,90 @@
+"""End-to-end behaviour of the paper's system (scaled-down budgets).
+
+Covers the full WMED->CGP->LUT->NN path in one flow: evolve an approximate
+multiplier under the MLP's weight distribution, integrate it into every MAC
+of the classifier, observe graceful accuracy degradation, recover with
+fine-tuning (paper Table I semantics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import nn_casestudy as cs
+from repro.core import cgp, distributions as dist, evolve as ev
+from repro.core import luts, netlist as nl
+from repro.data import digits
+from repro.nn import mlp_mnist
+
+
+@pytest.fixture(scope="module")
+def trained_mlp():
+    x, y = digits.mnist_like(1500, seed=0)
+    xtr, ytr, xte, yte = x[:1200], y[:1200], x[1200:], y[1200:]
+    params = cs.train_float_mlp(xtr, ytr, epochs=4, seed=0)
+    return params, xtr, ytr, xte, yte
+
+
+def test_full_paper_pipeline(trained_mlp):
+    params, xtr, ytr, xte, yte = trained_mlp
+    from repro.quant.fixed_point import calibrate
+    acc_f = mlp_mnist.accuracy(params, xte, yte)
+    assert acc_f > 0.6, f"float model too weak: {acc_f}"
+
+    x_qp = calibrate(np.asarray(xtr[:256]))
+    w_all = np.concatenate([np.asarray(l).ravel()
+                            for l in jax.tree.leaves(params) if l.ndim >= 2])
+    w_qp = calibrate(w_all)
+    exact = luts.exact_multiplier(8, signed=True)
+    acc8 = mlp_mnist.accuracy(params, xte, yte,
+                              mac=cs.make_mac(exact, x_qp, w_qp))
+    assert acc8 > acc_f - 0.05, "int8 quantization broke the model"
+
+    # evolve a tight-WMED multiplier under the joint (weight, activation)
+    # distribution with the bias constraint (see DESIGN.md §7)
+    from repro.core import distributions as dist
+    from repro.quant.fixed_point import quantize
+    import numpy as _np
+    pmf = cs.weight_pmf(params, w_qp)
+    act = _np.mod(_np.asarray(quantize(jnp.asarray(xtr[:256]), x_qp)),
+                  256).ravel()
+    vw = dist.vector_weights_joint(pmf, dist.empirical_pmf(act), 8)
+    cfg = ev.EvolveConfig(w=8, signed=True, generations=400,
+                          gens_per_jit_block=100, seed=0, bias_frac=0.25)
+    g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
+    res = ev.evolve(cfg, g0, pmf, level=1e-3, vec_weights=vw)
+    mult = luts.characterize("e", cgp.Genome(jnp.asarray(res.genome.nodes),
+                                             jnp.asarray(res.genome.outs)),
+                             8, True, pmf)
+    assert mult.power_nw < exact.power_nw      # cheaper circuit (power)
+    mac = cs.make_mac(mult, x_qp, w_qp)
+    acc_apx = mlp_mnist.accuracy(params, xte, yte, mac=mac)
+    assert acc_apx > acc8 - 0.15, \
+        "0.1% WMED should roughly preserve accuracy"
+
+    # fine-tuning recovers (or at least does not regress)
+    p_ft = cs.finetune(mlp_mnist.mlp300_forward, params, xtr, ytr, mac,
+                       iters=10)
+    acc_ft = mlp_mnist.accuracy(p_ft, xte, yte, mac=mac)
+    assert acc_ft >= acc_apx - 0.02
+
+
+def test_wmed_correlates_with_accuracy(trained_mlp):
+    """The paper's premise: lower WMED (under the right D) -> higher NN
+    accuracy, at matched design points."""
+    params, xtr, ytr, xte, yte = trained_mlp
+    from repro.quant.fixed_point import calibrate
+    x_qp = calibrate(np.asarray(xtr[:256]))
+    w_all = np.concatenate([np.asarray(l).ravel()
+                            for l in jax.tree.leaves(params) if l.ndim >= 2])
+    w_qp = calibrate(w_all)
+    accs, wmeds = [], []
+    for t in (2, 5, 7):
+        m = luts.truncated_multiplier(8, t, signed=True)
+        acc = mlp_mnist.accuracy(params, xte, yte,
+                                 mac=cs.make_mac(m, x_qp, w_qp))
+        accs.append(acc)
+        wmeds.append(m.med)
+    assert wmeds[0] < wmeds[1] < wmeds[2]
+    assert accs[0] >= accs[2] - 0.02, (accs, wmeds)

@@ -1,0 +1,78 @@
+"""WMED metric properties (paper Sec. III-A), incl. hypothesis invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributions as dist, wmed
+
+
+W = 6  # small width keeps hypothesis fast; 8-bit covered elsewhere
+V = 1 << (2 * W)
+EXACT = wmed.exact_products(W, signed=False).astype(np.int32)
+
+
+def _wmed_of(approx, pmf):
+    return float(wmed.wmed(jnp.asarray(approx), jnp.asarray(EXACT),
+                           jnp.asarray(dist.vector_weights(pmf, W)), W))
+
+
+def test_exact_multiplier_has_zero_wmed():
+    for pmf in (dist.uniform_pmf(W), dist.half_normal_pmf(W, std=10)):
+        assert _wmed_of(EXACT, pmf) == 0.0
+
+
+def test_wmed_uniform_equals_med():
+    rng = np.random.default_rng(0)
+    approx = EXACT + rng.integers(-50, 50, V)
+    m1 = _wmed_of(approx, dist.uniform_pmf(W))
+    m2 = float(wmed.med(jnp.asarray(approx), jnp.asarray(EXACT), W))
+    assert np.isclose(m1, m2, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(2.0, 30.0))
+def test_wmed_bounds(seed, std):
+    rng = np.random.default_rng(seed)
+    approx = rng.integers(0, (1 << (2 * W)) - 1, V)
+    pmf = dist.half_normal_pmf(W, std=std)
+    val = _wmed_of(approx, pmf)
+    assert 0.0 <= val <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_wmed_weighting_direction(seed):
+    """Errors placed on low-weight x rows must cost less than the same
+    errors on high-weight rows."""
+    rng = np.random.default_rng(seed)
+    pmf = dist.half_normal_pmf(W, std=6.0)   # mass at small x
+    err = rng.integers(1, 200)
+    hi = EXACT.copy().reshape(1 << W, 1 << W)
+    lo = hi.copy()
+    hi[0] += err       # error on the most likely x row
+    lo[-1] += err      # same error on the least likely x row
+    assert _wmed_of(hi.reshape(-1), pmf) > _wmed_of(lo.reshape(-1), pmf)
+
+
+def test_worst_case_and_error_rate():
+    approx = EXACT.copy()
+    approx[7] += 123
+    assert int(wmed.worst_case_error(jnp.asarray(approx),
+                                     jnp.asarray(EXACT))) == 123
+    er = float(wmed.error_rate(jnp.asarray(approx), jnp.asarray(EXACT)))
+    assert np.isclose(er, 1.0 / V)
+
+
+def test_sampled_wmed_approximates_exhaustive():
+    rng = np.random.default_rng(1)
+    approx = (EXACT + rng.integers(-100, 100, V)).astype(np.int32)
+    pmf = dist.half_normal_pmf(W, std=12.0)
+    exact_val = _wmed_of(approx, pmf)
+    est = float(wmed.sampled_wmed(
+        jax.random.PRNGKey(0), jnp.asarray(approx), jnp.asarray(EXACT),
+        jnp.asarray(pmf.astype(np.float32)), jnp.float32(wmed.p_max(W)),
+        n_samples=200_000))
+    assert np.isclose(est, exact_val, rtol=0.05, atol=1e-6)
