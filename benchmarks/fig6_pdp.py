@@ -39,13 +39,19 @@ def run():
          f"mass_within_pm10codes={centre_mass:.3f}")
 
     exact = luts.exact_multiplier(8, True)
-    for level in LEVELS:
+    # every (level, repeat) pair is one lane of a single batched program.
+    # NOTE: lane seeds follow 100 + 1000*level_index + rep, so per-run
+    # numbers differ from the pre-batching script (seed 100 + rep shared
+    # across levels); the box-plot statistics are seed-agnostic.
+    cfg = ev.BatchedEvolveConfig(w=8, signed=True, generations=600,
+                                 gens_per_jit_block=200, seed=100,
+                                 levels=LEVELS, repeats=REPEATS)
+    g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
+    batch = ev.evolve_batched(cfg, g0, pmf)
+    for li, level in enumerate(LEVELS):
         pdps = []
         for rep in range(REPEATS):
-            cfg = ev.EvolveConfig(w=8, signed=True, generations=600,
-                                  gens_per_jit_block=200, seed=100 + rep)
-            g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
-            r = ev.evolve(cfg, g0, pmf, level)
+            r = batch.lane(li * REPEATS + rep)
             m = luts.characterize(f"l{level}_r{rep}",
                                   cgp.Genome(jnp.asarray(r.genome.nodes),
                                              jnp.asarray(r.genome.outs)),

@@ -32,14 +32,20 @@ def run():
     # ---- full fitness (eval + WMED + area) over a lambda=4 population ----
     exact = jnp.asarray(wmed.exact_products(8, True).astype(np.int32))
     vw = jnp.asarray(dist.vector_weights(dist.signed_normal_pmf(8), 8))
-    block, fit = ev.make_step(
+    block, fit = ev.make_batched_step(
         ev.EvolveConfig(w=8, signed=True, lam=4, gens_per_jit_block=10),
-        exact, vw, 0.01, planes)
+        exact, planes)
     key = jax.random.PRNGKey(0)
-    _, e0, a0 = fit(g, planes)
-    us = time_fn(lambda: block(g, a0, key), iters=3, warmup=1)
-    emit("micro/evolve_10gens_lam4", us,
-         f"gens_per_s={10 / (us / 1e6):.1f}")
+    for lanes in (1, 8):
+        parents = cgp.tile_genome(g, lanes)
+        levels = jnp.full((lanes,), 0.01, jnp.float32)
+        keys = jnp.stack([jax.random.PRNGKey(i) for i in range(lanes)])
+        _, e0, a0 = jax.vmap(lambda gg, lv: fit(gg, planes, vw, lv),
+                             in_axes=(0, 0))(parents, levels)
+        us = time_fn(lambda: block(parents, a0, keys, vw, levels),
+                     iters=3, warmup=1)
+        emit(f"micro/evolve_10gens_lam4_lanes{lanes}", us,
+             f"lane_gens_per_s={10 * lanes / (us / 1e6):.1f}")
 
     # ---- LUT matmul emulation modes ----
     M, K, N = 256, 784, 300   # the MLP's first layer

@@ -183,13 +183,18 @@ def run_case_study(model: str = "mlp", *, n_train=6000, n_test=1500,
     vw = dist.vector_weights_joint(pmf, pmf_act, 8)
 
     results: List[CaseStudyResult] = []
-    cfg = ev.EvolveConfig(w=8, signed=True, generations=generations,
-                          gens_per_jit_block=min(250, generations),
-                          seed=seed, bias_frac=0.25)
+    # one lane per target level: the whole error ladder evolves inside a
+    # single jitted scan (one compile) instead of len(levels) serial runs
+    cfg = ev.BatchedEvolveConfig(w=8, signed=True, generations=generations,
+                                 gens_per_jit_block=min(250, generations),
+                                 seed=seed, bias_frac=0.25,
+                                 levels=tuple(float(l) for l in levels),
+                                 repeats=1)
     seed_nl = nl_mod.baugh_wooley_multiplier(8)
-    for level in levels:
-        g0 = cgp_mod.genome_from_netlist(seed_nl)
-        res = ev.evolve(cfg, g0, pmf, level, vec_weights=vw)
+    g0 = cgp_mod.genome_from_netlist(seed_nl)
+    batch = ev.evolve_batched(cfg, g0, pmf, vec_weights=vw)
+    for li, level in enumerate(levels):
+        res = batch.lane(li)
         mult = luts_mod.characterize(f"evolved_{level}",
                                      cgp_mod.Genome(jnp.asarray(res.genome.nodes),
                                                     jnp.asarray(res.genome.outs)),

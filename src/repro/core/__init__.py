@@ -2,5 +2,9 @@
 
 from repro.core import cellcost, cgp, distributions, luts, netlist, wmed  # noqa: F401
 from repro.core.cgp import Genome  # noqa: F401
-from repro.core.evolve import EvolveConfig, EvolveResult, pareto_sweep  # noqa: F401
+# NOTE: the `evolve` *function* is deliberately not re-exported here -- it
+# would shadow the `repro.core.evolve` submodule attribute.
+from repro.core.evolve import (  # noqa: F401
+    BatchedEvolveConfig, BatchedEvolveResult, EvolveConfig, EvolveResult,
+    evolve_batched, pareto_sweep, pareto_sweep_batched)
 from repro.core.luts import MultLib  # noqa: F401

@@ -40,6 +40,23 @@ def genome_from_netlist(netlist, c: int | None = None) -> Genome:
     return Genome(jnp.asarray(nodes), jnp.asarray(outs))
 
 
+def tile_genome(genome: Genome, n: int) -> Genome:
+    """Replicate one genome along a new leading lane axis: (c,3) -> (n,c,3).
+
+    The batched evolution engine carries its population as a single stacked
+    pytree; ``jnp.repeat`` (rather than ``broadcast_to``) materializes the
+    lanes so each one can diverge under per-lane mutation inside ``scan``.
+    """
+    return jax.tree.map(lambda x: jnp.repeat(jnp.asarray(x)[None], n, axis=0),
+                        genome)
+
+
+def stack_genomes(genomes) -> Genome:
+    """Stack same-shape genomes into one lane-batched Genome pytree."""
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *genomes)
+
+
 # ---------------------------------------------------------------- evaluate
 
 FULL = jnp.uint32(0xFFFFFFFF)

@@ -5,19 +5,31 @@ Fitness (Eq. 1):   F(M~) = area(M~)      if WMED_D(M~) <= E_i
 minimized under a target error level E_i.  Repeating the run for a ladder of
 E_i levels yields the error/area Pareto front (paper Figs. 3 & 6).
 
-The whole generation step -- mutate lambda offspring, bit-parallel evaluate,
-WMED + active-area fitness, parent replacement with neutral drift (offspring
-preferred on ties, the standard CGP rule) -- is one jitted function; the
-driver batches G generations inside a single ``lax.scan`` to amortize
-dispatch on CPU and XLA:TPU alike.
+Two execution modes share one generation step:
+
+* **Lane-batched** (the fast path, DESIGN.md §9): the paper's outer loop --
+  one independent evolution per (target level, repeat) pair -- is
+  embarrassingly parallel, so all lanes advance together.  Per-lane parents,
+  fitnesses, RNG keys, levels and (optionally) weights are stacked along a
+  leading lane axis; the generation step is ``vmap``-ed across lanes and G
+  generations run inside a single jitted ``lax.scan`` block.  One
+  compilation and one device program replace ``len(levels) x repeats``
+  sequential dispatches.
+* **Serial** (``evolve``): a thin wrapper over a 1-lane batch, kept for
+  API compatibility and as the baseline for
+  ``benchmarks/bench_batched_sweep.py``.
+
+Per-lane RNG streams are derived exactly as the historical serial driver
+did (seed -> PRNGKey -> per-block split -> per-generation split), so a lane
+of a batched run is bit-identical to a serial run with the same seed --
+``tests/test_evolve_batched.py`` locks this in.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Callable, Sequence
+from typing import Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +39,14 @@ from repro.core import cellcost as cc
 from repro.core import cgp as cgp_mod
 from repro.core import distributions as dist
 from repro.core import netlist as nl_mod
+from repro.core import selection as sel_mod
 from repro.core import wmed as wmed_mod
 from repro.core.cgp import Genome
+
+
+# Paper's 14 target WMED levels (percent ladder, Sec. IV / Table I).
+PAPER_LEVELS = (0.00005, 0.0001, 0.0005, 0.001, 0.002, 0.005, 0.01,
+                0.02, 0.03, 0.05, 0.08, 0.1, 0.15, 0.2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +67,19 @@ class EvolveConfig:
     bias_frac: float | None = None
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchedEvolveConfig(EvolveConfig):
+    """EvolveConfig plus the lane ladder of the batched sweep.
+
+    Lanes are level-major: lane ``li * repeats + r`` evolves toward
+    ``levels[li]`` with per-lane seed ``seed + 1000 * li + r`` (the same
+    mapping the serial ``pareto_sweep`` has always used, so serial and
+    batched sweeps are comparable run-for-run).
+    """
+    levels: tuple = PAPER_LEVELS
+    repeats: int = 1
+
+
 @dataclasses.dataclass
 class EvolveResult:
     genome: Genome
@@ -60,11 +91,45 @@ class EvolveResult:
     wall_s: float
 
 
-def _fitness_fn(exact, weights, pmax, level, n_i, signed, bias_frac):
-    """Fitness per Eq. 1 (optionally bias-constrained) -- returns
-    (fitness, wmed, area)."""
+@dataclasses.dataclass
+class BatchedEvolveResult:
+    """All lanes of one batched run (lane-major arrays, lane = li*R + r)."""
+    genomes: Genome       # stacked numpy pytree: (L, c, 3) / (L, n_o)
+    wmed: np.ndarray      # (L,)
+    area: np.ndarray      # (L,)
+    levels: np.ndarray    # (L,) per-lane target level
+    seeds: np.ndarray     # (L,) per-lane RNG seed
+    generations: int
+    history: np.ndarray   # (G//block, L, 2) best (wmed, area) per block
+    wall_s: float
 
-    def fit(genome: Genome, in_planes):
+    @property
+    def n_lanes(self) -> int:
+        return int(self.levels.shape[0])
+
+    def lane(self, i: int) -> EvolveResult:
+        """Extract one lane as a serial-shaped EvolveResult."""
+        return EvolveResult(
+            genome=jax.tree.map(lambda x: x[i], self.genomes),
+            wmed=float(self.wmed[i]), area=float(self.area[i]),
+            level=float(self.levels[i]), generations=self.generations,
+            history=self.history[:, i, :], wall_s=self.wall_s)
+
+
+def _base_config(cfg: EvolveConfig) -> dict:
+    """The EvolveConfig-only field dict (drops lane fields of subclasses)."""
+    return {f.name: getattr(cfg, f.name)
+            for f in dataclasses.fields(EvolveConfig)}
+
+
+def _fitness_fn(exact, pmax, n_i, signed, bias_frac):
+    """Fitness per Eq. 1 (optionally bias-constrained).
+
+    ``weights`` and ``level`` are runtime arguments so one traced program
+    serves every lane of a batched sweep; returns (fitness, wmed, area).
+    """
+
+    def fit(genome: Genome, in_planes, weights, level):
         planes = cgp_mod.eval_genome(genome, in_planes, n_i=n_i)
         vals = cgp_mod.unpack_planes(planes)
         n_o = planes.shape[0]
@@ -82,38 +147,135 @@ def _fitness_fn(exact, weights, pmax, level, n_i, signed, bias_frac):
     return fit
 
 
-def make_step(cfg: EvolveConfig, exact, weights, level: float,
-              in_planes) -> Callable:
-    """Build the jitted G-generation evolution block."""
+def make_batched_step(cfg: EvolveConfig, exact, in_planes,
+                      *, weights_batched: bool = False) -> Callable:
+    """Build the jitted lane-batched G-generation evolution block.
+
+    Returns ``(block, fit)`` where ``block(parents, parent_f, keys,
+    weights, levels)`` advances every lane by ``cfg.gens_per_jit_block``
+    generations inside one ``lax.scan`` and ``fit(genome, in_planes,
+    weights, level)`` scores a single genome.  All lane state (parents,
+    fitness, keys, levels -- and weights when ``weights_batched``) carries a
+    leading lane axis; ``weights`` may instead be a single shared
+    (2^(2w),) vector.
+    """
     n_i = 2 * cfg.w
     pmax = jnp.float32(wmed_mod.p_max(cfg.w))
     allowed = jnp.asarray(np.array(cfg.allowed_fns, dtype=np.int32))
-    fit = _fitness_fn(exact, weights, pmax, jnp.float32(level), n_i,
-                      cfg.signed, cfg.bias_frac)
+    fit = _fitness_fn(exact, pmax, n_i, cfg.signed, cfg.bias_frac)
+    w_axis = 0 if weights_batched else None
 
-    def generation(carry, key):
-        parent, parent_f = carry
+    def lane_generation(parent, parent_f, key, weights, level):
         keys = jax.random.split(key, cfg.lam)
         offspring = jax.vmap(
             lambda k: cgp_mod.mutate(parent, k, allowed, n_i=n_i, h=cfg.h)
         )(keys)
-        f, e, a = jax.vmap(lambda g: fit(g, in_planes))(offspring)
-        best = jnp.argmin(f)
-        best_f = f[best]
-        take = best_f <= parent_f  # neutral drift: ties promote offspring
-        new_parent = jax.tree.map(
-            lambda o, p: jnp.where(take, o[best], p), offspring, parent)
-        new_f = jnp.where(take, best_f, parent_f)
-        return (new_parent, new_f), (e[best], a[best])
+        f, e, a = jax.vmap(
+            lambda g: fit(g, in_planes, weights, level))(offspring)
+        new_parent, new_f, best = sel_mod.replace_parent(
+            parent, parent_f, offspring, f)
+        return new_parent, new_f, e[best], a[best]
+
+    def score(parents, weights, levels):
+        return jax.vmap(
+            lambda g, wt, lv: fit(g, in_planes, wt, lv),
+            in_axes=(0, w_axis, 0))(parents, weights, levels)
 
     @jax.jit
-    def block(parent: Genome, parent_f, key):
-        keys = jax.random.split(key, cfg.gens_per_jit_block)
-        (parent, parent_f), (es, areas) = jax.lax.scan(
-            generation, (parent, parent_f), keys)
-        return parent, parent_f, es[-1], areas[-1]
+    def block(parents: Genome, parent_f, keys, weights, levels):
+        # NaN parent_f marks the first block: score the seed in-program
+        # (the exact seed satisfies any level; its fitness is its area)
+        # so the driver never pays an eager, uncompiled fitness pass.
+        _, e0, a0 = score(parents, weights, levels)
+        f0 = jnp.where(e0 <= levels, a0, jnp.float32(jnp.inf))
+        parent_f = jnp.where(jnp.isnan(parent_f), f0, parent_f)
+
+        def generation(carry, gen_keys):
+            ps, pf = carry
+            ps, pf, e, a = jax.vmap(
+                lane_generation, in_axes=(0, 0, 0, w_axis, 0)
+            )(ps, pf, gen_keys, weights, levels)
+            return (ps, pf), (e, a)
+
+        # per-lane split mirrors the historical serial driver exactly
+        subkeys = jax.vmap(
+            lambda k: jax.random.split(k, cfg.gens_per_jit_block))(keys)
+        subkeys = jnp.swapaxes(subkeys, 0, 1)  # (G, L, key)
+        (parents, parent_f), (es, areas) = jax.lax.scan(
+            generation, (parents, parent_f), subkeys)
+        _, e_fin, a_fin = score(parents, weights, levels)
+        return parents, parent_f, es[-1], areas[-1], e_fin, a_fin
 
     return block, fit
+
+
+def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
+                   pmf_x: np.ndarray | None = None, *,
+                   vec_weights: np.ndarray | None = None,
+                   verbose: bool = False) -> BatchedEvolveResult:
+    """Run ``len(cfg.levels) * cfg.repeats`` independent evolutions at once.
+
+    ``seed_genome`` is either a single genome (replicated to every lane) or
+    an already lane-stacked Genome pytree.  ``vec_weights`` overrides the
+    per-test-vector weights; pass shape (2^(2w),) to share one distribution
+    across lanes or (L, 2^(2w)) for per-lane distributions.  Default is the
+    paper's alpha = D(x) derived from ``pmf_x``.
+    """
+    w = cfg.w
+    R = max(1, int(cfg.repeats))
+    level_list = [float(l) for l in cfg.levels]
+    lane_levels = np.repeat(np.asarray(level_list, np.float32), R)
+    lane_seeds = np.asarray(
+        [cfg.seed + 1000 * li + r
+         for li in range(len(level_list)) for r in range(R)], np.int64)
+    L = int(lane_levels.shape[0])
+
+    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+    exact = jnp.asarray(wmed_mod.exact_products(w, cfg.signed).astype(np.int32))
+    if vec_weights is None:
+        if pmf_x is None:
+            raise ValueError("need pmf_x or vec_weights")
+        weights = jnp.asarray(dist.vector_weights(pmf_x, w))
+    else:
+        weights = jnp.asarray(vec_weights)
+    weights_batched = weights.ndim == 2
+    if weights_batched and weights.shape[0] != L:
+        raise ValueError(f"per-lane weights: got {weights.shape[0]} rows "
+                         f"for {L} lanes")
+    block, fit = make_batched_step(cfg, exact, in_planes,
+                                   weights_batched=weights_batched)
+    levels_j = jnp.asarray(lane_levels)
+
+    if seed_genome.nodes.ndim == 2:
+        parents = cgp_mod.tile_genome(seed_genome, L)
+    else:
+        parents = jax.tree.map(jnp.asarray, seed_genome)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in lane_seeds])
+    # NaN = "unscored"; the first block call scores the seed in-program.
+    parent_f = jnp.full((L,), jnp.nan, jnp.float32)
+
+    t0 = time.time()
+    hist = []
+    e_fin = a_fin = None
+    n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
+    for b in range(n_blocks):
+        split = jax.vmap(jax.random.split)(keys)   # (L, 2, key)
+        keys, subs = split[:, 0], split[:, 1]
+        parents, parent_f, e_last, a_last, e_fin, a_fin = block(
+            parents, parent_f, subs, weights, levels_j)
+        hist.append(np.stack([np.asarray(e_last), np.asarray(a_last)],
+                             axis=-1))
+        if verbose and (b % 4 == 0 or b == n_blocks - 1):
+            e_np, a_np = np.asarray(e_last), np.asarray(a_last)
+            print(f"  gen {(b + 1) * cfg.gens_per_jit_block:6d} x{L} lanes "
+                  f"wmed=[{e_np.min():.5f},{e_np.max():.5f}] "
+                  f"area=[{a_np.min():8.2f},{a_np.max():8.2f}]")
+    return BatchedEvolveResult(
+        genomes=jax.tree.map(np.asarray, parents),
+        wmed=np.asarray(e_fin), area=np.asarray(a_fin),
+        levels=lane_levels, seeds=lane_seeds,
+        generations=cfg.generations, history=np.asarray(hist),
+        wall_s=time.time() - t0)
 
 
 def evolve(cfg: EvolveConfig, seed_genome: Genome, pmf_x: np.ndarray,
@@ -121,53 +283,26 @@ def evolve(cfg: EvolveConfig, seed_genome: Genome, pmf_x: np.ndarray,
            vec_weights: np.ndarray | None = None) -> EvolveResult:
     """Run one CGP approximation for target WMED level ``level``.
 
+    Thin wrapper over a 1-lane batched run (lane seed = ``cfg.seed``).
     ``vec_weights`` overrides the per-test-vector weights (e.g. the joint
     weight x activation distribution); default is the paper's alpha = D(x).
     """
-    w = cfg.w
-    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
-    exact = jnp.asarray(wmed_mod.exact_products(w, cfg.signed).astype(np.int32))
-    weights = jnp.asarray(vec_weights if vec_weights is not None
-                          else dist.vector_weights(pmf_x, w))
-    block, fit = make_step(cfg, exact, weights, level, in_planes)
-
-    key = jax.random.PRNGKey(cfg.seed)
-    parent = seed_genome
-    parent_f, e0, a0 = fit(parent, in_planes)
-    # The exact seed satisfies any level; its fitness is its area.
-    parent_f = jnp.where(e0 <= level, a0, jnp.float32(jnp.inf))
-
-    t0 = time.time()
-    hist = []
-    n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
-    for b in range(n_blocks):
-        key, sub = jax.random.split(key)
-        parent, parent_f, e_last, a_last = block(parent, parent_f, sub)
-        hist.append((float(e_last), float(a_last)))
-        if verbose and (b % 4 == 0 or b == n_blocks - 1):
-            print(f"  gen {(b + 1) * cfg.gens_per_jit_block:6d} "
-                  f"wmed={float(e_last):.5f} area={float(a_last):8.2f}")
-    _, e_fin, a_fin = fit(parent, in_planes)
-    return EvolveResult(
-        genome=jax.tree.map(np.asarray, parent),
-        wmed=float(e_fin), area=float(a_fin), level=float(level),
-        generations=cfg.generations, history=np.asarray(hist),
-        wall_s=time.time() - t0)
-
-
-# Paper's 14 target WMED levels (percent ladder, Sec. IV / Table I).
-PAPER_LEVELS = (0.00005, 0.0001, 0.0005, 0.001, 0.002, 0.005, 0.01,
-                0.02, 0.03, 0.05, 0.08, 0.1, 0.15, 0.2)
+    bcfg = BatchedEvolveConfig(**_base_config(cfg),
+                               levels=(float(level),), repeats=1)
+    res = evolve_batched(bcfg, seed_genome, pmf_x,
+                         vec_weights=vec_weights, verbose=verbose)
+    return res.lane(0)
 
 
 def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray,
                  levels: Sequence[float] = PAPER_LEVELS,
                  repeats: int = 1, verbose: bool = False):
-    """Paper's outer loop: one evolution per target level (x repeats).
+    """Paper's outer loop, serial: one evolution per level (x repeats).
 
     Returns the per-level best results; together they form the error/area
     Pareto front of Figs. 3/6.  The seed is the exact multiplier family
-    matching ``cfg.signed``.
+    matching ``cfg.signed``.  Kept as the measured baseline for
+    ``pareto_sweep_batched`` -- prefer the batched form everywhere else.
     """
     seed_nl = (nl_mod.baugh_wooley_multiplier(cfg.w) if cfg.signed
                else nl_mod.array_multiplier(cfg.w))
@@ -184,4 +319,49 @@ def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray,
         if verbose:
             print(f"level={level:8.5f} -> wmed={best.wmed:.5f} "
                   f"area={best.area:8.2f} ({best.wall_s:.1f}s)")
+    return results
+
+
+def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray,
+                         levels: Sequence[float] = PAPER_LEVELS,
+                         repeats: int = 1, verbose: bool = False,
+                         vec_weights: np.ndarray | None = None,
+                         pareto_filter: bool = False
+                         ) -> List[EvolveResult]:
+    """Lane-batched Pareto sweep: all (level, repeat) lanes in one program.
+
+    Drop-in replacement for ``pareto_sweep`` -- same per-(level, repeat)
+    seeds, same best-area-per-level reduction, same return shape -- but all
+    lanes advance inside one jitted scan, so the accelerator sees a single
+    compiled program instead of ``len(levels) * repeats`` dispatch loops.
+
+    With ``pareto_filter`` (and ``levels`` sorted ascending), each level
+    reports the best result over all levels at least as tight: a circuit
+    meeting a tighter WMED budget trivially meets a looser one, so the
+    returned front is monotone non-increasing in area -- the non-dominated
+    set the paper plots, robust to per-lane search noise at small budgets.
+    """
+    levels = tuple(float(l) for l in levels)
+    if pareto_filter and any(b < a for a, b in zip(levels, levels[1:])):
+        raise ValueError("pareto_filter requires levels sorted ascending: "
+                         "the best-so-far carry assumes earlier levels are "
+                         f"tighter (got {levels})")
+    bcfg = BatchedEvolveConfig(**_base_config(cfg),
+                               levels=levels, repeats=repeats)
+    seed_nl = (nl_mod.baugh_wooley_multiplier(cfg.w) if cfg.signed
+               else nl_mod.array_multiplier(cfg.w))
+    g0 = cgp_mod.genome_from_netlist(seed_nl)
+    batch = evolve_batched(bcfg, g0, pmf_x, vec_weights=vec_weights,
+                           verbose=verbose)
+    R = max(1, int(repeats))
+    results = []
+    for li, level in enumerate(levels):
+        lanes = [batch.lane(li * R + r) for r in range(R)]
+        best = min(lanes, key=lambda r: r.area)
+        if pareto_filter and results and results[-1].area < best.area:
+            best = results[-1]
+        results.append(best)
+        if verbose:
+            print(f"level={level:8.5f} -> wmed={best.wmed:.5f} "
+                  f"area={best.area:8.2f} (batch {batch.wall_s:.1f}s)")
     return results

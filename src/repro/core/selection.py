@@ -1,23 +1,55 @@
-"""Per-layer multiplier selection from an evolved Pareto library.
+"""Selection operators: ES parent replacement + per-layer multiplier choice.
 
-The paper evolves one multiplier per WMED level and integrates the best
-into *every* MAC.  A framework-level refinement (DESIGN.md §4): each layer
-has its own weight distribution D_l, so re-score every library entry's LUT
-under D_l (cheap -- pure table arithmetic, no re-evolution) and pick, per
-layer, the lowest-power entry meeting the layer's WMED budget.  Sensitive
-layers (first/logits, per the usual quantization folklore) can be pinned
-to tighter budgets via ``budget_overrides``.
+Two kinds of "selection" live here:
+
+1. ``replace_parent`` -- the (1+lambda) survivor selection of the inner
+   evolutionary loop (paper Sec. III-C).  It is a pure jax function with
+   static shapes, so the lane-batched sweep in ``evolve.py`` can ``vmap``
+   it across an arbitrary (level, repeat) lane axis.
+
+2. Library selection -- the paper evolves one multiplier per WMED level and
+   integrates the best into *every* MAC.  A framework-level refinement
+   (DESIGN.md §4): each layer has its own weight distribution D_l, so
+   re-score every library entry's LUT under D_l (cheap -- pure table
+   arithmetic, no re-evolution) and pick, per layer, the lowest-power entry
+   meeting the layer's WMED budget.  Sensitive layers (first/logits, per
+   the usual quantization folklore) can be pinned to tighter budgets via
+   ``budget_overrides``.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distributions as dist
 from repro.core import wmed as wmed_mod
 from repro.core.luts import MultLib
+
+
+# ------------------------------------------------- (1+lambda) ES selection
+
+def replace_parent(parent, parent_f, offspring, fitness):
+    """One lane's (1+lambda) parent replacement with neutral drift.
+
+    ``offspring`` is a genome pytree stacked along a leading lambda axis and
+    ``fitness`` the matching (lam,) vector.  The best offspring replaces the
+    parent when its fitness is <= the parent's -- ties promote the offspring
+    (the standard CGP neutral-drift rule, essential for escaping plateaus).
+
+    Returns ``(new_parent, new_fitness, best_index)``.  Shapes are static
+    and there is no host sync, so the batched engine vmaps this across
+    lanes and the serial engine calls it with a single lane.
+    """
+    best = jnp.argmin(fitness)
+    best_f = fitness[best]
+    take = best_f <= parent_f
+    new_parent = jax.tree.map(
+        lambda o, p: jnp.where(take, o[best], p), offspring, parent)
+    return new_parent, jnp.where(take, best_f, parent_f), best
 
 
 def rescore(m: MultLib, pmf_x: np.ndarray,

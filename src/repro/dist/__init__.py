@@ -1,0 +1,9 @@
+"""Distribution layer: logical-axis sharding + cross-pod collectives.
+
+Importing this package (or any submodule) installs the jax API compat
+shims from ``repro.dist.compat`` so the modern mesh API the repo targets
+(``jax.sharding.set_mesh`` / ``AxisType``) also works on the older jax
+pinned in the CPU container.
+"""
+
+from repro.dist import compat  # noqa: F401  (installs shims on import)

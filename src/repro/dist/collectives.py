@@ -1,0 +1,59 @@
+"""Cross-pod gradient collectives: int8-compressed mean with error feedback.
+
+The ``pod`` mesh axis is the DCN-connected (slow) dimension of the
+production topology; per-pod gradients that cross it dominate inter-pod
+bytes.  ``compressed_pod_mean`` quantizes each gradient leaf to int8 with a
+per-pod absmax scale, ships the *int8 payload* across the pod axis (4x
+fewer DCN bytes than f32 -- the s8 all-gather is asserted in
+tests/test_distributed.py), dequantizes locally and averages.  The
+quantization residual is returned as the next step's error-feedback state,
+so the compression bias cancels over steps instead of accumulating.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import active_mesh
+
+
+def _replicated(x: jax.Array) -> jax.Array:
+    """Force replication (an all-gather for pod-sharded operands)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = P(*([None] * x.ndim))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _pod_mean_leaf(g: jax.Array, ef: jax.Array):
+    """One leaf: (n_pod, ...) grads + EF state -> (mean grads, new EF)."""
+    x = (g + ef).astype(jnp.float32)
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_ef = x - q.astype(jnp.float32) * scale
+    # only the int8 payload (+ tiny scales) crosses the pod axis
+    q_rep = _replicated(q)
+    s_rep = _replicated(scale)
+    mean = jnp.mean(q_rep.astype(jnp.float32) * s_rep, axis=0)
+    return mean, new_ef
+
+
+def compressed_pod_mean(grads, ef):
+    """Mean per-pod grads across the leading pod dim, int8-compressed.
+
+    ``grads``/``ef`` are matching pytrees whose leaves carry a leading
+    ``n_pod`` dim (sharded over the 'pod' mesh axis in deployment).
+    Returns ``(mean_grads, new_ef)`` -- the mean without the leading dim,
+    the EF with it.
+    """
+    flat, treedef = jax.tree.flatten(grads)
+    flat_ef = treedef.flatten_up_to(ef)
+    outs = [_pod_mean_leaf(g, e) for g, e in zip(flat, flat_ef)]
+    means = treedef.unflatten([m for m, _ in outs])
+    new_ef = treedef.unflatten([e for _, e in outs])
+    return means, new_ef

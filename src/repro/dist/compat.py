@@ -1,0 +1,39 @@
+"""Compatibility shims for older jax releases (container pins jax 0.4.x).
+
+The repo is written against the current mesh API:
+
+* ``with jax.sharding.set_mesh(mesh): ...``
+* ``jax.sharding.AxisType`` passed to ``jax.make_mesh``
+
+On older jax these are synthesized from the classic ``with Mesh(...):``
+context machinery.  Every shim is installed only when the real symbol is
+missing, so on a current jax this module is a no-op and the native
+implementations win.  Importing it never touches device state.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax
+
+
+def install() -> None:
+    shd = jax.sharding
+
+    if not hasattr(shd, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        shd.AxisType = AxisType
+
+    if not hasattr(shd, "set_mesh"):
+        # ``with jax.sharding.set_mesh(mesh):`` == classic ``with mesh:`` --
+        # Mesh has been a context manager since the Maps era, so the
+        # identity function gives the new spelling on the old machinery.
+        shd.set_mesh = lambda mesh: mesh
+
+
+install()

@@ -1,0 +1,131 @@
+"""Logical-axis sharding: GSPMD annotations that no-op on a single device.
+
+Model code never names mesh axes directly -- it annotates arrays with
+*logical* axes (``shard(x, "batch", None, "tp")``) and parameters with
+path-derived specs (``param_pspec``).  A rule table maps logical names to
+mesh axes; mapping is skipped for axes the active mesh doesn't have, and a
+mesh axis is consumed at most once per spec (first logical axis wins), so
+the same annotations serve 1-device CPU tests, the 8-device forced-host
+world and the 512-chip dry-run mesh unchanged.
+
+``shard`` resolves the mesh active via ``jax.sharding.set_mesh`` (or the
+classic ``with mesh:`` context on older jax -- see compat.py) at trace
+time and is an identity when there is none.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import compat  # noqa: F401  (installs jax API shims)
+
+# logical axis -> mesh axis.  'seq' shares the TP axis: sequence
+# parallelism and tensor parallelism are active in different program
+# regions, never on the same array dim.
+DEFAULT_RULES: Dict[str, str] = {
+    "batch": "data",
+    "seq": "model",
+    "vocab": "model",
+    "tp": "model",
+    "heads": "model",
+    "expert": "model",
+    "pod": "pod",
+    "data": "data",
+    "model": "model",
+}
+
+_local = threading.local()
+
+
+def _current_rules() -> Dict[str, str]:
+    merged = dict(DEFAULT_RULES)
+    merged.update(getattr(_local, "rules", None) or {})
+    return merged
+
+
+@contextlib.contextmanager
+def rules(mapping: Dict[str, str]):
+    """Temporarily override logical->mesh rules (e.g. ``{"seq": "model"}``)."""
+    prev = getattr(_local, "rules", None)
+    _local.rules = {**(prev or {}), **mapping}
+    try:
+        yield
+    finally:
+        _local.rules = prev
+
+
+def active_mesh():
+    """The mesh installed by ``set_mesh`` / ``with mesh:``, or None."""
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], mesh=None) -> P:
+    """Map logical axis names to a PartitionSpec under the given/active mesh.
+
+    Axes the mesh doesn't carry map to None; a mesh axis already consumed
+    by an earlier dim maps to None too (first logical axis wins), so rule
+    collisions degrade to replication instead of erroring.
+    """
+    mesh = mesh if mesh is not None else active_mesh()
+    table = _current_rules()
+    used = set()
+    spec = []
+    for ax in axes:
+        m_ax = table.get(ax) if ax is not None else None
+        if (m_ax is None or m_ax in used
+                or (mesh is not None and m_ax not in mesh.axis_names)):
+            spec.append(None)
+        else:
+            used.add(m_ax)
+            spec.append(m_ax)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the logical spec; identity without an active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_pspec(path: str, shape) -> P:
+    """Parameter sharding by path + rank: FSDP over 'data', TP over 'model'.
+
+    * rank <= 1 (norm scales, biases): replicated;
+    * ``embed`` (vocab, d): vocab over 'model', d over 'data';
+    * expert-stacked rank-4 (groups, experts, in, out): experts over
+      'model', the contraction dim over 'data';
+    * layer-stacked rank-3 (L, in, out): in over 'data', out over 'model';
+    * rank-2 ``*out*`` matrices (w_out, out_proj): the *input* dim carries
+      the TP shards of the preceding region, so ('model', 'data');
+    * any other rank-2 matrix (w_in, wq, router, ...): ('data', 'model').
+    """
+    rank = len(shape)
+    if rank <= 1:
+        return P()
+    leaf = path.rsplit("/", 1)[-1]
+    if "embed" in leaf:
+        return P("model", "data")
+    if "experts" in path and rank == 4:
+        return P(None, "model", "data", None)
+    if rank == 3:
+        return P(None, "data", "model")
+    if rank == 4:
+        return P(None, None, "data", "model")
+    if "out" in leaf:
+        return P("model", "data")
+    return P("data", "model")

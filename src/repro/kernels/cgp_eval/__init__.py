@@ -1,1 +1,26 @@
+"""Pallas TPU kernel package: bit-parallel CGP netlist evaluation.
+
+Contract (``cgp_eval``, see ops.py):
+
+* inputs — ``nodes (c, 3) int32`` (gate sources/function, feed-forward:
+  gate k may only read inputs ``0..n_i-1`` or gates ``< k``), ``outs
+  (n_o,) int32``, ``in_planes (n_i, W) uint32`` packed exhaustive test
+  vectors (bit b of word j = input bit for vector ``32*j + b``);
+* output — ``(n_o, W) uint32`` output bit-planes, same packing;
+* ``cgp_eval_population`` vmaps over a leading population axis
+  ``(P, c, 3) / (P, n_o)`` with shared input planes.
+
+Grid/block semantics (kernel.py): one program per block of ``bw`` lanes
+(vector words are independent), genome + output sources prefetched to
+SMEM because gate indices drive *dynamic* VMEM scratch addressing; the
+``(n_i + c, bw)`` node-plane scratch lives in VMEM (~1 MB at c=500,
+bw=512).  ``W`` is padded to a ``bw`` multiple by the ops wrapper and
+unpadded on return.
+
+Parity: bit-exact vs the pure-jnp oracle in ref.py (and vs
+``repro.core.cgp.eval_genome``) for every genome/width — asserted in
+tests/test_kernel_cgp_eval.py.  The container runs interpret mode
+(``ops._INTERPRET = True``); flip to False on real TPU deployments.
+"""
+
 from repro.kernels.cgp_eval.ops import cgp_eval  # noqa: F401

@@ -1,1 +1,27 @@
+"""Pallas TPU kernel package: LUT-gather int8 matmul (approximate MACs).
+
+Contract (see ops.py):
+
+* ``lut_matmul(a_pat (M, K) int, b_pat (K, N) int, lut_flat (2^2w,)
+  int32, *, w=8)`` -> ``(M, N) int32`` accumulators with
+  ``Y[m, n] = sum_k LUT[(b_pat[k, n] << w) | a_pat[m, k]]`` — the
+  characterized (weight) operand indexes the LUT row, matching the WMED
+  convention.  Arbitrary M/N/K: the wrapper pads to block multiples and
+  unpads the result.  Operands are *bit patterns* (two's-complement
+  patterns for signed multipliers), the LUT supplies signed products.
+* ``lut_matmul_f32`` — float bridge for nn layers in "lut_kernel" MAC
+  mode: quantize -> kernel -> dequantize with the same straight-through
+  custom-vjp contract as ``core.approx_matmul`` (exact float gradients).
+
+Grid/block semantics (kernel.py): grid ``(M/bm, N/bn, K/bk)`` with K
+innermost; the output block stays VMEM-resident across the K accumulation
+(index map ignores k) and the 2^16-entry product table is VMEM-resident
+(256 KB as int32).  Default 128x128x128 tiles keep per-step VMEM well
+under budget with the lane dim matching the 128-wide VPU.
+
+Parity: bit-exact vs ref.py (an independent jnp gather oracle) across
+shape/dtype sweeps — asserted in tests/test_kernel_lut_matmul.py.
+Interpret mode on CPU (``ops._INTERPRET``); set False on real TPU.
+"""
+
 from repro.kernels.lut_matmul.ops import lut_matmul, lut_matmul_f32  # noqa: F401

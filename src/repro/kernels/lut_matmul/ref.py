@@ -1,7 +1,8 @@
 """Pure-jnp oracle for the LUT matmul kernel.
 
 Independent of repro.core.approx_matmul (so kernel tests have a separate
-source of truth): Y[m, n] = sum_k LUT[(A[m,k] << w) | B[k,n]].
+source of truth): Y[m, n] = sum_k LUT[(B[k,n] << w) | A[m,k]] -- the
+characterized (weight) operand B indexes the LUT row.
 """
 
 from __future__ import annotations

@@ -1,1 +1,26 @@
+"""Pallas TPU kernel package: chunked WKV (RWKV-6 linear attention).
+
+Contract (``wkv_chunked``, see ops.py):
+
+* inputs — ``r/k/v/logw (B, H, S, n) float`` (``logw`` = log decay, < 0;
+  see the overflow-safe log-space convention in repro/nn/rwkv.py) and
+  bonus ``u (H, n)``; ``S`` must be a multiple of ``chunk`` (asserted —
+  pad upstream; pad-region decays cannot affect causal prefix outputs);
+* outputs — ``out (B, H, S, n) float32`` and the carried state
+  ``s_end (B, H, n, n) float32`` (valid at the true S only when
+  ``S % chunk == 0`` — ops-level contract).
+
+Grid/block semantics (kernel.py): grid ``(B*H, S/chunk)`` with the chunk
+axis sequential; the ``(n, n)`` WKV state persists in a VMEM scratch
+across that axis (initialized at chunk 0).  Within a chunk the
+pairwise-safe decay matrix turns the recurrence into two small matmuls
+plus one masked ``(L, L)`` attention product — MXU work — and the
+cross-chunk carry is O(n^2).
+
+Parity: matches the naive float32 recurrence oracle (ref.py) to 1e-4
+rtol/atol (different summation order) for any chunk size — asserted in
+tests/test_kernel_wkv.py.  Interpret mode on CPU (``ops._INTERPRET``);
+set False on real TPU.
+"""
+
 from repro.kernels.wkv.ops import wkv_chunked  # noqa: F401

@@ -159,10 +159,6 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
         if not m:
             continue
         name, type_str, opcode, rest = m.groups()
-        operand_text = rest
-        operands = [o for o in _split_operands(operand_text)
-                    if o.startswith("%")]
-        operands = [o.split()[0].lstrip("%") for o in operands]
         # attrs = everything after the closing paren of the operand list
         depth = 0
         idx = 0
@@ -174,6 +170,14 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
                     break
                 depth -= 1
         attrs = rest[idx + 1:]
+        # operand items are either bare "%name" or type-prefixed
+        # "f32[4,32]{1,0} %name" depending on the HLO printer version;
+        # take the %-token wherever it sits in the item
+        operands = []
+        for item in _split_operands(rest[:idx]):
+            tok = next((t for t in item.split() if t.startswith("%")), None)
+            if tok:
+                operands.append(tok.lstrip("%"))
         op = Op(name, opcode, _parse_shape(type_str), operands, attrs, line)
         cur.ops.append(op)
         cur.shapes[name] = op.out_shapes

@@ -13,18 +13,26 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import compat  # noqa: F401  (jax API shims, no device state)
+
+
+def _mk(shape, axes):
+    try:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    except TypeError:  # older jax: make_mesh has no axis_types (all Auto)
+        return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small ones on forced host devices)."""
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=axis_types)
+    return _mk(tuple(shape), tuple(axes))
 
 
 def devices_per_pod(mesh) -> int:
