@@ -12,6 +12,12 @@ reports the speedup.
     PYTHONPATH=src:. python benchmarks/bench_batched_sweep.py          # full
     PYTHONPATH=src:. python benchmarks/bench_batched_sweep.py --smoke  # CI
 
+``--objective`` swaps the search objective through the pluggable Objective
+API (DESIGN.md §10) -- e.g. ``--objective wce`` sweeps the normalized
+worst-case-error metric, ``--wce-cap`` adds the combined-constraint form of
+arxiv 2206.13077 -- with the same serial-vs-batched parity obligations; CI
+exercises one non-WMED objective so that path stays green.
+
 Full mode: 8 paper levels x 2 repeats x 40 generations (expected >= 3x on
 a 2-core CPU container; the margin grows with lanes and with real XLA:TPU
 backends where per-dispatch overhead is higher).
@@ -27,16 +33,23 @@ from repro.core import distributions as dist, evolve as ev
 
 
 def _front_summary(results):
-    return [(r.level, r.wmed, r.area) for r in results]
+    return [(r.level, r.error, r.area) for r in results]
 
 
-def run(smoke: bool = False, strict: bool = False):
+def _make_objective(name: str, wce_cap: float | None) -> ev.Objective:
+    cons = ev.Constraints(wce_cap=wce_cap)
+    return ev.Objective(metric=name, constraints=cons)
+
+
+def run(smoke: bool = False, strict: bool = False,
+        objective: str = "wmed", wce_cap: float | None = None):
     if smoke:
         levels, repeats, gens, block = ev.PAPER_LEVELS[:4], 1, 20, 20
     else:
         levels, repeats, gens, block = ev.PAPER_LEVELS[:8], 2, 40, 40
+    obj = _make_objective(objective, wce_cap)
     cfg = ev.EvolveConfig(w=8, signed=False, generations=gens,
-                          gens_per_jit_block=block, seed=0)
+                          gens_per_jit_block=block, seed=0, objective=obj)
     pmf = dist.half_normal_pmf(8)
     lanes = len(levels) * repeats
 
@@ -59,8 +72,8 @@ def run(smoke: bool = False, strict: bool = False):
             f"output-gene mismatch at level {s.level}"
         assert s.area == b.area, \
             f"area mismatch at level {s.level}: {s.area} vs {b.area}"
-        assert abs(s.wmed - b.wmed) < 1e-5, \
-            f"wmed mismatch at level {s.level}: {s.wmed} vs {b.wmed}"
+        assert abs(s.error - b.error) < 1e-5, \
+            f"{s.metric} mismatch at level {s.level}: {s.error} vs {b.error}"
 
     speedup = t_serial / t_batched
     total_gens = lanes * gens
@@ -71,11 +84,12 @@ def run(smoke: bool = False, strict: bool = False):
          f"lanes={lanes};gens_per_lane={gens};"
          f"lane_gens_per_s={total_gens / t_batched:.1f}")
     emit("bench_batched_sweep/summary", 0.0,
-         f"speedup={speedup:.2f}x;front_parity=ok;"
+         f"speedup={speedup:.2f}x;front_parity=ok;objective={objective};"
          f"levels={len(levels)};repeats={repeats}")
-    for lvl, wm, ar in _front_summary(batched):
+    metric = batched[0].metric
+    for lvl, err, ar in _front_summary(batched):
         emit(f"bench_batched_sweep/front_{lvl}", 0.0,
-             f"wmed={wm:.6f};area={ar:.2f}")
+             f"{metric}={err:.6f};area={ar:.2f}")
     if strict and smoke:
         print("bench_batched_sweep: --strict applies to full mode only; "
               "smoke lanes are too few to amortize the compile -- ignoring")
@@ -91,5 +105,12 @@ if __name__ == "__main__":
     ap.add_argument("--strict", action="store_true",
                     help="fail unless the full-mode speedup is >= 3x "
                          "(ignored with --smoke)")
+    ap.add_argument("--objective", default="wmed",
+                    choices=["wmed", "med", "wce", "er", "mre"],
+                    help="registry error metric driving the sweep")
+    ap.add_argument("--wce-cap", type=float, default=None,
+                    help="add a normalized worst-case-error cap constraint "
+                         "(combined-constraint search, arxiv 2206.13077)")
     args = ap.parse_args()
-    run(smoke=args.smoke, strict=args.strict)
+    run(smoke=args.smoke, strict=args.strict, objective=args.objective,
+        wce_cap=args.wce_cap)

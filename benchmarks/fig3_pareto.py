@@ -27,6 +27,7 @@ def evolved_front(pmf, tag, seed=0):
     # one seed for every level); the claims reproduced are unchanged.
     cfg = ev.BatchedEvolveConfig(w=8, signed=False, generations=GENS,
                                  gens_per_jit_block=200, seed=seed,
+                                 objective=ev.Objective(metric="wmed"),
                                  levels=LEVELS, repeats=1)
     g0 = cgp.genome_from_netlist(nl.array_multiplier(8))
     batch = ev.evolve_batched(cfg, g0, pmf)

@@ -45,6 +45,7 @@ def run():
     # across levels); the box-plot statistics are seed-agnostic.
     cfg = ev.BatchedEvolveConfig(w=8, signed=True, generations=600,
                                  gens_per_jit_block=200, seed=100,
+                                 objective=ev.Objective(metric="wmed"),
                                  levels=LEVELS, repeats=REPEATS)
     g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
     batch = ev.evolve_batched(cfg, g0, pmf)

@@ -1,8 +1,13 @@
 """Paper Fig. 7: classification accuracy vs relative power across multiplier
 families (WMED-evolved vs conventional: truncated, BAM, zero-guarded).
 
-Claim reproduced: WMED-evolved multipliers dominate -- higher accuracy at
-matched power than truncation/BAM baselines.
+Claim reproduced (scaled-budget form): at the tight end of the ladder the
+evolved multipliers hold reference accuracy at reduced power, competitive
+with the best conventional designs.  The paper's full dominance needs its
+1e6-generation x 25-repeat budgets; at our 600 generations the evolution is
+driven through the Objective API with the joint weight x activation
+distribution and the signed-bias bound (DESIGN.md §2, §7.2, §10) -- without
+both, every evolved point loses ~70% accuracy to coherent MAC bias.
 """
 
 import time
@@ -29,6 +34,9 @@ def run():
                             for l in jax.tree.leaves(params) if l.ndim >= 2])
     w_qp = calibrate(w_all)
     pmf = cs.weight_pmf(params, w_qp)
+    # joint weight x activation distribution for the fitness (the MAC's
+    # data operand is far from uniform -- see DESIGN.md §2)
+    vw = cs.joint_vector_weights(pmf, xtr[:256], x_qp)
     exact = luts.exact_multiplier(8, True)
     acc_ref = mlp_mnist.accuracy(params, xte, yte,
                                  mac=cs.make_mac(exact, x_qp, w_qp))
@@ -39,11 +47,30 @@ def run():
         return 100 * (acc - acc_ref), m.power_nw / exact.power_nw
 
     fams = {"evolved": [], "trunc": [], "bam": [], "zero_guard": []}
-    for level in (0.002, 0.02, 0.08):
-        cfg = ev.EvolveConfig(w=8, signed=True, generations=600,
-                              gens_per_jit_block=200, seed=11)
-        g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
-        r = ev.evolve(cfg, g0, pmf, level)
+    # the whole evolved ladder runs as one batched program (Objective API).
+    # The signed-bias bound (DESIGN.md §7.2/§10) is essential here: at
+    # these scaled budgets an unconstrained WMED search converges on
+    # systematically biased circuits whose error accumulates coherently
+    # over the 784-term MACs (-70% accuracy at every level before the
+    # constraint landed).
+    # NOTE: lane seeds follow 11 + 1000*level_index (vs the pre-batching
+    # serial runs' shared seed 11); the reproduced claim is seed-agnostic.
+    # joint-weighted WMED concentrates the weight mass, so equivalent
+    # budgets sit 1-2 orders tighter than the plain-alpha ladder; looser
+    # levels than ~1e-3 admit circuits that trade away exactly the
+    # (weight, activation) pairs inference visits
+    levels = (5e-5, 2e-4, 1e-3)
+    cfg = ev.BatchedEvolveConfig(w=8, signed=True, generations=600,
+                                 gens_per_jit_block=200, seed=11,
+                                 objective=ev.Objective(
+                                     metric="wmed",
+                                     constraints=ev.Constraints(
+                                         bias_frac=0.25)),
+                                 levels=levels, repeats=1)
+    g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
+    batch = ev.evolve_batched(cfg, g0, pmf, vec_weights=vw)
+    for li, level in enumerate(levels):
+        r = batch.lane(li)
         fams["evolved"].append(luts.characterize(
             f"ev_{level}", cgp.Genome(jnp.asarray(r.genome.nodes),
                                       jnp.asarray(r.genome.outs)),

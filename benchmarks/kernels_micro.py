@@ -38,11 +38,12 @@ def run():
     key = jax.random.PRNGKey(0)
     for lanes in (1, 8):
         parents = cgp.tile_genome(g, lanes)
-        levels = jnp.full((lanes,), 0.01, jnp.float32)
+        # constraint values are runtime lane parameters (objective API)
+        cons = ev.Constraints().lane_params(jnp.full((lanes,), 0.01))
         keys = jnp.stack([jax.random.PRNGKey(i) for i in range(lanes)])
-        _, e0, a0 = jax.vmap(lambda gg, lv: fit(gg, planes, vw, lv),
-                             in_axes=(0, 0))(parents, levels)
-        us = time_fn(lambda: block(parents, a0, keys, vw, levels),
+        _, e0, a0 = jax.vmap(lambda gg, cn: fit(gg, planes, vw, cn),
+                             in_axes=(0, 0))(parents, cons)
+        us = time_fn(lambda: block(parents, a0, keys, vw, cons),
                      iters=3, warmup=1)
         emit(f"micro/evolve_10gens_lam4_lanes{lanes}", us,
              f"lane_gens_per_s={10 * lanes / (us / 1e6):.1f}")

@@ -101,6 +101,23 @@ def make_mac(mult: luts_mod.MultLib, x_qp, w_qp) -> MacCtx:
                   x_qp=x_qp, w_qp=w_qp)
 
 
+def joint_vector_weights(pmf_w: np.ndarray, xs, x_qp: QuantParams,
+                         w: int = 8) -> np.ndarray:
+    """Joint weight x activation WMED weights for MAC-bound objectives.
+
+    Measures the activation PMF from a calibration batch ``xs`` (quantized
+    under ``x_qp``, bit-pattern order) and combines it with the weight PMF
+    -- the alpha the NN pipelines evolve under (DESIGN.md §2: plain
+    alpha = D(x) lets the search park its error mass exactly where
+    activations live).
+    """
+    from repro.quant.fixed_point import quantize
+    act = np.mod(np.asarray(quantize(jnp.asarray(xs), x_qp)),
+                 1 << w).ravel()
+    pmf_act = dist.empirical_pmf(act, w=w, signed=True)
+    return dist.vector_weights_joint(pmf_w, pmf_act, w)
+
+
 # ------------------------------------------------------------ the pipeline
 
 @dataclasses.dataclass
@@ -176,18 +193,19 @@ def run_case_study(model: str = "mlp", *, n_train=6000, n_test=1500,
     # the measured activation distribution (joint alpha) and the fitness
     # carries the bias constraint -- see DESIGN.md §7 deviations.
     pmf = weight_pmf(params, w_qp)
-    from repro.quant.fixed_point import quantize
-    act_pats = np.mod(np.asarray(quantize(jnp.asarray(xs), x_qp)),
-                      256).ravel()
-    pmf_act = dist.empirical_pmf(act_pats, w=8, signed=True)
-    vw = dist.vector_weights_joint(pmf, pmf_act, 8)
+    vw = joint_vector_weights(pmf, xs, x_qp)
 
     results: List[CaseStudyResult] = []
     # one lane per target level: the whole error ladder evolves inside a
-    # single jitted scan (one compile) instead of len(levels) serial runs
+    # single jitted scan (one compile) instead of len(levels) serial runs;
+    # the objective is WMED with the signed-bias constraint (DESIGN.md §10)
     cfg = ev.BatchedEvolveConfig(w=8, signed=True, generations=generations,
                                  gens_per_jit_block=min(250, generations),
-                                 seed=seed, bias_frac=0.25,
+                                 seed=seed,
+                                 objective=ev.Objective(
+                                     metric="wmed",
+                                     constraints=ev.Constraints(
+                                         bias_frac=0.25)),
                                  levels=tuple(float(l) for l in levels),
                                  repeats=1)
     seed_nl = nl_mod.baugh_wooley_multiplier(8)

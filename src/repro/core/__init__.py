@@ -1,6 +1,7 @@
 """Core of the paper's contribution: WMED-driven CGP circuit approximation."""
 
-from repro.core import cellcost, cgp, distributions, luts, netlist, wmed  # noqa: F401
+from repro.core import cellcost, cgp, distributions, luts, netlist  # noqa: F401
+from repro.core import objective, wmed  # noqa: F401
 from repro.core.cgp import Genome  # noqa: F401
 # NOTE: the `evolve` *function* is deliberately not re-exported here -- it
 # would shadow the `repro.core.evolve` submodule attribute.
@@ -8,3 +9,6 @@ from repro.core.evolve import (  # noqa: F401
     BatchedEvolveConfig, BatchedEvolveResult, EvolveConfig, EvolveResult,
     evolve_batched, pareto_sweep, pareto_sweep_batched)
 from repro.core.luts import MultLib  # noqa: F401
+from repro.core.objective import (  # noqa: F401
+    Constraints, ErrorMetric, EvalDomain, ExhaustiveDomain, Objective,
+    SampledDomain, available_metrics, get_metric, register_metric)

@@ -1,18 +1,26 @@
 """(1+lambda) evolution strategy for circuit approximation (paper Sec. III-C).
 
-Fitness (Eq. 1):   F(M~) = area(M~)      if WMED_D(M~) <= E_i
-                           +inf          otherwise
+Fitness (Eq. 1, generalized):   F(M~) = area(M~)   if error(M~) <= E_i
+                                        +inf       otherwise
 minimized under a target error level E_i.  Repeating the run for a ladder of
 E_i levels yields the error/area Pareto front (paper Figs. 3 & 6).
+
+The error side of the fitness is a pluggable **Objective**
+(``repro.core.objective``, DESIGN.md §10): a registry metric (``wmed`` --
+the paper's choice and the default -- ``med``, ``wce``, ``er``, ``mre``),
+a constraint set (signed-bias bound, worst-case-error cap), and an eval
+domain (exhaustive 2^(2w) vectors for w <= 8, Monte-Carlo samples beyond).
+Constraint values ride as runtime lane parameters, so every (metric level,
+constraint combo) lane shares one traced program.
 
 Two execution modes share one generation step:
 
 * **Lane-batched** (the fast path, DESIGN.md §9): the paper's outer loop --
   one independent evolution per (target level, repeat) pair -- is
   embarrassingly parallel, so all lanes advance together.  Per-lane parents,
-  fitnesses, RNG keys, levels and (optionally) weights are stacked along a
-  leading lane axis; the generation step is ``vmap``-ed across lanes and G
-  generations run inside a single jitted ``lax.scan`` block.  One
+  fitnesses, RNG keys, constraints and (optionally) weights are stacked
+  along a leading lane axis; the generation step is ``vmap``-ed across lanes
+  and G generations run inside a single jitted ``lax.scan`` block.  One
   compilation and one device program replace ``len(levels) x repeats``
   sequential dispatches.
 * **Serial** (``evolve``): a thin wrapper over a 1-lane batch, kept for
@@ -29,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, List, Sequence
 
 import jax
@@ -39,9 +48,13 @@ from repro.core import cellcost as cc
 from repro.core import cgp as cgp_mod
 from repro.core import distributions as dist
 from repro.core import netlist as nl_mod
+from repro.core import objective as obj_mod
 from repro.core import selection as sel_mod
 from repro.core import wmed as wmed_mod
 from repro.core.cgp import Genome
+from repro.core.objective import (  # noqa: F401  (re-exported API surface)
+    Constraints, ErrorMetric, EvalDomain, ExhaustiveDomain, LaneConstraints,
+    Objective, SampledDomain)
 
 
 # Paper's 14 target WMED levels (percent ladder, Sec. IV / Table I).
@@ -59,11 +72,18 @@ class EvolveConfig:
     gens_per_jit_block: int = 250   # scan length inside one jit call
     allowed_fns: tuple = tuple(int(f) for f in cc.ALL_FNS)
     seed: int = 0
-    # |weighted mean SIGNED error| <= bias_frac * level (None = off).
-    # WMED alone admits systematically *biased* circuits whose error
-    # accumulates coherently over a MAC's K-term sum; the paper filters
-    # these implicitly by integrating the best of 25 runs -- at our scaled
-    # budgets an explicit bias constraint is required (see DESIGN.md §7).
+    # What "error" means for this run: an Objective (or registry metric
+    # name) bundling metric + constraints + eval domain; None = the
+    # paper's default (exhaustive WMED, no extra constraints).
+    objective: Objective | str | None = None
+    # Genome evaluation backend for the fitness inner loop: "jnp"
+    # (cgp.eval_genome) or "pallas" (kernels/cgp_eval; interpret-mode on
+    # CPU, the real kernel on TPU).
+    eval_backend: str = "jnp"
+    # DEPRECATED: pre-Objective spelling of the signed-bias bound
+    # (DESIGN.md §7.2).  Folded into the objective's Constraints when that
+    # leaves bias_frac unset; prefer
+    # ``Objective(constraints=Constraints(bias_frac=...))``.
     bias_frac: float | None = None
 
 
@@ -83,25 +103,43 @@ class BatchedEvolveConfig(EvolveConfig):
 @dataclasses.dataclass
 class EvolveResult:
     genome: Genome
-    wmed: float
+    error: float          # final score under the objective's metric
     area: float
     level: float
     generations: int
-    history: np.ndarray  # (G//block, 2) best (wmed, area) per block
+    history: np.ndarray   # (G//block, 2) best (error, area) per block
     wall_s: float
+    metric: str = "wmed"  # registry name of the metric ``error`` is in
+
+    @property
+    def wmed(self) -> float:
+        """Deprecated pre-Objective alias; use ``.error``."""
+        warnings.warn("EvolveResult.wmed is deprecated; use .error (the "
+                      "value of the objective's metric, see .metric)",
+                      DeprecationWarning, stacklevel=2)
+        return self.error
 
 
 @dataclasses.dataclass
 class BatchedEvolveResult:
     """All lanes of one batched run (lane-major arrays, lane = li*R + r)."""
     genomes: Genome       # stacked numpy pytree: (L, c, 3) / (L, n_o)
-    wmed: np.ndarray      # (L,)
+    error: np.ndarray     # (L,) final metric score per lane
     area: np.ndarray      # (L,)
     levels: np.ndarray    # (L,) per-lane target level
     seeds: np.ndarray     # (L,) per-lane RNG seed
     generations: int
-    history: np.ndarray   # (G//block, L, 2) best (wmed, area) per block
+    history: np.ndarray   # (G//block, L, 2) best (error, area) per block
     wall_s: float
+    metric: str = "wmed"
+
+    @property
+    def wmed(self) -> np.ndarray:
+        """Deprecated pre-Objective alias; use ``.error``."""
+        warnings.warn("BatchedEvolveResult.wmed is deprecated; use .error "
+                      "(the value of the objective's metric, see .metric)",
+                      DeprecationWarning, stacklevel=2)
+        return self.error
 
     @property
     def n_lanes(self) -> int:
@@ -111,9 +149,10 @@ class BatchedEvolveResult:
         """Extract one lane as a serial-shaped EvolveResult."""
         return EvolveResult(
             genome=jax.tree.map(lambda x: x[i], self.genomes),
-            wmed=float(self.wmed[i]), area=float(self.area[i]),
+            error=float(self.error[i]), area=float(self.area[i]),
             level=float(self.levels[i]), generations=self.generations,
-            history=self.history[:, i, :], wall_s=self.wall_s)
+            history=self.history[:, i, :], wall_s=self.wall_s,
+            metric=self.metric)
 
 
 def _base_config(cfg: EvolveConfig) -> dict:
@@ -122,25 +161,67 @@ def _base_config(cfg: EvolveConfig) -> dict:
             for f in dataclasses.fields(EvolveConfig)}
 
 
-def _fitness_fn(exact, pmax, n_i, signed, bias_frac):
-    """Fitness per Eq. 1 (optionally bias-constrained).
+def _resolve_objective(cfg: EvolveConfig,
+                       override: Objective | str | None = None) -> Objective:
+    """cfg/kwarg objective -> concrete Objective (folding legacy bias_frac)."""
+    obj = override if override is not None else cfg.objective
+    if obj is None:
+        obj = Objective()
+    elif isinstance(obj, str):
+        obj = Objective(metric=obj)
+    if cfg.bias_frac is not None and obj.constraints.bias_frac is None:
+        obj = dataclasses.replace(
+            obj, constraints=dataclasses.replace(obj.constraints,
+                                                 bias_frac=cfg.bias_frac))
+    return obj
 
-    ``weights`` and ``level`` are runtime arguments so one traced program
-    serves every lane of a batched sweep; returns (fitness, wmed, area).
+
+def _fitness_fn(exact, pmax, n_i, signed, objective: Objective,
+                eval_backend="jnp", mask=None):
+    """Constrained-area fitness per Eq. 1 under a pluggable objective.
+
+    ``weights`` and the LaneConstraints values are runtime arguments so one
+    traced program serves every lane of a batched sweep; returns
+    (fitness, error, area).  Which constraint *families* are active is
+    static (it is one objective per run), so disabled terms cost nothing in
+    the hot loop and the default objective's trace -- and therefore its
+    fitness values -- stays bit-identical to the historical WMED-only
+    form; only the bounds are runtime lane values.  ``mask`` is the eval
+    domain's validity vector (None = exhaustive), shared by every lane.
     """
+    m = obj_mod.get_metric(objective.metric)
+    use_bias = objective.constraints.bias_frac is not None
+    use_wce = objective.constraints.wce_cap is not None
+    wce_fn = obj_mod.get_metric("wce").fn
 
-    def fit(genome: Genome, in_planes, weights, level):
-        planes = cgp_mod.eval_genome(genome, in_planes, n_i=n_i)
+    if eval_backend == "pallas":
+        from repro.kernels.cgp_eval.ops import cgp_eval
+
+        def eval_planes(genome, in_planes):
+            return cgp_eval(genome.nodes, genome.outs, in_planes, n_i=n_i)
+    elif eval_backend == "jnp":
+        def eval_planes(genome, in_planes):
+            return cgp_mod.eval_genome(genome, in_planes, n_i=n_i)
+    else:
+        raise ValueError(f"unknown eval_backend {eval_backend!r}; "
+                         "expected 'jnp' or 'pallas'")
+
+    def fit(genome: Genome, in_planes, weights,
+            cons: obj_mod.LaneConstraints):
+        planes = eval_planes(genome, in_planes)
         vals = cgp_mod.unpack_planes(planes)
         n_o = planes.shape[0]
         vals = cgp_mod.to_signed(vals, n_o) if signed else vals
-        e = wmed_mod.weighted_mean_error_distance(vals, exact, weights, pmax)
+        e = m.fn(vals, exact, weights, pmax, mask)
         a = cgp_mod.area(genome, n_i=n_i)
-        ok = e <= level
-        if bias_frac is not None:
+        ok = e <= cons.level
+        if use_bias:
             serr = vals.astype(jnp.float32) - exact.astype(jnp.float32)
-            wme = jnp.abs(jnp.dot(weights, serr)) / pmax
-            ok = ok & (wme <= bias_frac * level)
+            bias = jnp.abs(jnp.dot(weights, serr)) / pmax
+            ok = ok & (bias <= cons.bias_bound)
+        if use_wce:
+            ok = ok & (wce_fn(vals, exact, weights, pmax, mask)
+                       <= cons.wce_cap)
         f = jnp.where(ok, a, jnp.float32(jnp.inf))
         return f, e, a
 
@@ -148,53 +229,58 @@ def _fitness_fn(exact, pmax, n_i, signed, bias_frac):
 
 
 def make_batched_step(cfg: EvolveConfig, exact, in_planes,
-                      *, weights_batched: bool = False) -> Callable:
+                      *, weights_batched: bool = False,
+                      objective: Objective | str | None = None,
+                      mask=None) -> Callable:
     """Build the jitted lane-batched G-generation evolution block.
 
     Returns ``(block, fit)`` where ``block(parents, parent_f, keys,
-    weights, levels)`` advances every lane by ``cfg.gens_per_jit_block``
+    weights, cons)`` advances every lane by ``cfg.gens_per_jit_block``
     generations inside one ``lax.scan`` and ``fit(genome, in_planes,
-    weights, level)`` scores a single genome.  All lane state (parents,
-    fitness, keys, levels -- and weights when ``weights_batched``) carries a
-    leading lane axis; ``weights`` may instead be a single shared
-    (2^(2w),) vector.
+    weights, cons)`` scores a single genome (``cons`` a scalar
+    ``LaneConstraints``).  All lane state (parents, fitness, keys,
+    constraint values -- and weights when ``weights_batched``) carries a
+    leading lane axis; ``weights`` may instead be a single shared (V,)
+    vector.
     """
     n_i = 2 * cfg.w
     pmax = jnp.float32(wmed_mod.p_max(cfg.w))
     allowed = jnp.asarray(np.array(cfg.allowed_fns, dtype=np.int32))
-    fit = _fitness_fn(exact, pmax, n_i, cfg.signed, cfg.bias_frac)
+    obj = _resolve_objective(cfg, objective)
+    fit = _fitness_fn(exact, pmax, n_i, cfg.signed, obj, cfg.eval_backend,
+                      mask=mask)
     w_axis = 0 if weights_batched else None
 
-    def lane_generation(parent, parent_f, key, weights, level):
+    def lane_generation(parent, parent_f, key, weights, cons):
         keys = jax.random.split(key, cfg.lam)
         offspring = jax.vmap(
             lambda k: cgp_mod.mutate(parent, k, allowed, n_i=n_i, h=cfg.h)
         )(keys)
         f, e, a = jax.vmap(
-            lambda g: fit(g, in_planes, weights, level))(offspring)
+            lambda g: fit(g, in_planes, weights, cons))(offspring)
         new_parent, new_f, best = sel_mod.replace_parent(
             parent, parent_f, offspring, f)
         return new_parent, new_f, e[best], a[best]
 
-    def score(parents, weights, levels):
+    def score(parents, weights, cons):
         return jax.vmap(
-            lambda g, wt, lv: fit(g, in_planes, wt, lv),
-            in_axes=(0, w_axis, 0))(parents, weights, levels)
+            lambda g, wt, cn: fit(g, in_planes, wt, cn),
+            in_axes=(0, w_axis, 0))(parents, weights, cons)
 
     @jax.jit
-    def block(parents: Genome, parent_f, keys, weights, levels):
+    def block(parents: Genome, parent_f, keys, weights,
+              cons: obj_mod.LaneConstraints):
         # NaN parent_f marks the first block: score the seed in-program
-        # (the exact seed satisfies any level; its fitness is its area)
-        # so the driver never pays an eager, uncompiled fitness pass.
-        _, e0, a0 = score(parents, weights, levels)
-        f0 = jnp.where(e0 <= levels, a0, jnp.float32(jnp.inf))
+        # (the exact seed satisfies any constraint set; its fitness is its
+        # area) so the driver never pays an eager, uncompiled fitness pass.
+        f0, e0, a0 = score(parents, weights, cons)
         parent_f = jnp.where(jnp.isnan(parent_f), f0, parent_f)
 
         def generation(carry, gen_keys):
             ps, pf = carry
             ps, pf, e, a = jax.vmap(
                 lane_generation, in_axes=(0, 0, 0, w_axis, 0)
-            )(ps, pf, gen_keys, weights, levels)
+            )(ps, pf, gen_keys, weights, cons)
             return (ps, pf), (e, a)
 
         # per-lane split mirrors the historical serial driver exactly
@@ -203,7 +289,7 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
         subkeys = jnp.swapaxes(subkeys, 0, 1)  # (G, L, key)
         (parents, parent_f), (es, areas) = jax.lax.scan(
             generation, (parents, parent_f), subkeys)
-        _, e_fin, a_fin = score(parents, weights, levels)
+        _, e_fin, a_fin = score(parents, weights, cons)
         return parents, parent_f, es[-1], areas[-1], e_fin, a_fin
 
     return block, fit
@@ -212,16 +298,23 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
 def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
                    pmf_x: np.ndarray | None = None, *,
                    vec_weights: np.ndarray | None = None,
+                   objective: Objective | str | None = None,
                    verbose: bool = False) -> BatchedEvolveResult:
     """Run ``len(cfg.levels) * cfg.repeats`` independent evolutions at once.
 
     ``seed_genome`` is either a single genome (replicated to every lane) or
-    an already lane-stacked Genome pytree.  ``vec_weights`` overrides the
-    per-test-vector weights; pass shape (2^(2w),) to share one distribution
-    across lanes or (L, 2^(2w)) for per-lane distributions.  Default is the
-    paper's alpha = D(x) derived from ``pmf_x``.
+    an already lane-stacked Genome pytree.  ``objective`` (or
+    ``cfg.objective``) selects metric / constraints / eval domain; the
+    default is the paper's exhaustive-WMED objective.  ``vec_weights``
+    overrides the per-test-vector weights (exhaustive domain only); pass
+    shape (2^(2w),) to share one distribution across lanes or (L, 2^(2w))
+    for per-lane distributions.  Default is the paper's alpha = D(x)
+    derived from ``pmf_x``; metrics that don't consume weights (``med``,
+    ``wce``) fall back to a uniform D when no PMF is given.
     """
     w = cfg.w
+    obj = _resolve_objective(cfg, objective)
+    metric = obj_mod.get_metric(obj.metric)
     R = max(1, int(cfg.repeats))
     level_list = [float(l) for l in cfg.levels]
     lane_levels = np.repeat(np.asarray(level_list, np.float32), R)
@@ -230,21 +323,18 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
          for li in range(len(level_list)) for r in range(R)], np.int64)
     L = int(lane_levels.shape[0])
 
-    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
-    exact = jnp.asarray(wmed_mod.exact_products(w, cfg.signed).astype(np.int32))
-    if vec_weights is None:
-        if pmf_x is None:
-            raise ValueError("need pmf_x or vec_weights")
-        weights = jnp.asarray(dist.vector_weights(pmf_x, w))
-    else:
-        weights = jnp.asarray(vec_weights)
+    if pmf_x is None and vec_weights is None and not metric.uses_weights:
+        pmf_x = dist.uniform_pmf(w)
+    ctx = obj.resolve_domain(w).build(w, cfg.signed, pmf_x, vec_weights)
+    weights = ctx.weights
     weights_batched = weights.ndim == 2
     if weights_batched and weights.shape[0] != L:
         raise ValueError(f"per-lane weights: got {weights.shape[0]} rows "
                          f"for {L} lanes")
-    block, fit = make_batched_step(cfg, exact, in_planes,
-                                   weights_batched=weights_batched)
-    levels_j = jnp.asarray(lane_levels)
+    block, fit = make_batched_step(cfg, ctx.exact, ctx.in_planes,
+                                   weights_batched=weights_batched,
+                                   objective=obj, mask=ctx.mask)
+    cons = obj.constraints.lane_params(lane_levels)
 
     if seed_genome.nodes.ndim == 2:
         parents = cgp_mod.tile_genome(seed_genome, L)
@@ -262,26 +352,27 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
         split = jax.vmap(jax.random.split)(keys)   # (L, 2, key)
         keys, subs = split[:, 0], split[:, 1]
         parents, parent_f, e_last, a_last, e_fin, a_fin = block(
-            parents, parent_f, subs, weights, levels_j)
+            parents, parent_f, subs, weights, cons)
         hist.append(np.stack([np.asarray(e_last), np.asarray(a_last)],
                              axis=-1))
         if verbose and (b % 4 == 0 or b == n_blocks - 1):
             e_np, a_np = np.asarray(e_last), np.asarray(a_last)
             print(f"  gen {(b + 1) * cfg.gens_per_jit_block:6d} x{L} lanes "
-                  f"wmed=[{e_np.min():.5f},{e_np.max():.5f}] "
+                  f"{metric.name}=[{e_np.min():.5f},{e_np.max():.5f}] "
                   f"area=[{a_np.min():8.2f},{a_np.max():8.2f}]")
     return BatchedEvolveResult(
         genomes=jax.tree.map(np.asarray, parents),
-        wmed=np.asarray(e_fin), area=np.asarray(a_fin),
+        error=np.asarray(e_fin), area=np.asarray(a_fin),
         levels=lane_levels, seeds=lane_seeds,
         generations=cfg.generations, history=np.asarray(hist),
-        wall_s=time.time() - t0)
+        wall_s=time.time() - t0, metric=metric.name)
 
 
-def evolve(cfg: EvolveConfig, seed_genome: Genome, pmf_x: np.ndarray,
-           level: float, verbose: bool = False,
-           vec_weights: np.ndarray | None = None) -> EvolveResult:
-    """Run one CGP approximation for target WMED level ``level``.
+def evolve(cfg: EvolveConfig, seed_genome: Genome,
+           pmf_x: np.ndarray | None, level: float, verbose: bool = False,
+           vec_weights: np.ndarray | None = None,
+           objective: Objective | str | None = None) -> EvolveResult:
+    """Run one CGP approximation for target error level ``level``.
 
     Thin wrapper over a 1-lane batched run (lane seed = ``cfg.seed``).
     ``vec_weights`` overrides the per-test-vector weights (e.g. the joint
@@ -289,14 +380,22 @@ def evolve(cfg: EvolveConfig, seed_genome: Genome, pmf_x: np.ndarray,
     """
     bcfg = BatchedEvolveConfig(**_base_config(cfg),
                                levels=(float(level),), repeats=1)
-    res = evolve_batched(bcfg, seed_genome, pmf_x,
-                         vec_weights=vec_weights, verbose=verbose)
+    res = evolve_batched(bcfg, seed_genome, pmf_x, vec_weights=vec_weights,
+                         objective=objective, verbose=verbose)
     return res.lane(0)
 
 
-def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray,
+def _seed_genome(cfg: EvolveConfig) -> Genome:
+    """The exact multiplier seed matching ``cfg`` (paper Sec. IV)."""
+    seed_nl = (nl_mod.baugh_wooley_multiplier(cfg.w) if cfg.signed
+               else nl_mod.array_multiplier(cfg.w))
+    return cgp_mod.genome_from_netlist(seed_nl)
+
+
+def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                  levels: Sequence[float] = PAPER_LEVELS,
-                 repeats: int = 1, verbose: bool = False):
+                 repeats: int = 1, verbose: bool = False,
+                 objective: Objective | str | None = None):
     """Paper's outer loop, serial: one evolution per level (x repeats).
 
     Returns the per-level best results; together they form the error/area
@@ -304,29 +403,29 @@ def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray,
     matching ``cfg.signed``.  Kept as the measured baseline for
     ``pareto_sweep_batched`` -- prefer the batched form everywhere else.
     """
-    seed_nl = (nl_mod.baugh_wooley_multiplier(cfg.w) if cfg.signed
-               else nl_mod.array_multiplier(cfg.w))
+    g0 = _seed_genome(cfg)
     results = []
     for li, level in enumerate(levels):
         best = None
         for r in range(repeats):
             c = dataclasses.replace(cfg, seed=cfg.seed + 1000 * li + r)
-            g0 = cgp_mod.genome_from_netlist(seed_nl)
-            res = evolve(c, g0, pmf_x, level, verbose=verbose)
+            res = evolve(c, g0, pmf_x, level,
+                         verbose=verbose, objective=objective)
             if best is None or res.area < best.area:
                 best = res
         results.append(best)
         if verbose:
-            print(f"level={level:8.5f} -> wmed={best.wmed:.5f} "
+            print(f"level={level:8.5f} -> {best.metric}={best.error:.5f} "
                   f"area={best.area:8.2f} ({best.wall_s:.1f}s)")
     return results
 
 
-def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray,
+def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                          levels: Sequence[float] = PAPER_LEVELS,
                          repeats: int = 1, verbose: bool = False,
                          vec_weights: np.ndarray | None = None,
-                         pareto_filter: bool = False
+                         pareto_filter: bool = False,
+                         objective: Objective | str | None = None
                          ) -> List[EvolveResult]:
     """Lane-batched Pareto sweep: all (level, repeat) lanes in one program.
 
@@ -334,10 +433,12 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray,
     seeds, same best-area-per-level reduction, same return shape -- but all
     lanes advance inside one jitted scan, so the accelerator sees a single
     compiled program instead of ``len(levels) * repeats`` dispatch loops.
+    ``objective`` selects the error metric / constraints / eval domain for
+    every lane (levels then live on that metric's scale).
 
     With ``pareto_filter`` (and ``levels`` sorted ascending), each level
     reports the best result over all levels at least as tight: a circuit
-    meeting a tighter WMED budget trivially meets a looser one, so the
+    meeting a tighter error budget trivially meets a looser one, so the
     returned front is monotone non-increasing in area -- the non-dominated
     set the paper plots, robust to per-lane search noise at small budgets.
     """
@@ -348,10 +449,8 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray,
                          f"tighter (got {levels})")
     bcfg = BatchedEvolveConfig(**_base_config(cfg),
                                levels=levels, repeats=repeats)
-    seed_nl = (nl_mod.baugh_wooley_multiplier(cfg.w) if cfg.signed
-               else nl_mod.array_multiplier(cfg.w))
-    g0 = cgp_mod.genome_from_netlist(seed_nl)
-    batch = evolve_batched(bcfg, g0, pmf_x, vec_weights=vec_weights,
+    batch = evolve_batched(bcfg, _seed_genome(cfg), pmf_x,
+                           vec_weights=vec_weights, objective=objective,
                            verbose=verbose)
     R = max(1, int(repeats))
     results = []
@@ -362,6 +461,6 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray,
             best = results[-1]
         results.append(best)
         if verbose:
-            print(f"level={level:8.5f} -> wmed={best.wmed:.5f} "
+            print(f"level={level:8.5f} -> {best.metric}={best.error:.5f} "
                   f"area={best.area:8.2f} (batch {batch.wall_s:.1f}s)")
     return results

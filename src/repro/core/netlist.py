@@ -213,6 +213,32 @@ def eval_netlist_np(nodes: np.ndarray, outs: np.ndarray, n_i: int,
     return buf[outs]
 
 
+def pack_input_vectors(x: np.ndarray, y: np.ndarray, w: int) -> np.ndarray:
+    """Pack arbitrary operand-pattern pairs into (2w, ceil(V/32)) uint32.
+
+    Bit-plane i < w holds bit i of each x pattern, plane w + i bit i of y
+    (the multiplier seeds' input order).  V is padded to a whole 32-bit
+    word with (0, 0) vectors; callers that score the planes must zero the
+    padded slots' weights (see ``objective.SampledDomain``).
+    """
+    x = np.asarray(x, np.uint32)
+    y = np.asarray(y, np.uint32)
+    planes = []
+    for i in range(w):
+        planes.append((x >> i) & 1)
+    for i in range(w):
+        planes.append((y >> i) & 1)
+    bits = np.stack(planes).astype(np.uint32)  # (2w, V)
+    V = bits.shape[1]
+    if V % 32:
+        pad = 32 - V % 32
+        bits = np.concatenate([bits, np.zeros((2 * w, pad), np.uint32)], axis=1)
+        V += pad
+    words = bits.reshape(2 * w, V // 32, 32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (words << shifts).sum(axis=2, dtype=np.uint32)
+
+
 def pack_exhaustive_inputs(w: int) -> np.ndarray:
     """All 2^(2w) input pairs as packed bit-planes (2w, 2^(2w)/32) uint32.
 
@@ -222,20 +248,7 @@ def pack_exhaustive_inputs(w: int) -> np.ndarray:
     v = np.arange(1 << (2 * w), dtype=np.uint64)
     x = (v >> w).astype(np.uint32)
     y = (v & ((1 << w) - 1)).astype(np.uint32)
-    planes = []
-    for i in range(w):
-        planes.append((x >> i) & 1)
-    for i in range(w):
-        planes.append((y >> i) & 1)
-    bits = np.stack(planes).astype(np.uint32)  # (2w, 2^{2w})
-    V = bits.shape[1]
-    if V % 32:  # pad to a whole word for tiny widths (test-only path)
-        pad = 32 - V % 32
-        bits = np.concatenate([bits, np.zeros((2 * w, pad), np.uint32)], axis=1)
-        V += pad
-    words = bits.reshape(2 * w, V // 32, 32)
-    shifts = np.arange(32, dtype=np.uint32)
-    return (words << shifts).sum(axis=2, dtype=np.uint32)
+    return pack_input_vectors(x, y, w)
 
 
 def unpack_outputs_np(planes: np.ndarray) -> np.ndarray:

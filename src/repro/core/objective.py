@@ -1,0 +1,335 @@
+"""Pluggable search objectives: error metrics, constraints, eval domains.
+
+The paper hard-wires one objective -- minimize area s.t. WMED_D <= E_i
+(Eq. 1) -- but the machinery generalizes (and follow-up work exploits it):
+arxiv 2206.13077 evolves under *combined* error constraints (mean-error
+target plus a worst-case cap), and arxiv 2003.02491 swaps the exhaustive
+error oracle for cheaper estimated evaluation as operand width grows.
+This module makes all three axes first-class (DESIGN.md §10):
+
+* **ErrorMetric** -- a named, jit-traceable reduction
+  ``fn(approx, exact, weights, pmax) -> scalar``, looked up by name in a
+  registry (``wmed``, ``med``, ``wce``, ``er``, ``mre``).  Every metric is
+  weight-aware so one signature serves exhaustive and sampled domains; with
+  uniform weights each reduces to its conventional (unweighted) form.
+* **Constraints** -- the feasibility set around the primary metric: the
+  per-lane target ``level`` E_i, an optional signed-bias bound (subsumes
+  the old ``EvolveConfig.bias_frac``, DESIGN.md §7.2), and an optional
+  normalized worst-case-error cap (the combined-constraint search of
+  2206.13077).  Constraint *values* are runtime lane parameters
+  (``LaneConstraints``) so one traced program serves every lane of the
+  batched scan; disabled constraints carry a +inf bound instead of a
+  different trace.
+* **EvalDomain** -- where the error is measured: ``ExhaustiveDomain``
+  enumerates all 2^(2w) vectors (w <= 8), ``SampledDomain`` draws a fixed
+  Monte-Carlo vector set (x ~ D, y ~ uniform; the ``sampled_wmed``
+  estimator of wmed.py) so w > 8 multipliers -- previously not evolvable
+  at all -- fit the same engine.
+
+An **Objective** bundles (metric, constraints, domain) and is what
+``EvolveConfig``/``evolve_batched``/``pareto_sweep_batched`` consume; the
+default ``Objective()`` reproduces the paper's WMED search bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributions as dist
+from repro.core import netlist as nl_mod
+from repro.core import wmed as wmed_mod
+
+
+# Widest operand for which 2^(2w) exhaustive evaluation stays cheap enough
+# for the fitness inner loop (65536 vectors = 2048 packed words at w = 8).
+EXHAUSTIVE_MAX_W = 8
+
+
+# ------------------------------------------------------------ error metrics
+
+@dataclasses.dataclass(frozen=True)
+class ErrorMetric:
+    """A named error reduction over an evaluated candidate.
+
+    ``fn(approx, exact, weights, pmax, mask=None) -> scalar`` must be
+    jit-traceable; ``weights`` is the eval domain's probability vector and
+    ``mask`` its validity vector (1 = real test vector, 0 = padding;
+    None = every vector is real).  The mask -- not the weight support --
+    bounds uniform reductions (``med``) and the worst-case scan (``wce``),
+    so a vector whose probability underflows to 0.0 still counts toward
+    the worst case.  ``uses_weights`` is False for metrics that ignore the
+    probability vector entirely, letting the engine default to a uniform
+    distribution when no PMF is supplied.
+    """
+
+    name: str
+    fn: Callable[..., jax.Array]
+    uses_weights: bool = True
+    description: str = ""
+
+
+_REGISTRY: dict[str, ErrorMetric] = {}
+
+
+def register_metric(name: str, *, uses_weights: bool = True,
+                    description: str = "") -> Callable:
+    """Decorator registering ``fn(approx, exact, weights, pmax, mask=None)``.
+
+    The engine always passes ``mask`` (the domain's validity vector, None
+    on exhaustive domains) as the fifth argument, so registered functions
+    must accept it even if they ignore it.
+    """
+
+    def deco(fn):
+        _REGISTRY[name] = ErrorMetric(name=name, fn=fn,
+                                      uses_weights=uses_weights,
+                                      description=description)
+        return fn
+
+    return deco
+
+
+def available_metrics() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_metric(metric: str | ErrorMetric) -> ErrorMetric:
+    """Resolve a metric by name (or pass an ErrorMetric through)."""
+    if isinstance(metric, ErrorMetric):
+        return metric
+    try:
+        return _REGISTRY[metric]
+    except KeyError:
+        raise ValueError(
+            f"unknown error metric {metric!r}; available: "
+            f"{', '.join(available_metrics())}") from None
+
+
+def _mask_uniform(n: int, mask: jax.Array | None) -> jax.Array:
+    """Uniform distribution over the domain's real (non-padded) vectors."""
+    if mask is None:
+        return jnp.full((n,), 1.0 / n, jnp.float32)
+    on = mask.astype(jnp.float32)
+    return on / jnp.sum(on)
+
+
+@register_metric("wmed", description="weighted mean error distance (Eq. 1)")
+def _wmed(approx, exact, weights, pmax, mask=None):
+    return wmed_mod.weighted_mean_error_distance(approx, exact, weights, pmax)
+
+
+@register_metric("med", uses_weights=False,
+                 description="mean error distance (uniform over the domain)")
+def _med(approx, exact, weights, pmax, mask=None):
+    return wmed_mod.weighted_mean_error_distance(
+        approx, exact, _mask_uniform(exact.shape[0], mask), pmax)
+
+
+@register_metric("wce", uses_weights=False,
+                 description="normalized worst-case error over the domain")
+def _wce(approx, exact, weights, pmax, mask=None):
+    err = jnp.abs(approx.astype(jnp.float32) - exact.astype(jnp.float32))
+    if mask is not None:
+        err = jnp.where(mask > 0, err, 0.0)
+    return jnp.max(err) / pmax
+
+
+@register_metric("er", description="weighted error rate P_D[M~(v) != M(v)]")
+def _er(approx, exact, weights, pmax, mask=None):
+    return jnp.dot(weights.astype(jnp.float32),
+                   (approx != exact).astype(jnp.float32))
+
+
+@register_metric("mre", description="weighted mean relative error")
+def _mre(approx, exact, weights, pmax, mask=None):
+    err = jnp.abs(approx.astype(jnp.float32) - exact.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(exact.astype(jnp.float32)), 1.0)
+    return jnp.dot(weights.astype(jnp.float32), err / den)
+
+
+# -------------------------------------------------------------- constraints
+
+class LaneConstraints(NamedTuple):
+    """Runtime per-lane constraint values fed to the jitted fitness.
+
+    All leaves are (L,) float32 lane vectors (or scalars for a single
+    candidate); +inf disables a bound without changing the traced program,
+    so every (constraint combo x lane) shares one compilation.
+    """
+
+    level: jax.Array       # primary-metric target E_i
+    bias_bound: jax.Array  # |weighted mean signed error| / P_max bound
+    wce_cap: jax.Array     # normalized worst-case error cap
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    """Feasibility set around the primary metric target.
+
+    * ``bias_frac`` -- the signed-bias bound of DESIGN.md §7.2:
+      ``|Σ_v α(v)·(M~(v) − exact(v))| / P_max <= bias_frac · E_i``.
+    * ``wce_cap`` -- absolute cap on the normalized worst-case error
+      (WCE / P_max), independent of E_i, per arxiv 2206.13077's combined
+      mean+worst-case constraint searches.
+    """
+
+    bias_frac: float | None = None
+    wce_cap: float | None = None
+
+    def lane_params(self, levels) -> LaneConstraints:
+        """Materialize runtime lane vectors (inf = constraint off)."""
+        levels = jnp.asarray(levels, jnp.float32)
+        bias = (levels * jnp.float32(self.bias_frac)
+                if self.bias_frac is not None
+                else jnp.full_like(levels, jnp.inf))
+        wce = jnp.full_like(levels, jnp.float32(self.wce_cap)
+                            if self.wce_cap is not None else jnp.inf)
+        return LaneConstraints(level=levels, bias_bound=bias, wce_cap=wce)
+
+
+# ------------------------------------------------------------- eval domains
+
+class EvalCtx(NamedTuple):
+    """What a domain hands the fitness: vectors, truth, weights, scale."""
+
+    in_planes: jax.Array  # (2w, W) uint32 packed operand bit-planes
+    exact: jax.Array      # (32*W,) int32 exact products
+    weights: jax.Array    # (32*W,) float32 (or (L, 32*W) per-lane), sum 1
+    pmax: jax.Array       # float32 normalization 2^(2w)
+    # validity of each vector (1 = real, 0 = word-alignment padding);
+    # None = exhaustive, every vector real.  Distinct from the weight
+    # support: a vector whose probability underflows to 0 still counts
+    # toward worst-case / uniform reductions.
+    mask: jax.Array | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExhaustiveDomain:
+    """All 2^(2w) test vectors -- the paper's exact oracle (w <= 8)."""
+
+    def build(self, w: int, signed: bool, pmf_x, vec_weights) -> EvalCtx:
+        in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+        exact = jnp.asarray(
+            wmed_mod.exact_products(w, signed).astype(np.int32))
+        if vec_weights is None:
+            if pmf_x is None:
+                raise ValueError("need pmf_x or vec_weights")
+            weights = jnp.asarray(dist.vector_weights(pmf_x, w))
+        else:
+            weights = jnp.asarray(vec_weights)
+        return EvalCtx(in_planes, exact, weights,
+                       jnp.float32(wmed_mod.p_max(w)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledDomain:
+    """Fixed Monte-Carlo vector set: x ~ D, y ~ uniform (w > 8 oracle).
+
+    The sample is drawn once (numpy rng, ``seed``) so fitness stays
+    deterministic per genome within a run -- (1+λ) elitism requires it --
+    and uniform per-sample weights make the mean-style registry metrics
+    (``wmed``/``med``/``er``/``mre``) unbiased estimators of their
+    weighted exhaustive forms (``sampled_wmed`` semantics).  Max-style
+    reductions are NOT: ``wce`` (as metric or ``wce_cap`` constraint)
+    only bounds the worst case *over the sample* -- a lower bound on the
+    true WCE -- so sound worst-case certification needs an exhaustive
+    domain.  ``n_samples`` is rounded up to whole 32-bit words; padded
+    slots carry zero weight and a zero validity mask so they never
+    contribute error.
+    """
+
+    n_samples: int = 4096
+    seed: int = 0
+
+    def build(self, w: int, signed: bool, pmf_x, vec_weights) -> EvalCtx:
+        if w > SAMPLED_MAX_W:
+            raise ValueError(
+                f"w={w} exceeds the int32 product range of the evaluation "
+                f"pipeline (max w = {SAMPLED_MAX_W})")
+        if vec_weights is None and pmf_x is None:
+            raise ValueError("need pmf_x (x is sampled from it) for a "
+                             "SampledDomain")
+        if vec_weights is not None:
+            raise ValueError("SampledDomain derives weights from its own "
+                             "sample; pass pmf_x instead of vec_weights")
+        n = 1 << w
+        ns = int(self.n_samples)
+        rng = np.random.default_rng(self.seed)
+        p = np.asarray(pmf_x, np.float64)
+        x = rng.choice(n, size=ns, p=p / p.sum()).astype(np.uint32)
+        y = rng.integers(0, n, size=ns).astype(np.uint32)
+        pad = (-ns) % 32
+        if pad:
+            x = np.concatenate([x, np.zeros(pad, np.uint32)])
+            y = np.concatenate([y, np.zeros(pad, np.uint32)])
+        weights = np.zeros(ns + pad, np.float32)
+        weights[:ns] = 1.0 / ns
+        mask = np.zeros(ns + pad, np.float32)
+        mask[:ns] = 1.0
+        exact = _exact_products_at(x, y, w, signed)
+        return EvalCtx(jnp.asarray(nl_mod.pack_input_vectors(x, y, w)),
+                       jnp.asarray(exact), jnp.asarray(weights),
+                       jnp.float32(wmed_mod.p_max(w)),
+                       mask=jnp.asarray(mask))
+
+
+# Widest operand whose products fit the pipeline's int32 value range
+# (unpack_planes bit weights and exact products; 2w bits must stay < 2^31).
+SAMPLED_MAX_W = 15
+
+
+def _exact_products_at(x: np.ndarray, y: np.ndarray, w: int,
+                       signed: bool) -> np.ndarray:
+    """Exact products of operand bit patterns (int32; w <= SAMPLED_MAX_W)."""
+    n = 1 << w
+    xi = x.astype(np.int64)
+    yi = y.astype(np.int64)
+    if signed:
+        xi = np.where(xi < n // 2, xi, xi - n)
+        yi = np.where(yi < n // 2, yi, yi - n)
+    return (xi * yi).astype(np.int32)
+
+
+EvalDomain = ExhaustiveDomain | SampledDomain
+
+
+def default_domain(w: int) -> EvalDomain:
+    """Exhaustive while 2^(2w) is enumerable, Monte-Carlo beyond."""
+    return ExhaustiveDomain() if w <= EXHAUSTIVE_MAX_W else SampledDomain()
+
+
+# ---------------------------------------------------------------- objective
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """metric + constraints + eval domain = one search objective.
+
+    ``metric`` may be a registry name or an ErrorMetric; ``domain`` of
+    None auto-selects by operand width (``default_domain``).  The default
+    instance is the paper's objective: exhaustive WMED, no extra
+    constraints.
+    """
+
+    metric: str | ErrorMetric = "wmed"
+    constraints: Constraints = Constraints()
+    domain: EvalDomain | None = None
+
+    def resolve_domain(self, w: int) -> EvalDomain:
+        return self.domain if self.domain is not None else default_domain(w)
+
+
+def score_genome(genome, ctx: EvalCtx, metric: str | ErrorMetric,
+                 *, n_i: int, signed: bool) -> jax.Array:
+    """Score one genome under a domain context (test / tooling helper)."""
+    from repro.core import cgp as cgp_mod
+    m = get_metric(metric)
+    planes = cgp_mod.eval_genome(genome, ctx.in_planes, n_i=n_i)
+    vals = cgp_mod.unpack_planes(planes)
+    if signed:
+        vals = cgp_mod.to_signed(vals, planes.shape[0])
+    return m.fn(vals, ctx.exact, ctx.weights, ctx.pmax, ctx.mask)

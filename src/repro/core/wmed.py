@@ -56,11 +56,18 @@ def wmed(approx, exact, weights, w: int):
 
 
 def med(approx, exact, w: int):
-    """Conventional normalized mean error distance (uniform weights)."""
-    n = np.size(exact) if not hasattr(exact, "shape") else exact.shape[0]
-    uni = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
-    return weighted_mean_error_distance(
-        jnp.asarray(approx), jnp.asarray(exact), uni, jnp.float32(p_max(w)))
+    """Conventional normalized mean error distance (uniform weights).
+
+    Routed through the objective registry's ``med`` metric -- the uniform
+    special case of WMED -- so there is exactly one definition of the
+    uniform-weights path (it normalizes over the weight support, which for
+    this all-ones vector is every vector).
+    """
+    from repro.core import objective as obj_mod  # deferred: avoids cycle
+    exact = jnp.asarray(exact)
+    return obj_mod.get_metric("med").fn(
+        jnp.asarray(approx), exact,
+        jnp.ones(exact.shape[:1], jnp.float32), jnp.float32(p_max(w)))
 
 
 @jax.jit

@@ -1,8 +1,13 @@
-"""Public wrappers for the cgp_eval Pallas kernel."""
+"""Public wrappers for the cgp_eval Pallas kernel.
+
+``cgp_eval`` is shape-compatible with ``cgp.eval_genome`` so the evolution
+engine can use it as the fitness inner loop's evaluation backend
+(``EvolveConfig(eval_backend="pallas")``): same (n_i, W) packed bit-plane
+input -- exhaustive or ``objective.SampledDomain`` sampled vectors alike --
+same (n_o, W) output.
+"""
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -12,8 +17,13 @@ from repro.kernels.cgp_eval.kernel import cgp_eval_kernel
 _INTERPRET = True  # CPU container; False on real TPU
 
 
-def cgp_eval(nodes, outs, in_planes, *, n_i: int, bw: int = 512):
-    """Single-genome evaluation; pads W to a block multiple."""
+def cgp_eval(nodes, outs, in_planes, *, n_i: int, bw: int = 512,
+             interpret: bool | None = None):
+    """Single-genome evaluation; pads W to a block multiple.
+
+    ``interpret`` overrides the module default (interpret-mode on CPU,
+    compiled on TPU) for callers that pin a backend explicitly.
+    """
     W = in_planes.shape[1]
     bw = min(bw, W)
     pad = (-W) % bw
@@ -22,7 +32,9 @@ def cgp_eval(nodes, outs, in_planes, *, n_i: int, bw: int = 512):
     out = cgp_eval_kernel(jnp.asarray(nodes, jnp.int32),
                           jnp.asarray(outs, jnp.int32),
                           jnp.asarray(in_planes, jnp.uint32),
-                          n_i=n_i, bw=bw, interpret=_INTERPRET)
+                          n_i=n_i, bw=bw,
+                          interpret=_INTERPRET if interpret is None
+                          else interpret)
     return out[:, :W]
 
 

@@ -19,7 +19,7 @@ def test_short_evolution_reduces_area(signed):
     cfg = ev.EvolveConfig(w=w, signed=signed, generations=300,
                           gens_per_jit_block=100, seed=1)
     res = ev.evolve(cfg, g0, pmf, level=0.02)
-    assert res.wmed <= 0.02 + 1e-6          # constraint respected
+    assert res.error <= 0.02 + 1e-6          # constraint respected
     assert res.area < area0                  # area minimized
     assert res.area > 0
 
@@ -31,7 +31,7 @@ def test_wmed_constraint_never_violated_in_result():
                           gens_per_jit_block=50, seed=3)
     for level in (0.001, 0.05):
         res = ev.evolve(cfg, g0, dist.uniform_pmf(w), level=level)
-        assert res.wmed <= level + 1e-6
+        assert res.error <= level + 1e-6
 
 
 def test_tighter_level_costs_more_area():

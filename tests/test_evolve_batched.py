@@ -43,7 +43,7 @@ def test_single_lane_batched_is_bit_identical_to_serial():
     assert np.array_equal(serial.genome.nodes, lane.genome.nodes)
     assert np.array_equal(serial.genome.outs, lane.genome.outs)
     assert serial.area == lane.area
-    assert serial.wmed == lane.wmed
+    assert serial.error == lane.error
     assert np.array_equal(serial.history, lane.history)
 
 
@@ -62,7 +62,7 @@ def test_multilane_lane_matches_serial_run_with_same_seed():
         assert np.array_equal(serial.genome.outs, lane.genome.outs)
         assert serial.area == lane.area
         # final scoring batches the 2^16-term dot differently under vmap
-        assert abs(serial.wmed - lane.wmed) < 1e-5
+        assert abs(serial.error - lane.error) < 1e-5
 
 
 def test_batched_front_feasible_and_monotone():
@@ -74,7 +74,7 @@ def test_batched_front_feasible_and_monotone():
     # every front point satisfies its level (carried points satisfy a
     # tighter one), and the filtered front is monotone non-increasing
     for r, lvl in zip(results, levels):
-        assert r.wmed <= lvl + 1e-6
+        assert r.error <= lvl + 1e-6
     for tight, loose in zip(areas, areas[1:]):
         assert loose <= tight + 1e-6
     # the loosest level must actually have simplified the seed circuit
@@ -94,7 +94,7 @@ def test_stacked_seed_genomes_and_filter_validation():
                       levels=(0.02, 0.05), repeats=1)
     batch = ev.evolve_batched(cfg, stacked, pmf)
     assert batch.n_lanes == 2
-    assert (batch.wmed <= np.asarray([0.02, 0.05]) + 1e-6).all()
+    assert (batch.error <= np.asarray([0.02, 0.05]) + 1e-6).all()
     # pareto_filter refuses unsorted ladders instead of mislabeling points
     try:
         ev.pareto_sweep_batched(_cfg(seed=0), pmf, levels=(0.1, 0.01),
@@ -113,7 +113,7 @@ def test_per_lane_weight_distributions():
     batch = ev.evolve_batched(cfg, g0, vec_weights=vw)
     assert batch.n_lanes == 2
     # both lanes respect their own constraint under their own distribution
-    assert batch.wmed[0] <= 0.02 + 1e-6
-    assert batch.wmed[1] <= 0.02 + 1e-6
+    assert batch.error[0] <= 0.02 + 1e-6
+    assert batch.error[1] <= 0.02 + 1e-6
     # concentrated vs uniform distributions shape different circuits
     assert not np.array_equal(batch.genomes.nodes[0], batch.genomes.nodes[1])

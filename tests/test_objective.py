@@ -1,0 +1,262 @@
+"""Objective subsystem: metric registry, constraints, eval domains.
+
+Covers the pluggable-objective contracts of DESIGN.md §10: registry
+round-trips, constraint feasibility in evolved results, sampled-domain
+estimator agreement, legacy ``bias_frac`` folding, and the deprecated
+``.wmed`` result shim.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cgp, distributions as dist, evolve as ev
+from repro.core import netlist as nl, objective as obj, wmed
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_round_trip_by_name():
+    # a subset check: register_metric is open for downstream extension
+    assert {"er", "med", "mre", "wce", "wmed"} <= set(obj.available_metrics())
+    for name in obj.available_metrics():
+        m = obj.get_metric(name)
+        assert m.name == name
+        # ErrorMetric instances pass through unchanged
+        assert obj.get_metric(m) is m
+
+
+def test_unknown_metric_error_names_the_alternatives():
+    with pytest.raises(ValueError, match="unknown error metric"):
+        obj.get_metric("nope")
+    with pytest.raises(ValueError, match="wmed"):
+        obj.get_metric("WMED")  # names are exact, not case-folded
+
+
+def test_metrics_reduce_to_plain_forms_under_uniform_weights():
+    """With uniform weights each registry metric equals its conventional
+    (unweighted) counterpart in wmed.py."""
+    w = 6
+    v = 1 << (2 * w)
+    rng = np.random.default_rng(0)
+    exact = wmed.exact_products(w, False).astype(np.int32)
+    approx = (exact + rng.integers(-40, 40, v)).astype(np.int32)
+    uni = jnp.full((v,), 1.0 / v, jnp.float32)
+    pmax = jnp.float32(wmed.p_max(w))
+    a, e = jnp.asarray(approx), jnp.asarray(exact)
+
+    def score(name):
+        return float(obj.get_metric(name).fn(a, e, uni, pmax))
+
+    assert np.isclose(score("wmed"), float(wmed.med(a, e, w)), rtol=1e-6)
+    assert np.isclose(score("med"), float(wmed.med(a, e, w)), rtol=1e-6)
+    assert np.isclose(score("wce"),
+                      float(wmed.worst_case_error(a, e)) / float(pmax))
+    assert np.isclose(score("er"), float(wmed.error_rate(a, e)), rtol=1e-6)
+    assert np.isclose(score("mre"), float(wmed.mean_relative_error(a, e)),
+                      rtol=1e-5)
+
+
+def test_med_and_wce_honor_the_validity_mask():
+    """Padded vectors (mask 0) must not contribute to med/wce; but a
+    zero-*weight* real vector still counts (probability underflow must not
+    punch holes in the worst case)."""
+    approx = jnp.asarray([0, 0, 99], jnp.int32)
+    exact = jnp.asarray([0, 4, 0], jnp.int32)
+    weights = jnp.asarray([1.0, 0.0, 0.0], jnp.float32)
+    mask = jnp.asarray([1.0, 1.0, 0.0], jnp.float32)  # last = padding
+    pmax = jnp.float32(16.0)
+    med = float(obj.get_metric("med").fn(approx, exact, weights, pmax, mask))
+    assert np.isclose(med, (0 + 4) / 2 / 16.0)
+    # wce sees the zero-weight (underflowed) vector at index 1...
+    wce = float(obj.get_metric("wce").fn(approx, exact, weights, pmax, mask))
+    assert np.isclose(wce, 4 / 16.0)
+    # ...and with no mask (exhaustive domain) every vector counts
+    wce_all = float(obj.get_metric("wce").fn(approx, exact, weights, pmax))
+    assert np.isclose(wce_all, 99 / 16.0)
+
+
+# ----------------------------------------------------------- constraints
+
+def test_lane_params_inf_disables():
+    lanes = np.asarray([0.01, 0.05], np.float32)
+    cons = obj.Constraints().lane_params(lanes)
+    assert np.all(np.isinf(np.asarray(cons.bias_bound)))
+    assert np.all(np.isinf(np.asarray(cons.wce_cap)))
+    cons = obj.Constraints(bias_frac=0.5, wce_cap=0.2).lane_params(lanes)
+    assert np.allclose(np.asarray(cons.bias_bound), lanes * 0.5)
+    assert np.allclose(np.asarray(cons.wce_cap), 0.2)
+
+
+def test_wce_capped_evolution_respects_cap():
+    """Combined-constraint search (2206.13077): WMED target + WCE cap."""
+    w = 6
+    cap = 0.02
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    pmf = dist.half_normal_pmf(w, std=12.0)
+    cfg = ev.EvolveConfig(
+        w=w, signed=False, generations=120, gens_per_jit_block=60, seed=2,
+        objective=ev.Objective(metric="wmed",
+                               constraints=ev.Constraints(wce_cap=cap)))
+    res = ev.evolve(cfg, g0, pmf, level=0.05)
+    assert res.metric == "wmed"
+    assert res.error <= 0.05 + 1e-6
+    # re-measure the evolved circuit's WCE independently of the engine
+    ctx = obj.ExhaustiveDomain().build(w, False, pmf, None)
+    wce_val = float(obj.score_genome(res.genome, ctx, "wce",
+                                     n_i=2 * w, signed=False))
+    assert wce_val <= cap + 1e-6
+    assert res.area > 0
+
+
+def test_bias_frac_legacy_config_matches_objective_form():
+    """EvolveConfig(bias_frac=...) folds into Constraints(bias_frac=...)
+    and reaches the same genome bit-for-bit."""
+    w = 6
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    pmf = dist.half_normal_pmf(w, std=12.0)
+    base = dict(w=w, signed=False, generations=60, gens_per_jit_block=30,
+                seed=9)
+    old = ev.evolve(ev.EvolveConfig(**base, bias_frac=0.25), g0, pmf,
+                    level=0.02)
+    new = ev.evolve(
+        ev.EvolveConfig(**base, objective=ev.Objective(
+            constraints=ev.Constraints(bias_frac=0.25))),
+        g0, pmf, level=0.02)
+    assert np.array_equal(old.genome.nodes, new.genome.nodes)
+    assert np.array_equal(old.genome.outs, new.genome.outs)
+    assert old.error == new.error and old.area == new.area
+
+
+# ---------------------------------------------------------- eval domains
+
+def test_default_domain_switches_at_width_9():
+    assert isinstance(obj.default_domain(8), obj.ExhaustiveDomain)
+    assert isinstance(obj.default_domain(9), obj.SampledDomain)
+
+
+def test_sampled_vs_exhaustive_wmed_agreement_w8():
+    """The SampledDomain estimator agrees with the exhaustive WMED for a
+    fixed seed at w = 8 (the unbiased-estimator contract)."""
+    w = 8
+    pmf = dist.half_normal_pmf(w, std=40.0)
+    # an actually-approximate circuit: the exact seed, point-mutated
+    genome = cgp.genome_from_netlist(nl.array_multiplier(w))
+    allowed = jnp.asarray(np.arange(16, dtype=np.int32))
+    for i in range(6):
+        genome = cgp.mutate(genome, jax.random.PRNGKey(i), allowed,
+                            n_i=2 * w, h=5)
+    ex = obj.ExhaustiveDomain().build(w, False, pmf, None)
+    e_full = float(obj.score_genome(genome, ex, "wmed",
+                                    n_i=2 * w, signed=False))
+    sa = obj.SampledDomain(n_samples=32768, seed=0).build(w, False, pmf, None)
+    e_est = float(obj.score_genome(genome, sa, "wmed",
+                                   n_i=2 * w, signed=False))
+    assert e_full > 0
+    assert np.isclose(e_est, e_full, rtol=0.1, atol=1e-5)
+
+
+def test_sampled_domain_rejects_vec_weights_and_requires_pmf():
+    d = obj.SampledDomain(n_samples=64)
+    with pytest.raises(ValueError, match="pmf_x"):
+        d.build(10, False, None, None)
+    with pytest.raises(ValueError, match="vec_weights"):
+        d.build(10, False, dist.uniform_pmf(10), np.ones(4))
+
+
+def test_sampled_domain_pads_to_words_with_zero_weight():
+    d = obj.SampledDomain(n_samples=33, seed=1)  # pads 33 -> 64
+    ctx = d.build(6, False, dist.uniform_pmf(6), None)
+    assert ctx.in_planes.shape == (12, 2)
+    assert ctx.weights.shape == (64,)
+    assert float(jnp.sum(ctx.weights)) == pytest.approx(1.0)
+    assert np.all(np.asarray(ctx.weights[33:]) == 0.0)
+    assert np.all(np.asarray(ctx.mask[:33]) == 1.0)
+    assert np.all(np.asarray(ctx.mask[33:]) == 0.0)
+
+
+def test_sampled_domain_rejects_int32_unsafe_widths():
+    """w = 16 products overflow the pipeline's int32 value range; the
+    domain must refuse rather than evolve against a corrupted oracle."""
+    with pytest.raises(ValueError, match="int32"):
+        obj.SampledDomain(n_samples=64).build(16, False,
+                                              dist.uniform_pmf(16), None)
+
+
+def test_wide_operand_sampled_sweep_w10():
+    """w > 8 -- not evolvable at all pre-Objective -- runs through the
+    batched sweep under a Monte-Carlo domain."""
+    cfg = ev.EvolveConfig(
+        w=10, signed=False, generations=20, gens_per_jit_block=20, seed=0,
+        objective=ev.Objective(domain=ev.SampledDomain(n_samples=512,
+                                                       seed=3)))
+    res = ev.pareto_sweep_batched(cfg, dist.half_normal_pmf(10, std=150.0),
+                                  levels=(0.01, 0.05), repeats=1)
+    for r, lvl in zip(res, (0.01, 0.05)):
+        assert r.metric == "wmed"
+        assert r.error <= lvl + 1e-6   # constraint holds on the estimator
+        assert np.isfinite(r.area) and r.area > 0
+
+
+def test_wce_metric_sweep_without_pmf():
+    """Weight-free metrics (wce) default to a uniform D when no PMF is
+    given; the sweep returns feasible, shrinking circuits."""
+    levels = (0.01, 0.08)
+    cfg = ev.EvolveConfig(w=6, signed=False, generations=60,
+                          gens_per_jit_block=30, seed=4, objective="wce")
+    res = ev.pareto_sweep_batched(cfg, None, levels=levels, repeats=1)
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(6))
+    area0 = float(cgp.area(g0, n_i=12))
+    for r, lvl in zip(res, levels):
+        assert r.metric == "wce"
+        assert r.error <= lvl + 1e-6
+    assert res[-1].area < area0
+
+
+# --------------------------------------------------- engine integration
+
+def test_deprecated_wmed_result_shim():
+    w = 6
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    cfg = ev.EvolveConfig(w=w, generations=20, gens_per_jit_block=20, seed=0)
+    res = ev.evolve(cfg, g0, dist.uniform_pmf(w), level=0.05)
+    with pytest.warns(DeprecationWarning, match="use .error"):
+        assert res.wmed == res.error
+    bcfg = ev.BatchedEvolveConfig(**{
+        f.name: getattr(cfg, f.name)
+        for f in dataclasses.fields(ev.EvolveConfig)},
+        levels=(0.05,), repeats=1)
+    batch = ev.evolve_batched(bcfg, g0, dist.uniform_pmf(w))
+    with pytest.warns(DeprecationWarning, match="use .error"):
+        assert np.array_equal(batch.wmed, batch.error)
+
+
+def test_pallas_eval_backend_matches_jnp_fitness():
+    """The fitness inner loop scores identically through the cgp_eval
+    Pallas kernel (interpret mode here) and the jnp evaluator."""
+    w = 4
+    n_i = 2 * w
+    pmf = dist.half_normal_pmf(w, std=4.0)
+    ctx = obj.ExhaustiveDomain().build(w, False, pmf, None)
+    genome = cgp.genome_from_netlist(nl.array_multiplier(w))
+    allowed = jnp.asarray(np.arange(16, dtype=np.int32))
+    genome = cgp.mutate(genome, jax.random.PRNGKey(0), allowed, n_i=n_i, h=5)
+    cons = obj.Constraints().lane_params(jnp.float32(0.05))
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        cfg = ev.EvolveConfig(w=w, signed=False, eval_backend=backend)
+        _, fit = ev.make_batched_step(cfg, ctx.exact, ctx.in_planes)
+        outs[backend] = [np.asarray(x) for x in
+                         fit(genome, ctx.in_planes, ctx.weights, cons)]
+    for a, b in zip(outs["jnp"], outs["pallas"]):
+        assert np.array_equal(a, b)
+
+
+def test_unknown_eval_backend_raises():
+    cfg = ev.EvolveConfig(w=4, eval_backend="cuda")
+    ctx = obj.ExhaustiveDomain().build(4, False, dist.uniform_pmf(4), None)
+    with pytest.raises(ValueError, match="eval_backend"):
+        ev.make_batched_step(cfg, ctx.exact, ctx.in_planes)

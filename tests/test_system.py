@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.apps import nn_casestudy as cs
-from repro.core import cgp, distributions as dist, evolve as ev
+from repro.core import cgp, evolve as ev
 from repro.core import luts, netlist as nl
 from repro.data import digits
 from repro.nn import mlp_mnist
@@ -43,15 +43,12 @@ def test_full_paper_pipeline(trained_mlp):
 
     # evolve a tight-WMED multiplier under the joint (weight, activation)
     # distribution with the bias constraint (see DESIGN.md §7)
-    from repro.core import distributions as dist
-    from repro.quant.fixed_point import quantize
-    import numpy as _np
     pmf = cs.weight_pmf(params, w_qp)
-    act = _np.mod(_np.asarray(quantize(jnp.asarray(xtr[:256]), x_qp)),
-                  256).ravel()
-    vw = dist.vector_weights_joint(pmf, dist.empirical_pmf(act), 8)
+    vw = cs.joint_vector_weights(pmf, xtr[:256], x_qp)
     cfg = ev.EvolveConfig(w=8, signed=True, generations=400,
-                          gens_per_jit_block=100, seed=0, bias_frac=0.25)
+                          gens_per_jit_block=100, seed=0,
+                          objective=ev.Objective(
+                              constraints=ev.Constraints(bias_frac=0.25)))
     g0 = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(8))
     res = ev.evolve(cfg, g0, pmf, level=1e-3, vec_weights=vw)
     mult = luts.characterize("e", cgp.Genome(jnp.asarray(res.genome.nodes),

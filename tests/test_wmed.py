@@ -57,6 +57,12 @@ def test_wmed_weighting_direction(seed):
     assert _wmed_of(hi.reshape(-1), pmf) > _wmed_of(lo.reshape(-1), pmf)
 
 
+def test_med_accepts_plain_sequences():
+    """med() takes bare Python lists (the old np.size probe's job, now
+    handled by the registry's uniform-weights path)."""
+    assert float(wmed.med([0, 2], [1, 2], 1)) == pytest.approx(0.5 / 4.0)
+
+
 def test_worst_case_and_error_rate():
     approx = EXACT.copy()
     approx[7] += 123
