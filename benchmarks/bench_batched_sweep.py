@@ -9,8 +9,22 @@ identical per-lane seeds, checks that the batched front reproduces the
 serial front (same genomes, same area, WMED equal to float tolerance), and
 reports the speedup.
 
+Since the fused streaming fitness pipeline (DESIGN.md §11) landed, the
+benchmark also measures the *steady-state* block throughput --
+ms/lane-generation with the compile excluded -- for the fused (default)
+and unfused fitness paths, asserts that the fused sweep reaches the same
+Pareto front genomes as the unfused one at equal seeds, and can emit the
+whole report as machine-readable JSON (``--json`` -> ``BENCH_evolve.json``,
+uploaded as a CI artifact so the perf trajectory is tracked per commit).
+
+The engine shards lanes across visible host devices; the benchmark forces
+a multi-device CPU platform (one device per core, capped at 4) before jax
+initializes, which is where most of the 2-core container's speedup over
+the pre-fusion engine comes from.
+
     PYTHONPATH=src:. python benchmarks/bench_batched_sweep.py          # full
     PYTHONPATH=src:. python benchmarks/bench_batched_sweep.py --smoke  # CI
+    PYTHONPATH=src:. python benchmarks/bench_batched_sweep.py --json   # +JSON
 
 ``--objective`` swaps the search objective through the pluggable Objective
 API (DESIGN.md §10) -- e.g. ``--objective wce`` sweeps the normalized
@@ -24,12 +38,27 @@ backends where per-dispatch overhead is higher).
 """
 
 import argparse
+import dataclasses
+import json
+import os
 import time
 
-import numpy as np
+# Force a multi-device host platform for the lane-sharded engine before
+# jax (transitively imported below) initializes its backends.  Respect an
+# operator-provided XLA_FLAGS that already pins a device count.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    _n_dev = min(os.cpu_count() or 1, 4)
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={_n_dev}".strip())
 
-from benchmarks.common import emit
-from repro.core import distributions as dist, evolve as ev
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from benchmarks.common import emit                            # noqa: E402
+from repro.core import cgp, distributions as dist, evolve as ev  # noqa: E402
+from repro.core import netlist as nl                          # noqa: E402
 
 
 def _front_summary(results):
@@ -41,12 +70,66 @@ def _make_objective(name: str, wce_cap: float | None) -> ev.Objective:
     return ev.Objective(metric=name, constraints=cons)
 
 
+def _assert_front_parity(ref, got, what, *, error_tol=1e-5):
+    """Same genomes, same areas, error scalars equal to float tolerance."""
+    for r, g in zip(ref, got):
+        assert np.array_equal(np.asarray(r.genome.nodes),
+                              np.asarray(g.genome.nodes)), \
+            f"{what}: genome mismatch at level {r.level}"
+        assert np.array_equal(np.asarray(r.genome.outs),
+                              np.asarray(g.genome.outs)), \
+            f"{what}: output-gene mismatch at level {r.level}"
+        assert r.area == g.area, \
+            f"{what}: area mismatch at level {r.level}: {r.area} vs {g.area}"
+        assert abs(r.error - g.error) < error_tol, \
+            f"{what}: {r.metric} mismatch at level {r.level}: " \
+            f"{r.error} vs {g.error}"
+
+
+def _steady_ms_per_lane_gen(cfg: ev.EvolveConfig, objective: ev.Objective,
+                            lanes: int, gens: int, iters: int = 2) -> float:
+    """Compile-excluded block throughput: best-of-N timed block calls.
+
+    Builds the same jitted/pmapped G-generation block the sweep drivers
+    use, warms it up once, then times full blocks on fresh (donatable)
+    lane state.
+    """
+    pmf = dist.half_normal_pmf(cfg.w)
+    ctx = objective.resolve_domain(cfg.w).build(cfg.w, cfg.signed, pmf, None)
+    run_cfg = dataclasses.replace(cfg, generations=gens,
+                                  gens_per_jit_block=gens)
+    block, _ = ev.make_batched_step(run_cfg, ctx.exact, ctx.in_planes,
+                                    objective=objective, mask=ctx.mask)
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(cfg.w))
+    levels = jnp.asarray(np.linspace(0.001, 0.05, lanes), jnp.float32)
+    cons = objective.constraints.lane_params(levels)
+
+    def fresh():
+        return (cgp.tile_genome(g0, lanes),
+                jnp.full((lanes,), jnp.nan, jnp.float32),
+                jnp.stack([jax.random.PRNGKey(i) for i in range(lanes)]))
+
+    state = fresh()
+    jax.block_until_ready(block(*state, ctx.weights, cons))   # compile
+    best = float("inf")
+    for _ in range(iters):
+        state = fresh()
+        jax.block_until_ready(state)
+        t0 = time.time()
+        jax.block_until_ready(block(*state, ctx.weights, cons))
+        best = min(best, time.time() - t0)
+    return best / (lanes * gens) * 1e3
+
+
 def run(smoke: bool = False, strict: bool = False,
-        objective: str = "wmed", wce_cap: float | None = None):
+        objective: str = "wmed", wce_cap: float | None = None,
+        json_path: str | None = None):
     if smoke:
         levels, repeats, gens, block = ev.PAPER_LEVELS[:4], 1, 20, 20
+        steady_lanes, steady_gens = 4, 20
     else:
         levels, repeats, gens, block = ev.PAPER_LEVELS[:8], 2, 40, 40
+        steady_lanes, steady_gens = 16, 25
     obj = _make_objective(objective, wce_cap)
     cfg = ev.EvolveConfig(w=8, signed=False, generations=gens,
                           gens_per_jit_block=block, seed=0, objective=obj)
@@ -62,18 +145,19 @@ def run(smoke: bool = False, strict: bool = False,
                                       repeats=repeats)
     t_batched = time.time() - t0
 
-    # ---- parity: the batched sweep must reproduce the serial front ----
-    for s, b in zip(serial, batched):
-        assert np.array_equal(np.asarray(s.genome.nodes),
-                              np.asarray(b.genome.nodes)), \
-            f"genome mismatch at level {s.level}"
-        assert np.array_equal(np.asarray(s.genome.outs),
-                              np.asarray(b.genome.outs)), \
-            f"output-gene mismatch at level {s.level}"
-        assert s.area == b.area, \
-            f"area mismatch at level {s.level}: {s.area} vs {b.area}"
-        assert abs(s.error - b.error) < 1e-5, \
-            f"{s.metric} mismatch at level {s.level}: {s.error} vs {b.error}"
+    # ---- parity: the batched sweep must reproduce the serial front, and
+    # the fused (default) fitness must reach the unfused path's genomes ----
+    _assert_front_parity(serial, batched, "serial vs batched")
+    unfused = ev.pareto_sweep_batched(
+        dataclasses.replace(cfg, fused=False), pmf, levels=levels,
+        repeats=repeats)
+    _assert_front_parity(batched, unfused, "fused vs unfused")
+
+    # ---- steady-state block throughput (compile excluded) ----
+    ms_fused = _steady_ms_per_lane_gen(cfg, obj, steady_lanes, steady_gens)
+    ms_unfused = _steady_ms_per_lane_gen(
+        dataclasses.replace(cfg, fused=False), obj, steady_lanes,
+        steady_gens)
 
     speedup = t_serial / t_batched
     total_gens = lanes * gens
@@ -83,13 +167,46 @@ def run(smoke: bool = False, strict: bool = False,
     emit("bench_batched_sweep/batched", t_batched * 1e6,
          f"lanes={lanes};gens_per_lane={gens};"
          f"lane_gens_per_s={total_gens / t_batched:.1f}")
+    emit("bench_batched_sweep/steady_fused", ms_fused * 1e3,
+         f"lanes={steady_lanes};ms_per_lane_gen={ms_fused:.3f}")
+    emit("bench_batched_sweep/steady_unfused", ms_unfused * 1e3,
+         f"lanes={steady_lanes};ms_per_lane_gen={ms_unfused:.3f}")
     emit("bench_batched_sweep/summary", 0.0,
-         f"speedup={speedup:.2f}x;front_parity=ok;objective={objective};"
-         f"levels={len(levels)};repeats={repeats}")
+         f"speedup={speedup:.2f}x;front_parity=ok;fused_parity=ok;"
+         f"objective={objective};levels={len(levels)};repeats={repeats};"
+         f"fused_vs_unfused={ms_unfused / ms_fused:.2f}x;"
+         f"devices={jax.local_device_count()}")
     metric = batched[0].metric
     for lvl, err, ar in _front_summary(batched):
         emit(f"bench_batched_sweep/front_{lvl}", 0.0,
              f"{metric}={err:.6f};area={ar:.2f}")
+
+    if json_path:
+        report = {
+            "bench": "bench_batched_sweep",
+            "mode": "smoke" if smoke else "full",
+            "objective": objective,
+            "wce_cap": wce_cap,
+            "devices": jax.local_device_count(),
+            "lanes": lanes,
+            "generations_per_lane": gens,
+            "wall_s": {"serial": t_serial, "batched": t_batched},
+            "speedup_batched_vs_serial": speedup,
+            "steady_ms_per_lane_generation": {
+                "fused": ms_fused,
+                "unfused": ms_unfused,
+                "lanes": steady_lanes,
+                "generations": steady_gens,
+            },
+            "speedup_fused_vs_unfused": ms_unfused / ms_fused,
+            "parity": {"serial_vs_batched": "ok", "fused_vs_unfused": "ok"},
+            "front": [{"level": lvl, metric: err, "area": ar}
+                      for lvl, err, ar in _front_summary(batched)],
+        }
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"bench_batched_sweep: wrote {json_path}")
+
     if strict and smoke:
         print("bench_batched_sweep: --strict applies to full mode only; "
               "smoke lanes are too few to amortize the compile -- ignoring")
@@ -111,6 +228,10 @@ if __name__ == "__main__":
     ap.add_argument("--wce-cap", type=float, default=None,
                     help="add a normalized worst-case-error cap constraint "
                          "(combined-constraint search, arxiv 2206.13077)")
+    ap.add_argument("--json", nargs="?", const="BENCH_evolve.json",
+                    default=None, metavar="PATH",
+                    help="write the machine-readable report (default "
+                         "BENCH_evolve.json)")
     args = ap.parse_args()
     run(smoke=args.smoke, strict=args.strict, objective=args.objective,
-        wce_cap=args.wce_cap)
+        wce_cap=args.wce_cap, json_path=args.json)

@@ -43,8 +43,13 @@ def run():
         keys = jnp.stack([jax.random.PRNGKey(i) for i in range(lanes)])
         _, e0, a0 = jax.vmap(lambda gg, cn: fit(gg, planes, vw, cn),
                              in_axes=(0, 0))(parents, cons)
-        us = time_fn(lambda: block(parents, a0, keys, vw, cons),
-                     iters=3, warmup=1)
+
+        # the block donates its lane-state inputs, so each timed call gets
+        # fresh copies (copy cost is noise next to 10 generations of work)
+        def call():
+            return block(jax.tree.map(jnp.array, parents), jnp.array(a0),
+                         jnp.array(keys), vw, cons)
+        us = time_fn(call, iters=3, warmup=1)
         emit(f"micro/evolve_10gens_lam4_lanes{lanes}", us,
              f"lane_gens_per_s={10 * lanes / (us / 1e6):.1f}")
 

@@ -63,12 +63,23 @@ FULL = jnp.uint32(0xFFFFFFFF)
 
 
 def _apply_fn(f, a, b):
-    """Bit-parallel 2-input gate from 4-bit truth table ``f``."""
-    t0 = jnp.where((f >> 0) & 1, FULL, jnp.uint32(0))
-    t1 = jnp.where((f >> 1) & 1, FULL, jnp.uint32(0))
-    t2 = jnp.where((f >> 2) & 1, FULL, jnp.uint32(0))
-    t3 = jnp.where((f >> 3) & 1, FULL, jnp.uint32(0))
-    return ((t0 & ~a & ~b) | (t1 & ~a & b) | (t2 & a & ~b) | (t3 & a & b))
+    """Bit-parallel 2-input gate from 4-bit truth table ``f``.
+
+    Mux decomposition ``out = u ^ (a & (u ^ v))`` with ``u = mux(b, f1,
+    f0)``, ``v = mux(b, f3, f2)``: the four table-bit masks and their XORs
+    are per-gate *scalars*, leaving 7 vector ops per gate versus 13 for
+    the naive sum-of-minterms form -- the gate loop is compute-bound on
+    exactly these ops, so this is a direct ~1.2x on evaluation throughput.
+    Truth-table semantics are unchanged (bit-identical outputs).
+    """
+    zero = jnp.uint32(0)
+    f0 = jnp.where((f >> 0) & 1, FULL, zero)
+    f1 = jnp.where((f >> 1) & 1, FULL, zero)
+    f2 = jnp.where((f >> 2) & 1, FULL, zero)
+    f3 = jnp.where((f >> 3) & 1, FULL, zero)
+    u = ((f1 ^ f0) & b) ^ f0
+    v = ((f3 ^ f2) & b) ^ f2
+    return u ^ (a & (u ^ v))
 
 
 @functools.partial(jax.jit, static_argnames=("n_i",))
@@ -106,6 +117,154 @@ def to_signed(vals: jax.Array, bits: int) -> jax.Array:
     """Reinterpret unsigned ``bits``-wide values as two's complement."""
     half = jnp.int32(1 << (bits - 1))
     return jnp.bitwise_xor(vals, half) - half
+
+
+# ------------------------------------------------- fused fitness statistics
+#
+# The fitness inner loop never needs the per-vector value array -- every
+# registry metric (and every feasibility constraint) reduces to a handful
+# of scalar *sufficient statistics* over the error e(v) = approx(v) −
+# exact(v).  The canonical accumulator set (DESIGN.md §11); ``mask`` is the
+# eval domain's validity vector (1 = real vector, 0 = padding; None =
+# every vector real), deliberately distinct from the weight support:
+
+STAT_WABS = "wabs"        # Σ_v w(v)·|e(v)|
+STAT_UABS = "uabs"        # Σ_v mask(v)·|e(v)|      (uniform / unweighted)
+STAT_MAXABS = "maxabs"    # max_v mask(v)·|e(v)|
+STAT_WNE = "wne"          # Σ_v w(v)·[e(v) != 0]
+STAT_WREL = "wrel"        # Σ_v w(v)·|e(v)| / max(1, |exact(v)|)
+STAT_WSIGNED = "wsigned"  # Σ_v w(v)·e(v)           (signed-bias term, §7.2)
+
+STAT_ORDER = (STAT_WABS, STAT_UABS, STAT_MAXABS, STAT_WNE, STAT_WREL,
+              STAT_WSIGNED)
+
+# Streaming block size in packed 32-bit words.  256 words = 8192 vectors
+# per chunk keeps the unpacked values and float temporaries cache-resident
+# on the CPU backend while the scan streams over the domain (measured best
+# on the 2-core container across 128/256/512/1024; the Pallas fused kernel
+# uses its own 512-lane block).
+STATS_CHUNK_WORDS = 256
+
+
+def _fold_stats(acc: dict, vals, exact, weights, mask,
+                stat_names) -> dict:
+    """Fold one unpacked chunk into the scalar accumulators.
+
+    ``vals``/``exact`` are (n,) int32, ``weights``/``mask`` (n,) float32
+    (mask None = all vectors real).  Only the requested ``stat_names`` are
+    computed, so the traced program carries exactly what the active
+    objective consumes.
+    """
+    vals_f = vals.astype(jnp.float32)
+    exact_f = exact.astype(jnp.float32)
+    err = jnp.abs(vals_f - exact_f)
+    w = weights.astype(jnp.float32)
+    out = {}
+    for name in stat_names:
+        if name == STAT_WABS:
+            out[name] = acc[name] + jnp.dot(w, err)
+        elif name == STAT_UABS:
+            e = err if mask is None else err * mask
+            out[name] = acc[name] + jnp.sum(e)
+        elif name == STAT_MAXABS:
+            e = err if mask is None else jnp.where(mask > 0, err, 0.0)
+            out[name] = jnp.maximum(acc[name], jnp.max(e))
+        elif name == STAT_WNE:
+            out[name] = acc[name] + jnp.dot(
+                w, (vals != exact).astype(jnp.float32))
+        elif name == STAT_WREL:
+            den = jnp.maximum(jnp.abs(exact_f), 1.0)
+            out[name] = acc[name] + jnp.dot(w, err / den)
+        elif name == STAT_WSIGNED:
+            out[name] = acc[name] + jnp.dot(w, vals_f - exact_f)
+        else:
+            raise ValueError(f"unknown sufficient statistic {name!r}; "
+                             f"known: {', '.join(STAT_ORDER)}")
+    return out
+
+
+def canonical_stats(stat_names) -> tuple:
+    """Canonical-order, deduplicated stat names (stable pytree layout)."""
+    names = set(stat_names)
+    unknown = names - set(STAT_ORDER)
+    if unknown:
+        raise ValueError(f"unknown sufficient statistic(s) "
+                         f"{sorted(unknown)}; known: {', '.join(STAT_ORDER)}")
+    return tuple(n for n in STAT_ORDER if n in names)
+
+
+def eval_genome_stats(genome: Genome, in_planes: jax.Array, exact: jax.Array,
+                      weights: jax.Array, mask: jax.Array | None = None, *,
+                      n_i: int, stat_names=STAT_ORDER, signed: bool = False,
+                      chunk: int = STATS_CHUNK_WORDS) -> dict:
+    """Fused streaming evaluation: genome -> scalar sufficient statistics.
+
+    The gate loop runs once over the full packed width (the (n_i + c, W)
+    node-plane buffer streams well through the gate ops), then the
+    unpack+reduce stage scans the output planes in ``chunk``-word blocks,
+    unpacking each block and folding it straight into the accumulators --
+    so no (n_o, V) value tensor or (V,) float temporary is ever
+    materialized (DESIGN.md §11).  Returns ``{stat_name: f32 scalar}`` for
+    the requested names.
+
+    Chunking the *gate loop* itself was measured slower on the CPU
+    backend (re-entering the c-gate fori_loop per chunk costs more than
+    the buffer locality buys), which is why only the reduction streams;
+    the Pallas ``cgp_fitness`` kernel, whose scratch lives in VMEM, blocks
+    both stages.  The float reduction order differs from the unfused
+    single-dot path by the chunked partial sums (~1e-7 relative); callers
+    that need the historical bit pattern use the unfused path.
+    """
+    planes = eval_genome(genome, in_planes, n_i=n_i)
+    return reduce_planes_stats(planes, exact, weights, mask,
+                               stat_names=stat_names, signed=signed,
+                               chunk=chunk)
+
+
+def reduce_planes_stats(planes: jax.Array, exact: jax.Array,
+                        weights: jax.Array, mask: jax.Array | None = None, *,
+                        stat_names=STAT_ORDER, signed: bool = False,
+                        chunk: int = STATS_CHUNK_WORDS) -> dict:
+    """Chunked unpack+reduce of already-evaluated output planes.
+
+    Same accumulator contract as ``eval_genome_stats`` for callers that
+    hold (n_o, W) bit-planes (e.g. a non-streaming evaluation backend):
+    only chunk-sized value/float temporaries are materialized.  Padded
+    plane words unpack to value 0 against exact 0, so no synthetic mask is
+    needed here.
+    """
+    names = canonical_stats(stat_names)
+    n_o, W = planes.shape
+    chunk = min(chunk, W)
+    pad = (-W) % chunk
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, pad)))
+        exact = jnp.pad(exact, (0, 32 * pad))
+        weights = jnp.pad(weights, (0, 32 * pad))
+        if mask is not None:
+            mask = jnp.pad(mask, (0, 32 * pad))
+        W += pad
+    C = W // chunk
+
+    planes_c = planes.reshape(n_o, C, chunk).transpose(1, 0, 2)
+    exact_c = exact.reshape(C, chunk * 32)
+    weights_c = weights.reshape(C, chunk * 32)
+    xs = (planes_c, exact_c, weights_c)
+    if mask is not None:
+        xs = xs + (mask.reshape(C, chunk * 32),)
+
+    init = {n: jnp.float32(0.0) for n in names}
+
+    def body(acc, x):
+        pl_c, ex, wt = x[:3]
+        mk = x[3] if mask is not None else None
+        vals = unpack_planes(pl_c)
+        if signed:
+            vals = to_signed(vals, n_o)
+        return _fold_stats(acc, vals, ex, wt, mk, names), None
+
+    acc, _ = jax.lax.scan(body, init, xs)
+    return acc
 
 
 # ---------------------------------------------------------------- area etc.

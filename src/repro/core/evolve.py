@@ -22,10 +22,19 @@ Two execution modes share one generation step:
   along a leading lane axis; the generation step is ``vmap``-ed across lanes
   and G generations run inside a single jitted ``lax.scan`` block.  One
   compilation and one device program replace ``len(levels) x repeats``
-  sequential dispatches.
+  sequential dispatches.  When multiple local devices are visible the
+  block additionally shards its lanes across them under ``pmap``.
 * **Serial** (``evolve``): a thin wrapper over a 1-lane batch, kept for
   API compatibility and as the baseline for
   ``benchmarks/bench_batched_sweep.py``.
+
+The fitness inner loop is the **fused streaming pipeline** of DESIGN.md
+§11 by default: genome evaluation folds chunk-wise into the metric's
+scalar sufficient statistics (``cgp.eval_genome_stats`` / the
+``cgp_fitness`` Pallas kernel) and no per-vector value array is ever
+materialized; ``EvolveConfig.fused=False`` -- or a metric registered
+without a stats form -- selects the historical materialize-then-reduce
+trace, kept bit-identical.
 
 Per-lane RNG streams are derived exactly as the historical serial driver
 did (seed -> PRNGKey -> per-block split -> per-generation split), so a lane
@@ -36,6 +45,7 @@ of a batched run is bit-identical to a serial run with the same seed --
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
 from typing import Callable, List, Sequence
@@ -61,6 +71,9 @@ from repro.core.objective import (  # noqa: F401  (re-exported API surface)
 PAPER_LEVELS = (0.00005, 0.0001, 0.0005, 0.001, 0.002, 0.005, 0.01,
                 0.02, 0.03, 0.05, 0.08, 0.1, 0.15, 0.2)
 
+# Genome evaluation backends of the fitness inner loop.
+EVAL_BACKENDS = ("jnp", "pallas")
+
 
 @dataclasses.dataclass(frozen=True)
 class EvolveConfig:
@@ -78,13 +91,27 @@ class EvolveConfig:
     objective: Objective | str | None = None
     # Genome evaluation backend for the fitness inner loop: "jnp"
     # (cgp.eval_genome) or "pallas" (kernels/cgp_eval; interpret-mode on
-    # CPU, the real kernel on TPU).
+    # CPU, the real kernel on TPU).  Validated eagerly at construction so
+    # a typo fails before the 2-3 s block compile.
     eval_backend: str = "jnp"
+    # Fused streaming fitness (DESIGN.md §11): None = auto (fused whenever
+    # the metric declares a sufficient-statistics form -- every registry
+    # metric does), True = require it (error if the metric has no stats
+    # form), False = force the historical unfused materialize-then-reduce
+    # path (bit-identical to the pre-fusion engine; also the automatic
+    # fallback for plain fn-style metrics).
+    fused: bool | None = None
     # DEPRECATED: pre-Objective spelling of the signed-bias bound
     # (DESIGN.md §7.2).  Folded into the objective's Constraints when that
     # leaves bias_frac unset; prefer
     # ``Objective(constraints=Constraints(bias_frac=...))``.
     bias_frac: float | None = None
+
+    def __post_init__(self):
+        if self.eval_backend not in EVAL_BACKENDS:
+            raise ValueError(
+                f"unknown eval_backend {self.eval_backend!r}; expected one "
+                f"of {', '.join(repr(b) for b in EVAL_BACKENDS)}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,12 +190,23 @@ def _base_config(cfg: EvolveConfig) -> dict:
 
 def _resolve_objective(cfg: EvolveConfig,
                        override: Objective | str | None = None) -> Objective:
-    """cfg/kwarg objective -> concrete Objective (folding legacy bias_frac)."""
+    """cfg/kwarg objective -> concrete Objective (folding legacy bias_frac).
+
+    Validates the metric name (and the fused/metric combination) eagerly,
+    so a misconfigured run fails here -- before any tracing or the 2-3 s
+    block compile -- with the registry's unknown-metric message.
+    """
     obj = override if override is not None else cfg.objective
     if obj is None:
         obj = Objective()
     elif isinstance(obj, str):
         obj = Objective(metric=obj)
+    metric = obj_mod.get_metric(obj.metric)  # raises for unknown names
+    if cfg.fused and not metric.supports_stats:
+        raise ValueError(
+            f"fused=True but metric {metric.name!r} declares no "
+            "sufficient-statistics form; register it with stats/from_stats "
+            "or use fused=None/False (unfused fallback)")
     if cfg.bias_frac is not None and obj.constraints.bias_frac is None:
         obj = dataclasses.replace(
             obj, constraints=dataclasses.replace(obj.constraints,
@@ -177,21 +215,47 @@ def _resolve_objective(cfg: EvolveConfig,
 
 
 def _fitness_fn(exact, pmax, n_i, signed, objective: Objective,
-                eval_backend="jnp", mask=None):
+                eval_backend="jnp", mask=None, fused=None):
     """Constrained-area fitness per Eq. 1 under a pluggable objective.
 
     ``weights`` and the LaneConstraints values are runtime arguments so one
     traced program serves every lane of a batched sweep; returns
     (fitness, error, area).  Which constraint *families* are active is
     static (it is one objective per run), so disabled terms cost nothing in
-    the hot loop and the default objective's trace -- and therefore its
-    fitness values -- stays bit-identical to the historical WMED-only
-    form; only the bounds are runtime lane values.  ``mask`` is the eval
-    domain's validity vector (None = exhaustive), shared by every lane.
+    the hot loop; only the bounds are runtime lane values.  ``mask`` is the
+    eval domain's validity vector (None = exhaustive), shared by every
+    lane.
+
+    Two fitness pipelines share this contract (DESIGN.md §11):
+
+    * **fused** (default whenever the metric declares a
+      sufficient-statistics form): the evaluator streams the domain in
+      chunks and folds each into scalar accumulators
+      (``cgp.eval_genome_stats`` on the jnp backend, the ``cgp_fitness``
+      Pallas kernel otherwise), so no per-vector value array is ever
+      materialized; the metric and every active constraint are computed
+      from the stats.  Fitness agrees with the unfused path to
+      float-reduction order (chunked partial sums, ≈1e-7 relative).
+    * **unfused** (``fused=False``, or a plain fn-style metric): the
+      historical materialize-then-reduce trace, bit-identical to the
+      pre-fusion engine.
     """
     m = obj_mod.get_metric(objective.metric)
     use_bias = objective.constraints.bias_frac is not None
     use_wce = objective.constraints.wce_cap is not None
+    if eval_backend not in EVAL_BACKENDS:
+        raise ValueError(f"unknown eval_backend {eval_backend!r}; "
+                         "expected 'jnp' or 'pallas'")
+    if fused is None:
+        fused = m.supports_stats
+    if fused and not m.supports_stats:
+        raise ValueError(f"fused=True but metric {m.name!r} declares no "
+                         "sufficient-statistics form")
+
+    if fused:
+        return _fused_fitness(m, exact, pmax, n_i, signed, eval_backend,
+                              mask, use_bias, use_wce)
+
     wce_fn = obj_mod.get_metric("wce").fn
 
     if eval_backend == "pallas":
@@ -199,12 +263,9 @@ def _fitness_fn(exact, pmax, n_i, signed, objective: Objective,
 
         def eval_planes(genome, in_planes):
             return cgp_eval(genome.nodes, genome.outs, in_planes, n_i=n_i)
-    elif eval_backend == "jnp":
+    else:
         def eval_planes(genome, in_planes):
             return cgp_mod.eval_genome(genome, in_planes, n_i=n_i)
-    else:
-        raise ValueError(f"unknown eval_backend {eval_backend!r}; "
-                         "expected 'jnp' or 'pallas'")
 
     def fit(genome: Genome, in_planes, weights,
             cons: obj_mod.LaneConstraints):
@@ -228,6 +289,53 @@ def _fitness_fn(exact, pmax, n_i, signed, objective: Objective,
     return fit
 
 
+def _fused_fitness(m, exact, pmax, n_i, signed, eval_backend, mask,
+                   use_bias, use_wce):
+    """Streaming-stats fitness: only scalar statistics leave the eval loop.
+
+    The accumulator set is exactly what the active objective consumes --
+    the metric's declared stats plus the signed-bias term (``wsigned``)
+    and/or the worst-case term (``maxabs``) when those constraint families
+    are on -- so disabled constraints still cost nothing.
+    """
+    needed = set(m.stats)
+    if use_bias:
+        needed.add(cgp_mod.STAT_WSIGNED)
+    if use_wce:
+        needed.add(cgp_mod.STAT_MAXABS)
+    stat_names = cgp_mod.canonical_stats(needed)
+    n_valid = (float(exact.shape[0]) if mask is None
+               else float(np.sum(np.asarray(mask))))
+
+    if eval_backend == "pallas":
+        from repro.kernels.cgp_eval.ops import cgp_fitness
+
+        def eval_stats(genome, in_planes, weights):
+            return cgp_fitness(genome.nodes, genome.outs, in_planes, exact,
+                               weights, mask, n_i=n_i, signed=signed)
+    else:
+        def eval_stats(genome, in_planes, weights):
+            return cgp_mod.eval_genome_stats(
+                genome, in_planes, exact, weights, mask,
+                n_i=n_i, stat_names=stat_names, signed=signed)
+
+    def fit(genome: Genome, in_planes, weights,
+            cons: obj_mod.LaneConstraints):
+        stats = eval_stats(genome, in_planes, weights)
+        e = m.from_stats(stats, pmax, n_valid)
+        a = cgp_mod.area(genome, n_i=n_i)
+        ok = e <= cons.level
+        if use_bias:
+            bias = jnp.abs(stats[cgp_mod.STAT_WSIGNED]) / pmax
+            ok = ok & (bias <= cons.bias_bound)
+        if use_wce:
+            ok = ok & (stats[cgp_mod.STAT_MAXABS] / pmax <= cons.wce_cap)
+        f = jnp.where(ok, a, jnp.float32(jnp.inf))
+        return f, e, a
+
+    return fit
+
+
 def make_batched_step(cfg: EvolveConfig, exact, in_planes,
                       *, weights_batched: bool = False,
                       objective: Objective | str | None = None,
@@ -242,13 +350,26 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
     constraint values -- and weights when ``weights_batched``) carries a
     leading lane axis; ``weights`` may instead be a single shared (V,)
     vector.
+
+    ``keys`` holds each lane's *block* key: the per-block split that the
+    serial driver historically performed on the host happens inside the
+    compiled program (same split sequence, bit-identical streams), and the
+    advanced keys are returned as the third output.  parents / parent_f /
+    keys inputs are donated -- pass fresh arrays (or the previous block's
+    outputs), never buffers you still need.
+
+    When multiple local devices are visible (e.g. a forced multi-device
+    host platform on CPU, or real accelerators), the block automatically
+    shards its lanes across the largest device count dividing L and runs
+    under ``pmap`` -- lanes are fully independent, so per-lane results are
+    bit-identical to the single-device program (DESIGN.md §11).
     """
     n_i = 2 * cfg.w
     pmax = jnp.float32(wmed_mod.p_max(cfg.w))
     allowed = jnp.asarray(np.array(cfg.allowed_fns, dtype=np.int32))
     obj = _resolve_objective(cfg, objective)
     fit = _fitness_fn(exact, pmax, n_i, cfg.signed, obj, cfg.eval_backend,
-                      mask=mask)
+                      mask=mask, fused=cfg.fused)
     w_axis = 0 if weights_batched else None
 
     def lane_generation(parent, parent_f, key, weights, cons):
@@ -267,9 +388,8 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
             lambda g, wt, cn: fit(g, in_planes, wt, cn),
             in_axes=(0, w_axis, 0))(parents, weights, cons)
 
-    @jax.jit
-    def block(parents: Genome, parent_f, keys, weights,
-              cons: obj_mod.LaneConstraints):
+    def block_fn(parents: Genome, parent_f, keys, weights,
+                 cons: obj_mod.LaneConstraints):
         # NaN parent_f marks the first block: score the seed in-program
         # (the exact seed satisfies any constraint set; its fitness is its
         # area) so the driver never pays an eager, uncompiled fitness pass.
@@ -283,16 +403,63 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
             )(ps, pf, gen_keys, weights, cons)
             return (ps, pf), (e, a)
 
-        # per-lane split mirrors the historical serial driver exactly
+        # per-lane block/generation splits mirror the historical serial
+        # driver exactly (seed key -> per-block split -> per-generation
+        # split), just executed in-program instead of on the host
+        split = jax.vmap(jax.random.split)(keys)       # (L, 2, key)
+        next_keys, subs = split[:, 0], split[:, 1]
         subkeys = jax.vmap(
-            lambda k: jax.random.split(k, cfg.gens_per_jit_block))(keys)
+            lambda k: jax.random.split(k, cfg.gens_per_jit_block))(subs)
         subkeys = jnp.swapaxes(subkeys, 0, 1)  # (G, L, key)
         (parents, parent_f), (es, areas) = jax.lax.scan(
             generation, (parents, parent_f), subkeys)
         _, e_fin, a_fin = score(parents, weights, cons)
-        return parents, parent_f, es[-1], areas[-1], e_fin, a_fin
+        return parents, parent_f, next_keys, es[-1], areas[-1], e_fin, a_fin
+
+    # parents / parent_f / keys are pure loop-carried state: each block
+    # call consumes the previous call's outputs, so their input buffers
+    # are donated -- on the single-device jit path XLA reuses them in
+    # place instead of allocating a fresh lane population every 250
+    # generations.  The sharded path reshapes lane state to/from (D, L/D)
+    # shards per call, so donation there only covers the reshape
+    # temporaries -- a few hundred KB per block, noise next to the block's
+    # seconds of compute (included in the measured throughput).  weights
+    # and the constraint vectors are reused across blocks and stay
+    # un-donated.
+    block_jit = functools.partial(jax.jit, donate_argnums=(0, 1, 2))(block_fn)
+    pmap_cache: dict = {}
+
+    def _sharded(n_shards):
+        if n_shards not in pmap_cache:
+            pmap_cache[n_shards] = jax.pmap(
+                block_fn, in_axes=(0, 0, 0, 0 if weights_batched else None, 0),
+                donate_argnums=(0, 1, 2),
+                devices=jax.local_devices()[:n_shards])
+        return pmap_cache[n_shards]
+
+    def block(parents: Genome, parent_f, keys, weights,
+              cons: obj_mod.LaneConstraints):
+        L = parent_f.shape[0]
+        D = _lane_shards(L)
+        if D == 1:
+            return block_jit(parents, parent_f, keys, weights, cons)
+        shard = lambda x: x.reshape((D, L // D) + x.shape[1:])  # noqa: E731
+        unshard = lambda x: x.reshape((L,) + x.shape[2:])       # noqa: E731
+        out = _sharded(D)(
+            jax.tree.map(shard, parents), shard(parent_f), shard(keys),
+            shard(weights) if weights_batched else weights,
+            jax.tree.map(shard, cons))
+        return tuple(jax.tree.map(unshard, o) for o in out)
 
     return block, fit
+
+
+def _lane_shards(n_lanes: int) -> int:
+    """Largest local-device count that divides the lane count (>= 1)."""
+    d = min(jax.local_device_count(), n_lanes)
+    while d > 1 and n_lanes % d:
+        d -= 1
+    return d
 
 
 def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
@@ -339,32 +506,37 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
     if seed_genome.nodes.ndim == 2:
         parents = cgp_mod.tile_genome(seed_genome, L)
     else:
-        parents = jax.tree.map(jnp.asarray, seed_genome)
+        # copy (not view) the caller's stacked seed: the block donates its
+        # parent buffers, and donation must never invalidate caller arrays
+        parents = jax.tree.map(jnp.array, seed_genome)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in lane_seeds])
     # NaN = "unscored"; the first block call scores the seed in-program.
     parent_f = jnp.full((L,), jnp.nan, jnp.float32)
 
     t0 = time.time()
-    hist = []
+    # per-block history stays on-device; it is stacked and fetched in one
+    # transfer after the loop so the driver never forces a host sync per
+    # block (verbose mode still syncs explicitly to print progress)
+    hist_e, hist_a = [], []
     e_fin = a_fin = None
     n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
     for b in range(n_blocks):
-        split = jax.vmap(jax.random.split)(keys)   # (L, 2, key)
-        keys, subs = split[:, 0], split[:, 1]
-        parents, parent_f, e_last, a_last, e_fin, a_fin = block(
-            parents, parent_f, subs, weights, cons)
-        hist.append(np.stack([np.asarray(e_last), np.asarray(a_last)],
-                             axis=-1))
+        parents, parent_f, keys, e_last, a_last, e_fin, a_fin = block(
+            parents, parent_f, keys, weights, cons)
+        hist_e.append(e_last)
+        hist_a.append(a_last)
         if verbose and (b % 4 == 0 or b == n_blocks - 1):
             e_np, a_np = np.asarray(e_last), np.asarray(a_last)
             print(f"  gen {(b + 1) * cfg.gens_per_jit_block:6d} x{L} lanes "
                   f"{metric.name}=[{e_np.min():.5f},{e_np.max():.5f}] "
                   f"area=[{a_np.min():8.2f},{a_np.max():8.2f}]")
+    history = np.asarray(jnp.stack(
+        [jnp.stack(hist_e), jnp.stack(hist_a)], axis=-1))  # (B, L, 2)
     return BatchedEvolveResult(
         genomes=jax.tree.map(np.asarray, parents),
         error=np.asarray(e_fin), area=np.asarray(a_fin),
         levels=lane_levels, seeds=lane_seeds,
-        generations=cfg.generations, history=np.asarray(hist),
+        generations=cfg.generations, history=history,
         wall_s=time.time() - t0, metric=metric.name)
 
 

@@ -12,6 +12,10 @@ This module makes all three axes first-class (DESIGN.md §10):
   registry (``wmed``, ``med``, ``wce``, ``er``, ``mre``).  Every metric is
   weight-aware so one signature serves exhaustive and sampled domains; with
   uniform weights each reduces to its conventional (unweighted) form.
+  Registry metrics additionally declare a *sufficient-statistics* form
+  (``stats`` + ``from_stats``) consumed by the fused streaming fitness
+  pipeline (DESIGN.md §11); plain ``fn``-only metrics fall back to the
+  unfused path.
 * **Constraints** -- the feasibility set around the primary metric: the
   per-lane target ``level`` E_i, an optional signed-bias bound (subsumes
   the old ``EvolveConfig.bias_frac``, DESIGN.md §7.2), and an optional
@@ -40,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cgp as cgp_mod
 from repro.core import distributions as dist
 from repro.core import netlist as nl_mod
 from repro.core import wmed as wmed_mod
@@ -65,30 +70,56 @@ class ErrorMetric:
     the worst case.  ``uses_weights`` is False for metrics that ignore the
     probability vector entirely, letting the engine default to a uniform
     distribution when no PMF is supplied.
+
+    **Sufficient-statistics form** (the fused fitness pipeline, DESIGN.md
+    §11): a metric that can be computed from the streaming scalar
+    accumulators of ``cgp.eval_genome_stats`` declares ``stats`` (the
+    ``cgp.STAT_*`` names it consumes) and ``from_stats(stats, pmax,
+    n_valid) -> scalar``, where ``stats`` maps each declared name to its
+    f32 accumulator and ``n_valid`` is the domain's real-vector count.
+    Metrics registered with only a plain ``fn`` (``stats`` empty) still
+    work everywhere -- the engine falls back to the unfused
+    materialize-then-reduce path for them.
     """
 
     name: str
     fn: Callable[..., jax.Array]
     uses_weights: bool = True
     description: str = ""
+    stats: tuple = ()
+    from_stats: Callable[..., jax.Array] | None = None
+
+    @property
+    def supports_stats(self) -> bool:
+        """True when the metric has a fused sufficient-statistics form."""
+        return bool(self.stats) and self.from_stats is not None
 
 
 _REGISTRY: dict[str, ErrorMetric] = {}
 
 
 def register_metric(name: str, *, uses_weights: bool = True,
-                    description: str = "") -> Callable:
+                    description: str = "", stats: tuple = (),
+                    from_stats: Callable | None = None) -> Callable:
     """Decorator registering ``fn(approx, exact, weights, pmax, mask=None)``.
 
     The engine always passes ``mask`` (the domain's validity vector, None
     on exhaustive domains) as the fifth argument, so registered functions
-    must accept it even if they ignore it.
+    must accept it even if they ignore it.  ``stats``/``from_stats``
+    optionally declare the metric's sufficient-statistics form (see
+    ErrorMetric); metrics without one fall back to the unfused evaluation
+    path.
     """
+    if bool(stats) != (from_stats is not None):
+        raise ValueError(f"metric {name!r}: stats and from_stats must be "
+                         "declared together (or both omitted)")
 
     def deco(fn):
         _REGISTRY[name] = ErrorMetric(name=name, fn=fn,
                                       uses_weights=uses_weights,
-                                      description=description)
+                                      description=description,
+                                      stats=cgp_mod.canonical_stats(stats),
+                                      from_stats=from_stats)
         return fn
 
     return deco
@@ -118,20 +149,29 @@ def _mask_uniform(n: int, mask: jax.Array | None) -> jax.Array:
     return on / jnp.sum(on)
 
 
-@register_metric("wmed", description="weighted mean error distance (Eq. 1)")
+@register_metric("wmed", description="weighted mean error distance (Eq. 1)",
+                 stats=(cgp_mod.STAT_WABS,),
+                 from_stats=lambda s, pmax, n_valid:
+                     s[cgp_mod.STAT_WABS] / pmax)
 def _wmed(approx, exact, weights, pmax, mask=None):
     return wmed_mod.weighted_mean_error_distance(approx, exact, weights, pmax)
 
 
 @register_metric("med", uses_weights=False,
-                 description="mean error distance (uniform over the domain)")
+                 description="mean error distance (uniform over the domain)",
+                 stats=(cgp_mod.STAT_UABS,),
+                 from_stats=lambda s, pmax, n_valid:
+                     s[cgp_mod.STAT_UABS] / n_valid / pmax)
 def _med(approx, exact, weights, pmax, mask=None):
     return wmed_mod.weighted_mean_error_distance(
         approx, exact, _mask_uniform(exact.shape[0], mask), pmax)
 
 
 @register_metric("wce", uses_weights=False,
-                 description="normalized worst-case error over the domain")
+                 description="normalized worst-case error over the domain",
+                 stats=(cgp_mod.STAT_MAXABS,),
+                 from_stats=lambda s, pmax, n_valid:
+                     s[cgp_mod.STAT_MAXABS] / pmax)
 def _wce(approx, exact, weights, pmax, mask=None):
     err = jnp.abs(approx.astype(jnp.float32) - exact.astype(jnp.float32))
     if mask is not None:
@@ -139,13 +179,17 @@ def _wce(approx, exact, weights, pmax, mask=None):
     return jnp.max(err) / pmax
 
 
-@register_metric("er", description="weighted error rate P_D[M~(v) != M(v)]")
+@register_metric("er", description="weighted error rate P_D[M~(v) != M(v)]",
+                 stats=(cgp_mod.STAT_WNE,),
+                 from_stats=lambda s, pmax, n_valid: s[cgp_mod.STAT_WNE])
 def _er(approx, exact, weights, pmax, mask=None):
     return jnp.dot(weights.astype(jnp.float32),
                    (approx != exact).astype(jnp.float32))
 
 
-@register_metric("mre", description="weighted mean relative error")
+@register_metric("mre", description="weighted mean relative error",
+                 stats=(cgp_mod.STAT_WREL,),
+                 from_stats=lambda s, pmax, n_valid: s[cgp_mod.STAT_WREL])
 def _mre(approx, exact, weights, pmax, mask=None):
     err = jnp.abs(approx.astype(jnp.float32) - exact.astype(jnp.float32))
     den = jnp.maximum(jnp.abs(exact.astype(jnp.float32)), 1.0)
@@ -206,6 +250,13 @@ class EvalCtx(NamedTuple):
     # support: a vector whose probability underflows to 0 still counts
     # toward worst-case / uniform reductions.
     mask: jax.Array | None = None
+
+    def n_valid(self) -> float:
+        """Count of real (non-padded) vectors -- a static domain property
+        consumed by the sufficient-statistics metric forms."""
+        if self.mask is None:
+            return float(self.exact.shape[0])
+        return float(np.sum(np.asarray(self.mask)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -325,11 +376,33 @@ class Objective:
 
 def score_genome(genome, ctx: EvalCtx, metric: str | ErrorMetric,
                  *, n_i: int, signed: bool) -> jax.Array:
-    """Score one genome under a domain context (test / tooling helper)."""
-    from repro.core import cgp as cgp_mod
+    """Score one genome under a domain context (test / tooling helper).
+
+    Uses the unfused materialize-then-reduce path (the metric's plain
+    ``fn``); ``score_genome_stats`` is the fused equivalent.
+    """
     m = get_metric(metric)
     planes = cgp_mod.eval_genome(genome, ctx.in_planes, n_i=n_i)
     vals = cgp_mod.unpack_planes(planes)
     if signed:
         vals = cgp_mod.to_signed(vals, planes.shape[0])
     return m.fn(vals, ctx.exact, ctx.weights, ctx.pmax, ctx.mask)
+
+
+def score_genome_stats(genome, ctx: EvalCtx, metric: str | ErrorMetric,
+                       *, n_i: int, signed: bool,
+                       chunk: int = cgp_mod.STATS_CHUNK_WORDS) -> jax.Array:
+    """Score one genome through the fused sufficient-statistics pipeline.
+
+    Agrees with ``score_genome`` up to float-reduction order (chunked
+    partial sums vs one long dot, ≈1e-7 relative); raises for metrics that
+    declare no stats form.
+    """
+    m = get_metric(metric)
+    if not m.supports_stats:
+        raise ValueError(f"metric {m.name!r} declares no "
+                         "sufficient-statistics form; use score_genome")
+    stats = cgp_mod.eval_genome_stats(
+        genome, ctx.in_planes, ctx.exact, ctx.weights, ctx.mask,
+        n_i=n_i, stat_names=m.stats, signed=signed, chunk=chunk)
+    return m.from_stats(stats, ctx.pmax, ctx.n_valid())

@@ -17,10 +17,20 @@ SMEM because gate indices drive *dynamic* VMEM scratch addressing; the
 bw=512).  ``W`` is padded to a ``bw`` multiple by the ops wrapper and
 unpadded on return.
 
+Fused fitness entry point (``cgp_fitness``, DESIGN.md §11): same genome /
+input-plane contract, but each grid block evaluates, unpacks, and reduces
+its ``bw`` lanes entirely in VMEM and folds six scalar sufficient
+statistics (``repro.core.cgp.STAT_ORDER``) into a single (1, 6) output
+tile — the (n_o, W) planes never round-trip through HBM.  ``exact`` /
+``weights`` / ``mask`` ride as (32, W) bit-major operands so the in-kernel
+unpack loop reads one contiguous row per bit position.
+
 Parity: bit-exact vs the pure-jnp oracle in ref.py (and vs
 ``repro.core.cgp.eval_genome``) for every genome/width — asserted in
-tests/test_kernel_cgp_eval.py.  The container runs interpret mode
+tests/test_kernel_cgp_eval.py; ``cgp_fitness`` is validated in interpret
+mode against ``cgp_fitness_ref`` and the jnp stats pipeline in
+tests/test_fitness_fused.py.  The container runs interpret mode
 (``ops._INTERPRET = True``); flip to False on real TPU deployments.
 """
 
-from repro.kernels.cgp_eval.ops import cgp_eval  # noqa: F401
+from repro.kernels.cgp_eval.ops import cgp_eval, cgp_fitness  # noqa: F401

@@ -12,6 +12,12 @@ prefetched to SMEM (scalar memory) because gate source indices drive
 Grid: one program per block of ``bw`` lanes (vector words are independent).
 VMEM: scratch (n_i + c) x bw x 4 B -- for c = 500, bw = 512 that's ~1 MB.
 
+Two entry points share the gate loop: ``cgp_eval_kernel`` emits the raw
+(n_o, W) output planes, while ``cgp_fitness_kernel`` (the fused fitness
+pipeline, DESIGN.md §11) unpacks and reduces each block in-kernel and
+emits only the six sufficient-statistics scalars -- the planes never
+leave VMEM.
+
 Validated in interpret mode against ref.py; population evaluation wraps
 this with vmap in ops.py.
 """
@@ -25,10 +31,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-def _kernel(nodes_ref, outs_ref, in_ref, o_ref, scratch):
+from repro.core import cgp as _cgp
+
+# The fitness kernel's accumulator row layout.  ops.py labels the emitted
+# columns with cgp.STAT_ORDER, so the two tuples must stay in lockstep --
+# extending or reordering STAT_ORDER without updating the kernel's shift
+# loop (and the max-fold column below) would silently mislabel columns.
+_STAT_ROW = ("wabs", "uabs", "maxabs", "wne", "wrel", "wsigned")
+assert _STAT_ROW == _cgp.STAT_ORDER, \
+    "cgp_fitness kernel accumulator row desynced from cgp.STAT_ORDER"
+N_STATS = len(_STAT_ROW)
+_MAXABS_COL = _STAT_ROW.index(_cgp.STAT_MAXABS)
+
+def _run_gates(nodes_ref, in_ref, scratch):
+    """Fill the VMEM node-plane scratch: inputs, then every gate in genome
+    order (mux form ``u ^ (a & (u ^ v))``, 7 vector ops/gate -- the table
+    bit masks and their XORs are per-gate scalars; see cgp._apply_fn)."""
     n_i = in_ref.shape[0]
     c = nodes_ref.shape[0]
-    n_o = o_ref.shape[0]
     scratch[:n_i, :] = in_ref[...]
 
     def gate(k, _):
@@ -39,24 +59,143 @@ def _kernel(nodes_ref, outs_ref, in_ref, o_ref, scratch):
         b = pl.load(scratch, (pl.dslice(b_idx, 1), slice(None)))
         full = jnp.full((), 0xFFFFFFFF, jnp.uint32)  # kernel-local constant
         zero = jnp.full((), 0, jnp.uint32)
-        t0 = jnp.where((f >> 0) & 1, full, zero)
-        t1 = jnp.where((f >> 1) & 1, full, zero)
-        t2 = jnp.where((f >> 2) & 1, full, zero)
-        t3 = jnp.where((f >> 3) & 1, full, zero)
-        out = ((t0 & ~a & ~b) | (t1 & ~a & b) | (t2 & a & ~b)
-               | (t3 & a & b))
-        pl.store(scratch, (pl.dslice(n_i + k, 1), slice(None)), out)
+        f0 = jnp.where((f >> 0) & 1, full, zero)
+        f1 = jnp.where((f >> 1) & 1, full, zero)
+        f2 = jnp.where((f >> 2) & 1, full, zero)
+        f3 = jnp.where((f >> 3) & 1, full, zero)
+        u = ((f1 ^ f0) & b) ^ f0
+        v = ((f3 ^ f2) & b) ^ f2
+        pl.store(scratch, (pl.dslice(n_i + k, 1), slice(None)),
+                 u ^ (a & (u ^ v)))
         return 0
 
     jax.lax.fori_loop(0, c, gate, 0)
 
+
+def _emit_outputs(outs_ref, scratch, dst_ref):
+    """Gather the primary-output node planes from scratch into ``dst_ref``."""
+    n_o = dst_ref.shape[0]
+
     def emit(j, _):
         src = outs_ref[j]
         row = pl.load(scratch, (pl.dslice(src, 1), slice(None)))
-        pl.store(o_ref, (pl.dslice(j, 1), slice(None)), row)
+        pl.store(dst_ref, (pl.dslice(j, 1), slice(None)), row)
         return 0
 
     jax.lax.fori_loop(0, n_o, emit, 0)
+
+
+def _kernel(nodes_ref, outs_ref, in_ref, o_ref, scratch):
+    _run_gates(nodes_ref, in_ref, scratch)
+    _emit_outputs(outs_ref, scratch, o_ref)
+
+
+def _fitness_kernel(nodes_ref, outs_ref, in_ref, exact_ref, w_ref, mask_ref,
+                    o_ref, scratch, out_scratch, *, signed: bool):
+    """Fused block program: eval gates -> unpack -> reduce to stats.
+
+    Per 512-lane block: the gate loop fills the VMEM node-plane scratch
+    (identical to ``_kernel``), the primary-output rows are gathered into
+    ``out_scratch``, and a 32-step shift loop unpacks each bit position's
+    vector values *in registers*, folding them straight into six scalar
+    accumulators -- only the (1, N_STATS) stats row ever leaves the block.
+    Output blocks all map to the same (1, N_STATS) tile; the TPU grid is
+    sequential, so later blocks combine into the running row (+, and max
+    for ``maxabs``).
+
+    ``exact_ref``/``w_ref``/``mask_ref`` carry the block's exact products,
+    weights, and validity mask in (32, bw) *bit-major* layout:
+    row s, column j holds vector index (block_start + j) * 32 + s, so the
+    shift loop reads one contiguous row per bit position.
+    """
+    n_o = out_scratch.shape[0]
+    _run_gates(nodes_ref, in_ref, scratch)
+    _emit_outputs(outs_ref, scratch, out_scratch)
+
+    planes = out_scratch[...]                       # (n_o, bw) uint32
+    pow2 = jnp.left_shift(
+        jnp.int32(1),
+        jax.lax.broadcasted_iota(jnp.int32, (n_o, 1), 0))
+    half = jnp.int32(1 << (n_o - 1))
+
+    def shift(s, acc):
+        wabs, uabs, maxabs, wne, wrel, wsigned = acc
+        bits = ((planes >> s) & jnp.uint32(1)).astype(jnp.int32)
+        vals = jnp.sum(bits * pow2, axis=0)         # (bw,) int32
+        if signed:
+            vals = jnp.bitwise_xor(vals, half) - half
+        exact = pl.load(exact_ref, (pl.dslice(s, 1), slice(None)))[0]
+        w = pl.load(w_ref, (pl.dslice(s, 1), slice(None)))[0]
+        mask = pl.load(mask_ref, (pl.dslice(s, 1), slice(None)))[0]
+        vals_f = vals.astype(jnp.float32)
+        exact_f = exact.astype(jnp.float32)
+        err = jnp.abs(vals_f - exact_f)
+        merr = err * mask
+        return (wabs + jnp.sum(w * err),
+                uabs + jnp.sum(merr),
+                jnp.maximum(maxabs, jnp.max(merr)),
+                wne + jnp.sum(w * (vals != exact).astype(jnp.float32)),
+                wrel + jnp.sum(w * err
+                               / jnp.maximum(jnp.abs(exact_f), 1.0)),
+                wsigned + jnp.sum(w * (vals_f - exact_f)))
+
+    zero_f = jnp.float32(0.0)
+    acc = jax.lax.fori_loop(0, 32, shift, (zero_f,) * N_STATS)
+    row = jnp.stack(acc).reshape(1, N_STATS)
+
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = row
+
+    @pl.when(i != 0)
+    def _fold():
+        prev = o_ref[...]
+        out = prev + row
+        out = out.at[0, _MAXABS_COL].set(
+            jnp.maximum(prev[0, _MAXABS_COL], row[0, _MAXABS_COL]))
+        o_ref[...] = out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_i", "bw", "signed", "interpret"))
+def cgp_fitness_kernel(nodes: jax.Array, outs: jax.Array,
+                       in_planes: jax.Array, exact32: jax.Array,
+                       weights32: jax.Array, mask32: jax.Array,
+                       *, n_i: int, bw: int = 512, signed: bool = False,
+                       interpret: bool = True) -> jax.Array:
+    """Fused fitness stats: returns (1, N_STATS) f32 -- the canonical
+    accumulator row (wabs, uabs, maxabs, wne, wrel, wsigned) of
+    ``cgp.STAT_ORDER``.
+
+    ``exact32``/``weights32``/``mask32`` are (32, W) bit-major (row s col j
+    = vector j*32+s); W must be a multiple of ``bw`` (ops.py pads).  The
+    (n_o, W) output planes never round-trip through HBM: each grid step
+    reduces its block in VMEM and folds the partial stats into the single
+    output tile.
+    """
+    c = nodes.shape[0]
+    n_o = outs.shape[0]
+    W = in_planes.shape[1]
+    grid = (W // bw,)
+    return pl.pallas_call(
+        functools.partial(_fitness_kernel, signed=signed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # genome
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # output sources
+            pl.BlockSpec((n_i, bw), lambda i: (0, i)),   # input planes
+            pl.BlockSpec((32, bw), lambda i: (0, i)),    # exact products
+            pl.BlockSpec((32, bw), lambda i: (0, i)),    # weights
+            pl.BlockSpec((32, bw), lambda i: (0, i)),    # validity mask
+        ],
+        out_specs=pl.BlockSpec((1, N_STATS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, N_STATS), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_i + c, bw), jnp.uint32),
+                        pltpu.VMEM((n_o, bw), jnp.uint32)],
+        interpret=interpret,
+    )(nodes, outs, in_planes, exact32, weights32, mask32)
 
 
 @functools.partial(jax.jit,

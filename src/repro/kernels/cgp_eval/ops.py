@@ -1,10 +1,16 @@
-"""Public wrappers for the cgp_eval Pallas kernel.
+"""Public wrappers for the cgp_eval Pallas kernels.
 
 ``cgp_eval`` is shape-compatible with ``cgp.eval_genome`` so the evolution
 engine can use it as the fitness inner loop's evaluation backend
 (``EvolveConfig(eval_backend="pallas")``): same (n_i, W) packed bit-plane
 input -- exhaustive or ``objective.SampledDomain`` sampled vectors alike --
 same (n_o, W) output.
+
+``cgp_fitness`` is the fused entry point (DESIGN.md §11): it evaluates,
+unpacks, and reduces per 512-lane block *inside* the kernel and returns
+only the canonical sufficient-statistics scalars (``cgp.STAT_ORDER``), so
+the pallas fitness backend stops round-tripping (n_o, W) planes through
+HBM.
 """
 
 from __future__ import annotations
@@ -12,7 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cgp_eval.kernel import cgp_eval_kernel
+from repro.core import cgp as cgp_mod
+from repro.kernels.cgp_eval.kernel import cgp_eval_kernel, cgp_fitness_kernel
 
 _INTERPRET = True  # CPU container; False on real TPU
 
@@ -43,3 +50,49 @@ def cgp_eval_population(nodes_pop, outs_pop, in_planes, *, n_i: int,
     """vmap over a population (P, c, 3) / (P, n_o)."""
     return jax.vmap(lambda n, o: cgp_eval(n, o, in_planes, n_i=n_i, bw=bw))(
         nodes_pop, outs_pop)
+
+
+def _bit_major(v, W, pad_words):
+    """(32*W,) vector -> (32, W + pad) bit-major layout (row s, col j =
+    vector j*32 + s).  Padded words are zero-filled: the kernel relies on
+    zero weight/mask to keep the padded (0, 0) vectors out of every
+    statistic."""
+    m = v.reshape(W, 32).T
+    if pad_words:
+        m = jnp.pad(m, ((0, 0), (0, pad_words)))
+    return m
+
+
+def cgp_fitness(nodes, outs, in_planes, exact, weights, mask=None, *,
+                n_i: int, signed: bool = False, bw: int = 512,
+                interpret: bool | None = None) -> dict:
+    """Fused single-genome fitness statistics via the Pallas kernel.
+
+    Returns ``{name: f32 scalar}`` for every name in ``cgp.STAT_ORDER``
+    (the kernel always emits the full canonical set -- the marginal cost
+    of an unused accumulator is a handful of VPU ops per block).  Same
+    accumulator semantics as ``cgp.eval_genome_stats``; agreement is up to
+    float-reduction order (per-block partials vs chunked scan).
+
+    ``exact`` (V,) int32, ``weights`` (V,) f32, ``mask`` (V,) f32 validity
+    or None (= all vectors real); V = 32 * W.  W is padded to a multiple
+    of ``bw`` with zero-weight, zero-mask slots -- the padded (0, 0) input
+    vectors *are* evaluated by the circuit, so the mask (synthesized as
+    all-ones when None) is what keeps them out of the unweighted stats.
+    """
+    W = in_planes.shape[1]
+    bw = min(bw, W)
+    pad = (-W) % bw
+    if mask is None:
+        mask = jnp.ones((32 * W,), jnp.float32)
+    if pad:
+        in_planes = jnp.pad(in_planes, ((0, 0), (0, pad)))
+    row = cgp_fitness_kernel(
+        jnp.asarray(nodes, jnp.int32), jnp.asarray(outs, jnp.int32),
+        jnp.asarray(in_planes, jnp.uint32),
+        _bit_major(jnp.asarray(exact, jnp.int32), W, pad),
+        _bit_major(jnp.asarray(weights, jnp.float32), W, pad),
+        _bit_major(jnp.asarray(mask, jnp.float32), W, pad),
+        n_i=n_i, bw=bw, signed=signed,
+        interpret=_INTERPRET if interpret is None else interpret)
+    return dict(zip(cgp_mod.STAT_ORDER, row[0]))

@@ -26,3 +26,37 @@ def cgp_eval_ref(nodes: jax.Array, outs: jax.Array, in_planes: jax.Array,
 
     buf = jax.lax.fori_loop(0, c, body, buf)
     return buf[outs]
+
+
+def cgp_fitness_ref(nodes, outs, in_planes, exact, weights, mask, n_i: int,
+                    signed: bool = False) -> dict:
+    """Oracle for the fused ``cgp_fitness`` kernel: evaluate with
+    ``cgp_eval_ref``, unpack, and reduce the canonical stat set in f32.
+
+    Stat names/order mirror ``repro.core.cgp.STAT_ORDER`` but are spelled
+    out here so the oracle stays independent of the core implementation.
+    """
+    planes = cgp_eval_ref(nodes, outs, in_planes, n_i)
+    n_o, W = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((planes[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    pow2 = (jnp.int32(1) << jnp.arange(n_o, dtype=jnp.int32))[:, None]
+    vals = jnp.sum(bits.reshape(n_o, W * 32) * pow2, axis=0)
+    if signed:
+        half = jnp.int32(1 << (n_o - 1))
+        vals = jnp.bitwise_xor(vals, half) - half
+    exact = jnp.asarray(exact, jnp.int32)
+    w = jnp.asarray(weights, jnp.float32)
+    m = (jnp.ones((W * 32,), jnp.float32) if mask is None
+         else jnp.asarray(mask, jnp.float32))
+    vals_f = vals.astype(jnp.float32)
+    exact_f = exact.astype(jnp.float32)
+    err = jnp.abs(vals_f - exact_f)
+    return {
+        "wabs": jnp.sum(w * err),
+        "uabs": jnp.sum(m * err),
+        "maxabs": jnp.max(m * err),
+        "wne": jnp.sum(w * (vals != exact).astype(jnp.float32)),
+        "wrel": jnp.sum(w * err / jnp.maximum(jnp.abs(exact_f), 1.0)),
+        "wsigned": jnp.sum(w * (vals_f - exact_f)),
+    }

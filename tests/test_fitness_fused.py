@@ -1,0 +1,217 @@
+"""Fused streaming fitness pipeline (DESIGN.md §11).
+
+Three contracts are locked in:
+
+1. **Stats-vs-fn parity** -- for every registry metric, the sufficient-
+   statistics form (``ErrorMetric.stats`` + ``from_stats`` over
+   ``cgp.eval_genome_stats``) reproduces the plain ``fn`` reduction on
+   exhaustive (w = 4 and w = 8) and masked Monte-Carlo (w = 10) domains.
+   Agreement is up to float-reduction order (chunked partial sums vs one
+   long dot): single-chunk domains are bit-equal, multi-chunk ones agree
+   to ~1e-6 relative.
+2. **Engine parity** -- a fused batched sweep reaches the same Pareto
+   front genomes as the unfused (pre-fusion, bit-identical) path at equal
+   seeds, including under active bias/WCE constraints (which the fused
+   path computes from the ``wsigned`` / ``maxabs`` accumulators).
+3. **Kernel parity** -- the fused ``cgp_fitness`` Pallas kernel (interpret
+   mode) matches the independent ref.py oracle and the jnp stats pipeline
+   for every canonical statistic.
+
+Plain fn-style metrics (registered without a stats form) must keep
+working through the automatic unfused fallback.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cgp, distributions as dist, evolve as ev
+from repro.core import netlist as nl, objective as obj
+from repro.kernels.cgp_eval.ops import cgp_fitness
+from repro.kernels.cgp_eval.ref import cgp_fitness_ref
+
+
+def _mutated_genome(w, seeds=range(5), signed=False):
+    """An actually-approximate circuit: the exact seed, point-mutated."""
+    g = cgp.genome_from_netlist(nl.baugh_wooley_multiplier(w) if signed
+                                else nl.array_multiplier(w))
+    allowed = jnp.asarray(np.arange(16, dtype=np.int32))
+    for i in seeds:
+        g = cgp.mutate(g, jax.random.PRNGKey(i), allowed, n_i=2 * w, h=5)
+    return g
+
+
+def _domain(w, n_samples=None):
+    pmf = dist.half_normal_pmf(w, std=4.0 * (1 << max(0, w - 4)))
+    if n_samples is None:
+        return obj.ExhaustiveDomain().build(w, False, pmf, None)
+    return obj.SampledDomain(n_samples=n_samples, seed=1).build(
+        w, False, pmf, None)
+
+
+# ------------------------------------------------------ stats-vs-fn parity
+
+@pytest.mark.parametrize("w,n_samples", [(4, None), (8, None), (10, 500)])
+def test_stats_form_matches_fn_for_every_registry_metric(w, n_samples):
+    """score_genome_stats == score_genome for all of wmed/med/wce/er/mre,
+    exhaustive and masked-sampled domains alike."""
+    ctx = _domain(w, n_samples)
+    g = _mutated_genome(w)
+    if n_samples is not None:
+        assert ctx.mask is not None  # 500 pads to 512: mask exercised
+        assert ctx.n_valid() == n_samples
+    for name in obj.available_metrics():
+        m = obj.get_metric(name)
+        assert m.supports_stats, f"registry metric {name} lost its stats form"
+        a = float(obj.score_genome(g, ctx, name, n_i=2 * w, signed=False))
+        b = float(obj.score_genome_stats(g, ctx, name, n_i=2 * w,
+                                         signed=False))
+        assert np.isclose(a, b, rtol=1e-5, atol=1e-9), \
+            f"{name} at w={w}: fn={a!r} stats={b!r}"
+
+
+def test_stats_accumulate_only_what_is_requested():
+    """The evaluator returns exactly the requested accumulator subset."""
+    ctx = _domain(4)
+    g = _mutated_genome(4)
+    s = cgp.eval_genome_stats(g, ctx.in_planes, ctx.exact, ctx.weights,
+                              n_i=8, stat_names=(cgp.STAT_WABS,
+                                                 cgp.STAT_MAXABS))
+    assert set(s) == {cgp.STAT_WABS, cgp.STAT_MAXABS}
+    with pytest.raises(ValueError, match="unknown sufficient statistic"):
+        cgp.eval_genome_stats(g, ctx.in_planes, ctx.exact, ctx.weights,
+                              n_i=8, stat_names=("bogus",))
+
+
+def test_signed_stats_match_signed_fn():
+    w = 4
+    pmf = dist.signed_normal_pmf(w)
+    ctx = obj.ExhaustiveDomain().build(w, True, pmf, None)
+    g = _mutated_genome(w, signed=True)
+    for name in ("wmed", "wce"):
+        a = float(obj.score_genome(g, ctx, name, n_i=2 * w, signed=True))
+        b = float(obj.score_genome_stats(g, ctx, name, n_i=2 * w,
+                                         signed=True))
+        assert np.isclose(a, b, rtol=1e-5)
+
+
+# ---------------------------------------------------------- engine parity
+
+def test_fused_sweep_reaches_unfused_genomes_default_objective():
+    """Fused (default) and unfused batched sweeps agree genome-for-genome
+    at equal seeds on the paper's exhaustive-WMED objective."""
+    pmf = dist.half_normal_pmf(8)
+    cfg = ev.EvolveConfig(w=8, generations=40, gens_per_jit_block=20,
+                          seed=0)
+    assert cfg.fused is None  # auto: fused for registry metrics
+    levels = (0.001, 0.01, 0.05)
+    fused = ev.pareto_sweep_batched(cfg, pmf, levels=levels, repeats=1)
+    unfused = ev.pareto_sweep_batched(
+        dataclasses.replace(cfg, fused=False), pmf, levels=levels,
+        repeats=1)
+    for f, u in zip(fused, unfused):
+        assert np.array_equal(f.genome.nodes, u.genome.nodes)
+        assert np.array_equal(f.genome.outs, u.genome.outs)
+        assert f.area == u.area
+        # fitness scalars agree to chunked-reduction order only
+        assert np.isclose(f.error, u.error, rtol=1e-5, atol=1e-9)
+
+
+def test_fused_constraints_from_stats_match_unfused():
+    """Bias + WCE constraint terms computed from the wsigned/maxabs
+    accumulators reach the same genomes as the unfused constraint trace."""
+    w = 6
+    pmf = dist.half_normal_pmf(w, std=12.0)
+    base = dict(w=w, generations=60, gens_per_jit_block=30, seed=2,
+                objective=ev.Objective(
+                    constraints=ev.Constraints(bias_frac=0.5, wce_cap=0.1)))
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    f = ev.evolve(ev.EvolveConfig(**base), g0, pmf, level=0.03)
+    u = ev.evolve(ev.EvolveConfig(**base, fused=False), g0, pmf, level=0.03)
+    assert np.array_equal(f.genome.nodes, u.genome.nodes)
+    assert np.array_equal(f.genome.outs, u.genome.outs)
+    assert f.area == u.area
+    # and the evolved circuit actually satisfies the WCE cap
+    ctx = obj.ExhaustiveDomain().build(w, False, pmf, None)
+    wce = float(obj.score_genome(f.genome, ctx, "wce", n_i=2 * w,
+                                 signed=False))
+    assert wce <= 0.1 + 1e-6
+
+
+def test_plain_fn_metric_falls_back_to_unfused():
+    """A metric registered without a stats form keeps working (the engine
+    silently uses the unfused path); forcing fused=True for it errors."""
+    name = "_test_fn_only"
+    try:
+        @obj.register_metric(name, description="fn-only test metric")
+        def _fn_only(approx, exact, weights, pmax, mask=None):
+            return jnp.dot(weights.astype(jnp.float32),
+                           (jnp.abs(approx - exact) > 2).astype(jnp.float32))
+
+        assert not obj.get_metric(name).supports_stats
+        cfg = ev.EvolveConfig(w=4, generations=20, gens_per_jit_block=20,
+                              seed=0, objective=name)
+        g0 = cgp.genome_from_netlist(nl.array_multiplier(4))
+        res = ev.evolve(cfg, g0, dist.uniform_pmf(4), level=0.5)
+        assert res.metric == name
+        assert np.isfinite(res.area)
+        with pytest.raises(ValueError, match="sufficient-statistics"):
+            ev._resolve_objective(
+                dataclasses.replace(cfg, fused=True), name)
+    finally:
+        obj._REGISTRY.pop(name, None)
+
+
+def test_stats_registration_requires_both_halves():
+    with pytest.raises(ValueError, match="declared together"):
+        obj.register_metric("_half", stats=(cgp.STAT_WABS,))
+
+
+# ---------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("w,signed,n_samples", [
+    (4, False, None), (4, True, None), (6, False, None), (10, False, 500)])
+def test_cgp_fitness_kernel_matches_ref_and_jnp_stats(w, signed, n_samples):
+    """Interpret-mode cgp_fitness == ref.py oracle == jnp stats pipeline
+    for every canonical statistic (multi-block grids included at w=10)."""
+    pmf = (dist.signed_normal_pmf(w) if signed
+           else dist.half_normal_pmf(w, std=4.0 * (1 << max(0, w - 4))))
+    if n_samples is None:
+        ctx = obj.ExhaustiveDomain().build(w, signed, pmf, None)
+    else:
+        ctx = obj.SampledDomain(n_samples=n_samples, seed=1).build(
+            w, signed, pmf, None)
+    g = _mutated_genome(w, seeds=range(4), signed=signed)
+    kern = cgp_fitness(g.nodes, g.outs, ctx.in_planes, ctx.exact,
+                       ctx.weights, ctx.mask, n_i=2 * w, signed=signed,
+                       bw=8)   # small block => multi-block accumulation
+    ref = cgp_fitness_ref(g.nodes, g.outs, ctx.in_planes,
+                          np.asarray(ctx.exact), np.asarray(ctx.weights),
+                          None if ctx.mask is None else np.asarray(ctx.mask),
+                          2 * w, signed)
+    jnp_stats = cgp.eval_genome_stats(g, ctx.in_planes, ctx.exact,
+                                      ctx.weights, ctx.mask, n_i=2 * w,
+                                      signed=signed)
+    assert set(kern) == set(cgp.STAT_ORDER)
+    for name in cgp.STAT_ORDER:
+        k = float(kern[name])
+        assert np.isclose(k, float(ref[name]), rtol=1e-5, atol=1e-6), name
+        assert np.isclose(k, float(jnp_stats[name]), rtol=1e-5,
+                          atol=1e-6), name
+
+
+def test_cgp_fitness_pads_ragged_widths():
+    """A W that is not a multiple of bw pads with zero-weight, zero-mask
+    slots; the padded (0,0) vectors must not leak into any statistic."""
+    ctx = _domain(10, n_samples=500)   # W = 16 words
+    g = _mutated_genome(10, seeds=range(3))
+    full = cgp_fitness(g.nodes, g.outs, ctx.in_planes, ctx.exact,
+                       ctx.weights, ctx.mask, n_i=20, bw=16)
+    ragged = cgp_fitness(g.nodes, g.outs, ctx.in_planes, ctx.exact,
+                         ctx.weights, ctx.mask, n_i=20, bw=12)  # pads to 24
+    for name in cgp.STAT_ORDER:
+        assert np.isclose(float(full[name]), float(ragged[name]),
+                          rtol=1e-5, atol=1e-6), name

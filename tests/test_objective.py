@@ -235,8 +235,10 @@ def test_deprecated_wmed_result_shim():
 
 
 def test_pallas_eval_backend_matches_jnp_fitness():
-    """The fitness inner loop scores identically through the cgp_eval
-    Pallas kernel (interpret mode here) and the jnp evaluator."""
+    """The fitness inner loop scores equivalently through the cgp_eval
+    Pallas kernels (interpret mode here) and the jnp evaluator: fitness
+    and area bit-equal, the error scalar to block-reduction-order
+    tolerance on the fused path and bit-equal on the unfused path."""
     w = 4
     n_i = 2 * w
     pmf = dist.half_normal_pmf(w, std=4.0)
@@ -245,18 +247,42 @@ def test_pallas_eval_backend_matches_jnp_fitness():
     allowed = jnp.asarray(np.arange(16, dtype=np.int32))
     genome = cgp.mutate(genome, jax.random.PRNGKey(0), allowed, n_i=n_i, h=5)
     cons = obj.Constraints().lane_params(jnp.float32(0.05))
-    outs = {}
-    for backend in ("jnp", "pallas"):
-        cfg = ev.EvolveConfig(w=w, signed=False, eval_backend=backend)
-        _, fit = ev.make_batched_step(cfg, ctx.exact, ctx.in_planes)
-        outs[backend] = [np.asarray(x) for x in
-                         fit(genome, ctx.in_planes, ctx.weights, cons)]
-    for a, b in zip(outs["jnp"], outs["pallas"]):
-        assert np.array_equal(a, b)
+    for fused in (True, False):
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            cfg = ev.EvolveConfig(w=w, signed=False, eval_backend=backend,
+                                  fused=fused)
+            _, fit = ev.make_batched_step(cfg, ctx.exact, ctx.in_planes)
+            outs[backend] = [np.asarray(x) for x in
+                             fit(genome, ctx.in_planes, ctx.weights, cons)]
+        f_j, e_j, a_j = outs["jnp"]
+        f_p, e_p, a_p = outs["pallas"]
+        assert np.array_equal(f_j, f_p)
+        assert np.array_equal(a_j, a_p)
+        if fused:
+            assert np.isclose(e_j, e_p, rtol=1e-5)
+        else:
+            assert np.array_equal(e_j, e_p)
 
 
-def test_unknown_eval_backend_raises():
-    cfg = ev.EvolveConfig(w=4, eval_backend="cuda")
+def test_unknown_eval_backend_raises_at_construction():
+    """Backend typos fail eagerly in EvolveConfig -- before any tracing
+    or the 2-3 s block compile."""
+    with pytest.raises(ValueError, match="eval_backend"):
+        ev.EvolveConfig(w=4, eval_backend="cuda")
+    # the late check in _fitness_fn stays as a safety net for callers
+    # that bypass the config dataclass
     ctx = obj.ExhaustiveDomain().build(4, False, dist.uniform_pmf(4), None)
     with pytest.raises(ValueError, match="eval_backend"):
-        ev.make_batched_step(cfg, ctx.exact, ctx.in_planes)
+        ev._fitness_fn(ctx.exact, ctx.pmax, 8, False, obj.Objective(),
+                       eval_backend="cuda")
+
+
+def test_unknown_metric_name_raises_before_compile():
+    """Unknown metric names fail in _resolve_objective with the registry's
+    message, not deep inside the traced fitness."""
+    cfg = ev.EvolveConfig(w=4)
+    with pytest.raises(ValueError, match="unknown error metric"):
+        ev._resolve_objective(cfg, "nope")
+    with pytest.raises(ValueError, match="unknown error metric"):
+        ev._resolve_objective(dataclasses.replace(cfg, objective="nope"))
