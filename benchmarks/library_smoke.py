@@ -1,0 +1,75 @@
+"""CI smoke: build a component library from a tiny sweep and replay it.
+
+Exercises the full persistence loop on every commit:
+
+    pareto_sweep_batched -> LibraryWriter -> container on disk
+        -> load_entries -> compile_entry -> MLP-300 inference
+
+and asserts the replayed logits (Pallas lut_matmul path) are bit-exact
+vs the in-process evolved-multiplier path at equal quantization -- the
+same acceptance contract tests/test_library.py pins, but run against a
+fresh artifact that CI then uploads next to BENCH_evolve.json.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import library as lib
+from repro.core import cgp as cgp_mod
+from repro.core import distributions as dist
+from repro.core import evolve as ev
+from repro.core import luts as luts_mod
+from repro.core import objective as obj_mod
+from repro.core.approx_matmul import ApproxMul
+from repro.nn import mlp_mnist
+from repro.nn.layers import MacCtx
+
+
+def main(out: str = "library_smoke.npz", generations: int = 60,
+         seed: int = 7) -> None:
+    t0 = time.time()
+    cfg = ev.EvolveConfig(w=8, signed=True, generations=generations,
+                          seed=seed)
+    pmf = dist.uniform_pmf(8)
+    writer = lib.LibraryWriter(out, tag="ci-smoke")
+    results = ev.pareto_sweep_batched(
+        cfg, pmf, levels=(0.005, 0.05), repeats=1,
+        objective=obj_mod.Objective(metric="wmed"), library_writer=writer)
+    entries = lib.load_entries(out)
+    assert entries, "sweep produced no library entries"
+    print(f"library: {out} ({len(entries)} entries, "
+          f"{time.time() - t0:.1f}s)")
+
+    params = mlp_mnist.init_mlp300(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (16, 784))
+    by_name = {f"wmed_{r.level:g}_s{r.seed}": r for r in results}
+    for entry in entries:
+        res = by_name[entry.name]
+        mult = luts_mod.characterize(
+            "inproc", cgp_mod.Genome(jnp.asarray(res.genome.nodes),
+                                     jnp.asarray(res.genome.outs)),
+            8, True, pmf)
+        want = mlp_mnist.mlp300_forward(
+            params, x, MacCtx(mode="lut",
+                              mul=ApproxMul.from_lut(mult.lut)))
+        got = mlp_mnist.mlp300_forward_entry(params, x, entry, kernel=True)
+        assert jnp.array_equal(want, got), \
+            f"{entry.name}: replay logits diverge from in-process path"
+        print(f"  {entry.name}: wmed={entry.profile['wmed']:.5f} "
+              f"area={entry.area_um2:.0f}um2 "
+              f"M(0,0)={int(np.asarray(entry.lut)[0, 0])} "
+              f"replay bit-exact OK")
+    print(f"library smoke passed in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="library_smoke.npz")
+    ap.add_argument("--generations", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=7)
+    a = ap.parse_args()
+    main(a.out, a.generations, a.seed)

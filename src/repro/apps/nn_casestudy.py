@@ -96,8 +96,11 @@ def weight_pmf(params, qp_w: QuantParams, w: int = 8) -> np.ndarray:
     return dist.empirical_pmf(np.concatenate(vals), w=w, signed=True)
 
 
-def make_mac(mult: luts_mod.MultLib, x_qp, w_qp) -> MacCtx:
-    return MacCtx(mode="lut", mul=ApproxMul.from_lut(mult.lut),
+def make_mac(mult: luts_mod.MultLib, x_qp, w_qp,
+             mode: str = "lut") -> MacCtx:
+    """MacCtx for a characterized multiplier; ``mode`` picks the execution
+    path (``lut`` gather / ``lut_onehot`` MXU / ``lut_kernel`` Pallas)."""
+    return MacCtx(mode=mode, mul=ApproxMul.from_lut(mult.lut),
                   x_qp=x_qp, w_qp=w_qp)
 
 
@@ -121,6 +124,16 @@ def joint_vector_weights(pmf_w: np.ndarray, xs, x_qp: QuantParams,
 # ------------------------------------------------------------ the pipeline
 
 @dataclasses.dataclass
+class _Electricals:
+    """Cell-model numbers for one multiplier (library entries duck-type
+    this via their own area_um2/power_nw/pdp_fj fields)."""
+
+    area_um2: float
+    power_nw: float
+    pdp_fj: float
+
+
+@dataclasses.dataclass
 class CaseStudyResult:
     level: float
     wmed: float
@@ -129,6 +142,7 @@ class CaseStudyResult:
     pdp_rel: float            # percent delta vs exact MAC
     power_rel: float
     area_rel: float
+    wall_s: float = 0.0       # elapsed for this level (eval + finetune)
 
 
 def finetune(forward: Callable, params, x, y, mac: MacCtx, *, iters=10,
@@ -156,8 +170,21 @@ def finetune(forward: Callable, params, x, y, mac: MacCtx, *, iters=10,
 def run_case_study(model: str = "mlp", *, n_train=6000, n_test=1500,
                    levels=(5e-5, 5e-4, 1e-3, 5e-3, 2e-2),
                    generations=1500, seed=0, verbose=True,
-                   finetune_iters=10) -> Dict:
-    """End-to-end paper pipeline; returns Table-I-style records."""
+                   finetune_iters=10, mac_mode: str = "lut",
+                   library: str | None = None,
+                   library_out: str | None = None) -> Dict:
+    """End-to-end paper pipeline; returns Table-I-style records.
+
+    ``library_out`` persists every evolved multiplier (full error profile
+    + electricals + search provenance incl. the run's quantization) as a
+    ``repro.library`` container next to the accuracy numbers.
+
+    ``library`` *replays* instead of evolving: entries are loaded from an
+    existing container, genome-verified, and dropped into every MAC --
+    the accuracy/area Pareto then comes from the library, not a fresh
+    search, so repeated runs are cheap and bit-reproducible.  ``levels``
+    and ``generations`` are ignored in replay mode.
+    """
     t0 = time.time()
     if model == "mlp":
         x, y = digits.mnist_like(n_train + n_test, seed=seed)
@@ -196,39 +223,66 @@ def run_case_study(model: str = "mlp", *, n_train=6000, n_test=1500,
     vw = joint_vector_weights(pmf, xs, x_qp)
 
     results: List[CaseStudyResult] = []
-    # one lane per target level: the whole error ladder evolves inside a
-    # single jitted scan (one compile) instead of len(levels) serial runs;
-    # the objective is WMED with the signed-bias constraint (DESIGN.md §10)
-    cfg = ev.BatchedEvolveConfig(w=8, signed=True, generations=generations,
-                                 gens_per_jit_block=min(250, generations),
-                                 seed=seed,
-                                 objective=ev.Objective(
-                                     metric="wmed",
-                                     constraints=ev.Constraints(
-                                         bias_frac=0.25)),
-                                 levels=tuple(float(l) for l in levels),
-                                 repeats=1)
-    seed_nl = nl_mod.baugh_wooley_multiplier(8)
-    g0 = cgp_mod.genome_from_netlist(seed_nl)
-    batch = ev.evolve_batched(cfg, g0, pmf, vec_weights=vw)
-    for li, level in enumerate(levels):
-        res = batch.lane(li)
-        mult = luts_mod.characterize(f"evolved_{level}",
-                                     cgp_mod.Genome(jnp.asarray(res.genome.nodes),
-                                                    jnp.asarray(res.genome.outs)),
-                                     8, True, pmf)
-        mac = make_mac(mult, x_qp, w_qp)
+    if library is not None:
+        # Replay mode: the accuracy/area Pareto comes from persisted
+        # entries (genome-verified on compile), not a fresh search.
+        from repro import library as lib_mod
+        entries = sorted(lib_mod.load_entries(library),
+                         key=lambda e: e.provenance.level)
+        multipliers = [(e.provenance.level, e.profile["wmed"],
+                        lib_mod.compile_entry(e), e) for e in entries]
+    else:
+        # one lane per target level: the whole error ladder evolves inside
+        # a single jitted scan (one compile) instead of len(levels) serial
+        # runs; the objective is WMED with the signed-bias constraint
+        # (DESIGN.md §10)
+        cfg = ev.BatchedEvolveConfig(
+            w=8, signed=True, generations=generations,
+            gens_per_jit_block=min(250, generations), seed=seed,
+            objective=ev.Objective(
+                metric="wmed",
+                constraints=ev.Constraints(bias_frac=0.25)),
+            levels=tuple(float(l) for l in levels), repeats=1)
+        seed_nl = nl_mod.baugh_wooley_multiplier(8)
+        g0 = cgp_mod.genome_from_netlist(seed_nl)
+        batch = ev.evolve_batched(cfg, g0, pmf, vec_weights=vw)
+        lanes = [batch.lane(li) for li in range(len(levels))]
+        entries = None
+        if library_out is not None:
+            from repro.library import LibraryWriter
+            quant = {"x_qp": [x_qp.bits, x_qp.frac_bits, x_qp.signed],
+                     "w_qp": [w_qp.bits, w_qp.frac_bits, w_qp.signed]}
+            with LibraryWriter(library_out, tag=f"nn:{model}") as lw:
+                entries = lw.add_sweep(lanes, cfg=cfg,
+                                       objective=cfg.objective,
+                                       pmf_x=pmf, vec_weights=vw,
+                                       quant=quant)
+        multipliers = []
+        for li, res in enumerate(lanes):
+            mult = luts_mod.characterize(
+                f"evolved_{levels[li]}",
+                cgp_mod.Genome(jnp.asarray(res.genome.nodes),
+                               jnp.asarray(res.genome.outs)),
+                8, True, pmf)
+            multipliers.append((float(levels[li]), mult.wmed,
+                                ApproxMul.from_lut(mult.lut),
+                                _Electricals(mult.area_um2, mult.power_nw,
+                                             mult.pdp_fj)))
+    for level, wmed_val, mul, elec in multipliers:
+        t_lvl = time.time()
+        mac = MacCtx(mode=mac_mode, mul=mul, x_qp=x_qp, w_qp=w_qp)
         acc_i = acc_fn(params, xte, yte, mac=mac)
         p_ft = finetune(fwd, params, xtr, ytr, mac, iters=finetune_iters,
                         seed=seed)
         acc_f = acc_fn(p_ft, xte, yte, mac=mac)
         rec = CaseStudyResult(
-            level=level, wmed=mult.wmed,
+            level=level, wmed=wmed_val,
             acc_init_rel=100 * (acc_i - acc_int8),
             acc_finetuned_rel=100 * (acc_f - acc_int8),
-            pdp_rel=100 * (mult.pdp_fj / exact.pdp_fj - 1),
-            power_rel=100 * (mult.power_nw / exact.power_nw - 1),
-            area_rel=100 * (mult.area_um2 / exact.area_um2 - 1))
+            pdp_rel=100 * (elec.pdp_fj / exact.pdp_fj - 1),
+            power_rel=100 * (elec.power_nw / exact.power_nw - 1),
+            area_rel=100 * (elec.area_um2 / exact.area_um2 - 1),
+            wall_s=time.time() - t_lvl)
         results.append(rec)
         if verbose:
             print(f"[{model}] WMED<={level:7.4f}: wmed={rec.wmed:.5f} "
@@ -237,5 +291,5 @@ def run_case_study(model: str = "mlp", *, n_train=6000, n_test=1500,
                   f"PDP={rec.pdp_rel:+.0f}% power={rec.power_rel:+.0f}% "
                   f"area={rec.area_rel:+.0f}%")
     return {"model": model, "acc_float": acc_float, "acc_int8": acc_int8,
-            "pmf": pmf, "results": results,
+            "pmf": pmf, "results": results, "entries": entries,
             "x_qp": x_qp, "w_qp": w_qp, "wall_s": time.time() - t0}

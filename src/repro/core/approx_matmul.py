@@ -113,7 +113,13 @@ def matmul_lut_gather_blocked(a_pat: jax.Array, b_pat: jax.Array,
         return acc
 
     out = jax.lax.map(m_block, jnp.arange(Mp // bm))
-    return out.reshape(Mp, N)[:M]
+    out = out.reshape(Mp, N)[:M]
+    # K padding injects (Kp - K) copies of the (0, 0)-pattern product into
+    # every element; M(0,0) != 0 is legal for evolved LUTs, so subtract the
+    # static pad contribution (same contract as kernels/lut_matmul/ops.py).
+    if Kp != K:
+        out = out - jnp.int32(Kp - K) * mul.lut_flat[0].astype(jnp.int32)
+    return out
 
 
 def matmul_lut_onehot(a_pat: jax.Array, b_pat: jax.Array,

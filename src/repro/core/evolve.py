@@ -137,6 +137,7 @@ class EvolveResult:
     history: np.ndarray   # (G//block, 2) best (error, area) per block
     wall_s: float
     metric: str = "wmed"  # registry name of the metric ``error`` is in
+    seed: int = -1        # the lane's RNG seed (-1 = unknown/legacy)
 
     @property
     def wmed(self) -> float:
@@ -179,7 +180,7 @@ class BatchedEvolveResult:
             error=float(self.error[i]), area=float(self.area[i]),
             level=float(self.levels[i]), generations=self.generations,
             history=self.history[:, i, :], wall_s=self.wall_s,
-            metric=self.metric)
+            metric=self.metric, seed=int(self.seeds[i]))
 
 
 def _base_config(cfg: EvolveConfig) -> dict:
@@ -597,7 +598,8 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                          repeats: int = 1, verbose: bool = False,
                          vec_weights: np.ndarray | None = None,
                          pareto_filter: bool = False,
-                         objective: Objective | str | None = None
+                         objective: Objective | str | None = None,
+                         library_writer=None
                          ) -> List[EvolveResult]:
     """Lane-batched Pareto sweep: all (level, repeat) lanes in one program.
 
@@ -613,6 +615,12 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
     meeting a tighter error budget trivially meets a looser one, so the
     returned front is monotone non-increasing in area -- the non-dominated
     set the paper plots, robust to per-lane search noise at small budgets.
+
+    ``library_writer`` (a ``repro.library.LibraryWriter``) persists the
+    per-level best circuits: each distinct winner is characterized (LUT
+    lowering + full registry error profile + cell-model electricals +
+    search provenance) and the writer is flushed before returning, so the
+    sweep's output survives the process (DESIGN.md §12).
     """
     levels = tuple(float(l) for l in levels)
     if pareto_filter and any(b < a for a, b in zip(levels, levels[1:])):
@@ -635,4 +643,9 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
         if verbose:
             print(f"level={level:8.5f} -> {best.metric}={best.error:.5f} "
                   f"area={best.area:8.2f} (batch {batch.wall_s:.1f}s)")
+    if library_writer is not None:
+        library_writer.add_sweep(results, cfg=bcfg,
+                                 objective=_resolve_objective(cfg, objective),
+                                 pmf_x=pmf_x, vec_weights=vec_weights)
+        library_writer.flush()
     return results

@@ -29,6 +29,7 @@ Their electrical parameters come from the same cell model, by building the
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict
 
 import numpy as np
@@ -212,24 +213,110 @@ def exact_multiplier(w: int, signed: bool) -> MultLib:
 
 
 # ------------------------------------------------------------- persistence
+#
+# Versioned, pickle-free npz containers.  Every on-disk artifact of the
+# component-library workflow (this module's MultLib lists and the richer
+# ``repro.library`` component entries) shares the same envelope: array
+# payload + a JSON metadata blob + a (kind, version) header that load
+# paths check *before* interpreting anything else, so stale or foreign
+# files fail with a typed error instead of a shape mismatch ten frames
+# deep.  ``allow_pickle`` is never used -- a corrupted or malicious file
+# cannot execute code via the loader.
+
+LUTS_FORMAT_VERSION = 1
+
+
+class LibraryFormatError(ValueError):
+    """File is not a readable component-library container."""
+
+
+class LibraryVersionError(LibraryFormatError):
+    """Container was written by an incompatible format version."""
+
+
+def write_container(path: str, payload: Dict[str, np.ndarray], meta,
+                    *, kind: str, version: int) -> None:
+    """Write a versioned npz container (arrays + JSON meta + header)."""
+    arrs = {f"payload_{k}": np.asarray(v) for k, v in payload.items()}
+    arrs["__kind__"] = np.array(kind)
+    arrs["__version__"] = np.array(int(version), dtype=np.int64)
+    arrs["__meta__"] = np.array(json.dumps(meta))
+    np.savez_compressed(path, **arrs)
+
+
+def read_container(path: str, *, kind: str, version: int):
+    """Open a container, validate its header, return (payload, meta).
+
+    Raises ``LibraryFormatError`` for unreadable/foreign files and
+    ``LibraryVersionError`` for unversioned (legacy) or version-mismatched
+    ones.
+    """
+    try:
+        z = np.load(path, allow_pickle=False)
+        names = set(z.files)
+    except LibraryFormatError:
+        raise
+    except Exception as e:  # zipfile/np errors: not an npz at all
+        raise LibraryFormatError(f"{path}: not a readable component-library "
+                                 f"container ({e})") from e
+    if "__version__" not in names or "__kind__" not in names:
+        raise LibraryVersionError(
+            f"{path}: unversioned container (pre-format-v1 legacy file or "
+            "foreign npz); re-export it with the current writer")
+    got_kind = str(z["__kind__"])
+    if got_kind != kind:
+        raise LibraryFormatError(f"{path}: container kind {got_kind!r} "
+                                 f"(expected {kind!r})")
+    got_ver = int(z["__version__"])
+    if got_ver != version:
+        raise LibraryVersionError(
+            f"{path}: format version {got_ver} is not supported by this "
+            f"code (expected {version})")
+    try:
+        meta = json.loads(str(z["__meta__"]))
+        payload = {n[len("payload_"):]: z[n] for n in z.files
+                   if n.startswith("payload_")}
+    except LibraryFormatError:
+        raise
+    except Exception as e:
+        raise LibraryFormatError(f"{path}: corrupt container payload "
+                                 f"({e})") from e
+    return payload, meta
+
 
 def save_library(path: str, lib: list[MultLib]) -> None:
-    arrs, meta = {}, []
+    """Persist a list of MultLib entries (versioned, pickle-free)."""
+    payload, meta = {}, []
     for i, m in enumerate(lib):
-        arrs[f"lut_{i}"] = m.lut
-        meta.append((m.name, m.w, int(m.signed), m.area_um2, m.delay_ps,
-                     m.power_nw, m.pdp_fj, m.wmed, m.med))
-    arrs["meta"] = np.array(meta, dtype=object)
-    np.savez_compressed(path, **arrs, allow_pickle=True)
+        payload[f"lut_{i}"] = np.asarray(m.lut, dtype=np.int32)
+        meta.append({"name": m.name, "w": m.w, "signed": bool(m.signed),
+                     "area_um2": m.area_um2, "delay_ps": m.delay_ps,
+                     "power_nw": m.power_nw, "pdp_fj": m.pdp_fj,
+                     "wmed": m.wmed, "med": m.med})
+    write_container(path, payload, meta, kind="multlib",
+                    version=LUTS_FORMAT_VERSION)
 
 
 def load_library(path: str) -> list[MultLib]:
-    z = np.load(path, allow_pickle=True)
+    """Load a ``save_library`` container; typed errors on bad files."""
+    payload, meta = read_container(path, kind="multlib",
+                                   version=LUTS_FORMAT_VERSION)
     out = []
-    for i, row in enumerate(z["meta"]):
-        name, w, signed, a, d, p, pdp, e_w, e_m = row
-        out.append(MultLib(name=str(name), lut=z[f"lut_{i}"], w=int(w),
-                           signed=bool(signed), area_um2=float(a),
-                           delay_ps=float(d), power_nw=float(p),
-                           pdp_fj=float(pdp), wmed=float(e_w), med=float(e_m)))
+    for i, row in enumerate(meta):
+        lut = payload.get(f"lut_{i}")
+        if lut is None:
+            raise LibraryFormatError(f"{path}: entry {i} ({row.get('name')})"
+                                     " has no LUT array")
+        n = 1 << int(row["w"])
+        if lut.shape != (n, n):
+            raise LibraryFormatError(
+                f"{path}: entry {i} LUT shape {lut.shape} does not match "
+                f"w={row['w']} (expected {(n, n)})")
+        out.append(MultLib(name=str(row["name"]), lut=lut.astype(np.int32),
+                           w=int(row["w"]), signed=bool(row["signed"]),
+                           area_um2=float(row["area_um2"]),
+                           delay_ps=float(row["delay_ps"]),
+                           power_nw=float(row["power_nw"]),
+                           pdp_fj=float(row["pdp_fj"]),
+                           wmed=float(row["wmed"]), med=float(row["med"])))
     return out

@@ -1,0 +1,46 @@
+"""Pallas execution-mode selection shared by every kernel wrapper.
+
+The kernels in this package are written for the TPU Pallas lowering but
+must also run on the CPU containers that host CI and most development --
+there they execute under the Pallas interpreter.  Historically each
+``ops.py`` hardcoded ``_INTERPRET = True``, which silently interpreted
+(i.e. de-optimized) the kernels on real TPU deployments too.  The policy
+now lives here:
+
+* ``REPRO_PALLAS_INTERPRET`` environment variable, when set, wins:
+  ``1/true/yes/on`` forces interpret mode everywhere, ``0/false/no/off``
+  forces the compiled lowering (e.g. to exercise the Mosaic pipeline from
+  a unit test on a TPU host);
+* otherwise interpret mode is chosen exactly when the default JAX backend
+  is not a TPU -- CPU and GPU hosts interpret, TPUs compile.
+
+``default_interpret()`` is evaluated at trace time by the wrappers, so a
+process that switches backends (or tests that monkeypatch the override)
+re-resolve naturally on the next trace.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    """Should Pallas kernels run under the interpreter on this backend?"""
+    env = os.environ.get(ENV_INTERPRET)
+    if env is not None:
+        v = env.strip().lower()
+        if v in _TRUE:
+            return True
+        if v in _FALSE:
+            return False
+        raise ValueError(
+            f"{ENV_INTERPRET}={env!r}: expected one of "
+            f"{'/'.join(_TRUE)} or {'/'.join(_FALSE)}")
+    return jax.default_backend() != "tpu"

@@ -30,7 +30,8 @@ Parity: bit-exact vs the pure-jnp oracle in ref.py (and vs
 tests/test_kernel_cgp_eval.py; ``cgp_fitness`` is validated in interpret
 mode against ``cgp_fitness_ref`` and the jnp stats pipeline in
 tests/test_fitness_fused.py.  The container runs interpret mode
-(``ops._INTERPRET = True``); flip to False on real TPU deployments.
+(auto-selected by ``kernels.backend``; ``REPRO_PALLAS_INTERPRET``
+overrides).
 """
 
 from repro.kernels.cgp_eval.ops import cgp_eval, cgp_fitness  # noqa: F401

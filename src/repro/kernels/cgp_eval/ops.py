@@ -19,17 +19,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cgp as cgp_mod
+from repro.kernels.backend import default_interpret
 from repro.kernels.cgp_eval.kernel import cgp_eval_kernel, cgp_fitness_kernel
-
-_INTERPRET = True  # CPU container; False on real TPU
 
 
 def cgp_eval(nodes, outs, in_planes, *, n_i: int, bw: int = 512,
              interpret: bool | None = None):
     """Single-genome evaluation; pads W to a block multiple.
 
-    ``interpret`` overrides the module default (interpret-mode on CPU,
-    compiled on TPU) for callers that pin a backend explicitly.
+    ``interpret=None`` auto-selects by backend (compiled on TPU,
+    interpreter elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides);
+    callers that pin a backend explicitly pass a bool.
     """
     W = in_planes.shape[1]
     bw = min(bw, W)
@@ -40,7 +40,7 @@ def cgp_eval(nodes, outs, in_planes, *, n_i: int, bw: int = 512,
                           jnp.asarray(outs, jnp.int32),
                           jnp.asarray(in_planes, jnp.uint32),
                           n_i=n_i, bw=bw,
-                          interpret=_INTERPRET if interpret is None
+                          interpret=default_interpret() if interpret is None
                           else interpret)
     return out[:, :W]
 
@@ -94,5 +94,5 @@ def cgp_fitness(nodes, outs, in_planes, exact, weights, mask=None, *,
         _bit_major(jnp.asarray(weights, jnp.float32), W, pad),
         _bit_major(jnp.asarray(mask, jnp.float32), W, pad),
         n_i=n_i, bw=bw, signed=signed,
-        interpret=_INTERPRET if interpret is None else interpret)
+        interpret=default_interpret() if interpret is None else interpret)
     return dict(zip(cgp_mod.STAT_ORDER, row[0]))

@@ -21,7 +21,9 @@ under budget with the lane dim matching the 128-wide VPU.
 
 Parity: bit-exact vs ref.py (an independent jnp gather oracle) across
 shape/dtype sweeps — asserted in tests/test_kernel_lut_matmul.py.
-Interpret mode on CPU (``ops._INTERPRET``); set False on real TPU.
+Interpret mode auto-selected by backend (``kernels.backend``): the
+interpreter off-TPU, the Mosaic lowering on TPU; the
+``REPRO_PALLAS_INTERPRET`` environment variable overrides.
 """
 
 from repro.kernels.lut_matmul.ops import lut_matmul, lut_matmul_f32  # noqa: F401

@@ -15,10 +15,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.lut_matmul.kernel import lut_matmul_kernel
 from repro.quant.fixed_point import QuantParams, quantize_pattern
-
-_INTERPRET = True  # CPU container; set False on real TPU deployments
 
 
 def _pad_to(x, m, axis):
@@ -30,22 +29,43 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("w", "bm", "bn", "bk"))
-def lut_matmul(a_pat: jax.Array, b_pat: jax.Array, lut_flat: jax.Array,
-               *, w: int = 8, bm: int = 128, bn: int = 128,
-               bk: int = 128) -> jax.Array:
-    """(M, K) x (K, N) through the LUT; arbitrary M/N/K (padded)."""
+@functools.partial(jax.jit,
+                   static_argnames=("w", "bm", "bn", "bk", "interpret"))
+def _lut_matmul_impl(a_pat, b_pat, lut_flat, *, w, bm, bn, bk, interpret):
     M, K = a_pat.shape
     N = b_pat.shape[1]
     bm_, bn_, bk_ = (min(bm, max(M, 8)), min(bn, max(N, 8)),
                      min(bk, max(K, 8)))
     a = _pad_to(_pad_to(a_pat.astype(jnp.int32), bm_, 0), bk_, 1)
     b = _pad_to(_pad_to(b_pat.astype(jnp.int32), bk_, 0), bn_, 1)
-    # zero-padding is safe iff LUT[0] (0 x 0 pattern) maps to 0: all our
-    # multiplier families satisfy M(0,0)=0; assert at trace time via slice.
     out = lut_matmul_kernel(a, b, lut_flat, w=w, bm=bm_, bn=bn_, bk=bk_,
-                            interpret=_INTERPRET)
-    return out[:M, :N]
+                            interpret=interpret)[:M, :N]
+    # Padding contract (DESIGN.md §12): M/N pad rows/cols are sliced away,
+    # but every K pad slot contributes the (0, 0)-pattern product M(0, 0)
+    # to *every* output element.  Exact/truncated families satisfy
+    # M(0,0)=0, evolved genomes need not -- so the wrapper subtracts the
+    # static pad count times LUT[0], keeping the kernel bit-exact with the
+    # gather semantics for arbitrary LUTs.
+    k_pad = a.shape[1] - K
+    if k_pad:
+        out = out - jnp.int32(k_pad) * lut_flat[0].astype(jnp.int32)
+    return out
+
+
+def lut_matmul(a_pat: jax.Array, b_pat: jax.Array, lut_flat: jax.Array,
+               *, w: int = 8, bm: int = 128, bn: int = 128,
+               bk: int = 128, interpret: bool | None = None) -> jax.Array:
+    """(M, K) x (K, N) through the LUT; arbitrary M/N/K (padded).
+
+    ``interpret=None`` auto-selects by backend (compiled on TPU,
+    interpreter elsewhere; ``REPRO_PALLAS_INTERPRET`` overrides) -- it is
+    resolved *outside* the jit cache, so flipping the override between
+    calls takes effect immediately.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    return _lut_matmul_impl(a_pat, b_pat, lut_flat, w=w, bm=bm, bn=bn,
+                            bk=bk, interpret=interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))

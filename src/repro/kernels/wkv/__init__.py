@@ -19,7 +19,7 @@ cross-chunk carry is O(n^2).
 
 Parity: matches the naive float32 recurrence oracle (ref.py) to 1e-4
 rtol/atol (different summation order) for any chunk size — asserted in
-tests/test_kernel_wkv.py.  Interpret mode on CPU (``ops._INTERPRET``);
+tests/test_kernel_wkv.py.  Interpret mode auto-selected by backend (``kernels.backend``);
 set False on real TPU.
 """
 

@@ -5,12 +5,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import default_interpret
 from repro.kernels.wkv.kernel import wkv_chunked_kernel
 
-_INTERPRET = True  # CPU container; False on real TPU
 
-
-def wkv_chunked(r, k, v, logw, u, *, chunk: int = 32):
+def wkv_chunked(r, k, v, logw, u, *, chunk: int = 32,
+                interpret: bool | None = None):
     """r/k/v/logw: (B,H,S,n); u: (H,n).  Returns (out (B,H,S,n),
     s_end (B,H,n,n)).  Pads S to a chunk multiple (decays of the pad region
     do not affect the causal prefix outputs; s_end is taken at the true S
@@ -22,5 +22,6 @@ def wkv_chunked(r, k, v, logw, u, *, chunk: int = 32):
     out, s_end = wkv_chunked_kernel(
         flat(r).astype(jnp.float32), flat(k).astype(jnp.float32),
         flat(v).astype(jnp.float32), flat(logw).astype(jnp.float32),
-        u_f.astype(jnp.float32), chunk=chunk, interpret=_INTERPRET)
+        u_f.astype(jnp.float32), chunk=chunk,
+        interpret=default_interpret() if interpret is None else interpret)
     return out.reshape(B, H, S, n), s_end.reshape(B, H, n, n)

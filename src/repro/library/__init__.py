@@ -1,0 +1,29 @@
+"""``repro.library``: persistent, versioned evolved-component library.
+
+The bridge between the search side (``core.evolve`` sweeps) and the
+deployment side (``kernels/lut_matmul`` inference):
+
+* ``schema``  -- ComponentEntry (genome + full error profile + cell-model
+  electricals + provenance) and the versioned pickle-free container
+  (``save_entries``/``load_entries``);
+* ``writer``  -- LibraryWriter, the ``pareto_sweep_batched`` hook that
+  characterizes and persists every per-level best circuit;
+* ``compile`` -- ``compile_entry`` lowers an entry to the exact LUT the
+  matmul paths consume (with the M(0,0)=0 padding invariant enforced for
+  kernel mode) and ``mac_ctx`` builds the MacCtx that runs full NN
+  inference through the evolved arithmetic.
+
+See DESIGN.md §12 for the schema and the compile-to-LUT contract.
+"""
+
+from repro.core.luts import (LibraryFormatError,  # noqa: F401
+                             LibraryVersionError)
+from repro.library.compile import (LibraryCompileError,  # noqa: F401
+                                   compile_entry, entry_lut, mac_ctx,
+                                   profile_lut, zero_guard_entry)
+from repro.library.schema import (SCHEMA_VERSION,  # noqa: F401
+                                  ComponentEntry, Provenance,
+                                  entry_from_multlib, load_entries,
+                                  save_entries, validate_entry)
+from repro.library.writer import (LibraryWriter,  # noqa: F401
+                                  characterize_entry)

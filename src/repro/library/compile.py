@@ -1,0 +1,178 @@
+"""Lower library entries to the LUT/MacCtx consumed by NN inference.
+
+The compile-to-LUT contract (DESIGN.md §12):
+
+* the netlist genome is the circuit's ground truth; ``compile_entry``
+  re-derives the product table from it by exhaustive evaluation and
+  (by default) cross-checks the entry's cached ``lut`` bit-for-bit, so a
+  corrupted cache can never reach the inference path;
+* the resulting ``ApproxMul`` feeds both the pure-jnp gather path
+  (``core.approx_matmul``) and the ``kernels/lut_matmul`` Pallas kernel;
+* the raw kernel pads ragged shapes with zero *bit patterns*, so each
+  K pad slot contributes the (0, 0)-pattern product ``M(0, 0)`` to every
+  output element.  The ops wrappers subtract that static contribution,
+  so any LUT (evolution is free to break zero-input behaviour) replays
+  bit-exactly; ``require_zero=True`` opts into the strict
+  **M(0, 0) = 0 invariant** for raw-kernel/hardware deployments, with
+  ``zero_guard_entry`` -- the paper's operand-NOR zero-guard wrapper
+  [Mrazek 2016] -- as the fix: it forces exact-0 rows/columns and
+  re-characterizes the electrical cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import cgp as cgp_mod
+from repro.core import distributions as dist
+from repro.core import luts as luts_mod
+from repro.core import wmed as wmed_mod
+from repro.core.approx_matmul import ApproxMul
+from repro.core.luts import LibraryFormatError
+from repro.library.schema import ComponentEntry, validate_entry
+
+
+class LibraryCompileError(LibraryFormatError):
+    """Entry cannot be lowered to an inference-ready LUT."""
+
+
+def _apply_zero_guard(lut: np.ndarray) -> np.ndarray:
+    out = np.asarray(lut, np.int32).copy()
+    out[0, :] = 0
+    out[:, 0] = 0
+    return out
+
+
+def entry_lut(entry: ComponentEntry) -> np.ndarray:
+    """Re-derive the (2^w, 2^w) product table from the entry's genome.
+
+    Zero-guarded entries (``provenance.tag`` carries ``zero_guarded``)
+    re-apply the guard on top of the genome's function -- the guard is a
+    wrapper outside the netlist.
+    """
+    lut = luts_mod.genome_to_lut(entry.genome(), entry.w, entry.signed)
+    if "zero_guarded" in entry.provenance.tag:
+        lut = _apply_zero_guard(lut)
+    return lut
+
+
+def compile_entry(entry: ComponentEntry, *, verify: bool = True,
+                  require_zero: bool = False) -> ApproxMul:
+    """Lower an entry to the ApproxMul the matmul paths consume.
+
+    ``verify`` re-evaluates the genome exhaustively and demands bit
+    equality with the cached LUT (the oracle the tests pin); ``verify=
+    False`` trusts the cache (load_entries already checked its shape).
+
+    The M(0, 0) = 0 zero-padding invariant: the *raw* Pallas kernel pads
+    ragged K with zero patterns, so each pad slot adds M(0, 0) to every
+    output.  The ops-level wrapper subtracts that static contribution, so
+    arbitrary evolved LUTs (which are free to break zero-input behaviour)
+    stay bit-exact through the kernel.  ``require_zero=True`` opts into
+    the strict contract -- e.g. deployments driving the raw kernel
+    without the wrapper, or modelling real silicon where a pad MAC really
+    computes M(0, 0) -- rejecting violators with a pointer to the
+    operand-NOR ``zero_guard_entry`` wrapper.
+    """
+    validate_entry(entry)
+    lut = np.asarray(entry.lut, np.int32)
+    if verify:
+        derived = entry_lut(entry)
+        if not np.array_equal(derived, lut):
+            bad = int(np.sum(derived != lut))
+            raise LibraryCompileError(
+                f"entry {entry.name!r}: cached LUT disagrees with the "
+                f"genome's function at {bad} of {lut.size} points -- the "
+                "container is corrupt or was characterized by different "
+                "code; re-export the library")
+    if require_zero and int(lut[0, 0]) != 0:
+        raise LibraryCompileError(
+            f"entry {entry.name!r}: M(0, 0) = {int(lut[0, 0])} != 0 breaks "
+            "the raw kernel's zero-padding invariant (DESIGN.md §12); wrap "
+            "it with library.zero_guard_entry (operand-NOR zero guard) or "
+            "rely on the ops wrapper's pad compensation")
+    return ApproxMul.from_lut(lut)
+
+
+def mac_ctx(entry: ComponentEntry, x_qp=None, w_qp=None, *,
+            kernel: bool = True, verify: bool = True):
+    """Build the MacCtx that runs NN inference through this entry.
+
+    ``kernel=True`` routes every dense/conv matmul through the
+    ``lut_matmul`` Pallas kernel (``"lut_kernel"`` mode; interpret mode
+    off-TPU), ``kernel=False`` through the pure-jnp gather.  Both go via
+    ops-level wrappers that compensate K padding, so neither mode needs
+    the M(0,0)=0 invariant.  Quant params default to the entry's
+    provenance (equal-quantization replay) and fall back to the layer
+    defaults.
+    """
+    from repro.nn.layers import MacCtx
+    from repro.quant.fixed_point import QuantParams
+
+    def _qp(explicit, key):
+        if explicit is not None:
+            return explicit
+        q = (entry.provenance.quant or {}).get(key)
+        if q is not None:
+            return QuantParams(int(q[0]), int(q[1]), bool(q[2]))
+        return None
+
+    mul = compile_entry(entry, verify=verify)
+    kw = {}
+    xq, wq = _qp(x_qp, "x_qp"), _qp(w_qp, "w_qp")
+    if xq is not None:
+        kw["x_qp"] = xq
+    if wq is not None:
+        kw["w_qp"] = wq
+    return MacCtx(mode="lut_kernel" if kernel else "lut", mul=mul, **kw)
+
+
+def zero_guard_entry(entry: ComponentEntry) -> ComponentEntry:
+    """Apply the operand-NOR zero guard [Mrazek 2016] to an entry.
+
+    Forces exact-0 output whenever either operand pattern is all-zero
+    (restoring the M(0,0)=0 invariant), adds the guard's cell cost, and
+    re-profiles every registry metric on the guarded LUT.  The genome is
+    kept -- the guard is a wrapper around the circuit, not a new netlist
+    -- so ``compile_entry(verify=True)`` must go through the guarded
+    compare: the cached LUT is authoritative for guarded entries, which
+    is recorded in the provenance tag.
+    """
+    m = entry.as_multlib()
+    zg = luts_mod.zero_guarded(m)
+    profile = profile_lut(zg.lut, entry.w, entry.signed,
+                          pmf_x=None)  # uniform re-profile, as zero_guarded
+    tag = (entry.provenance.tag + ";" if entry.provenance.tag else "")
+    return dataclasses.replace(
+        entry, name=zg.name, lut=np.asarray(zg.lut, np.int32),
+        area_um2=zg.area_um2, power_nw=zg.power_nw, pdp_fj=zg.pdp_fj,
+        profile=profile,
+        provenance=dataclasses.replace(entry.provenance,
+                                       tag=tag + "zero_guarded"))
+
+
+def profile_lut(lut: np.ndarray, w: int, signed: bool,
+                pmf_x: np.ndarray | None = None,
+                vec_weights: np.ndarray | None = None) -> dict:
+    """Score a product table under every registry error metric.
+
+    ``vec_weights`` (or the per-vector weights derived from ``pmf_x``)
+    is the design-time distribution alpha; None = uniform.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import objective as obj_mod
+
+    exact = wmed_mod.exact_products(w, signed).astype(np.int32)
+    if vec_weights is None:
+        pmf = dist.uniform_pmf(w) if pmf_x is None else pmf_x
+        vec_weights = dist.vector_weights(pmf, w)
+    vals = jnp.asarray(np.asarray(lut, np.int32).reshape(-1))
+    ex = jnp.asarray(exact)
+    wts = jnp.asarray(np.asarray(vec_weights, np.float32))
+    pmax = jnp.float32(wmed_mod.p_max(w))
+    return {name: float(obj_mod.get_metric(name).fn(vals, ex, wts, pmax,
+                                                    None))
+            for name in obj_mod.available_metrics()}

@@ -1,0 +1,206 @@
+"""Component-library schema: evolved circuits as persistent artifacts.
+
+The paper's deliverable is deployable approximate MACs, not a WMED
+number -- the library (DESIGN.md §12) is how a sweep's output survives
+the process that discovered it.  One ``ComponentEntry`` is everything
+needed to (a) reproduce the circuit function exactly (the netlist genome
+is the ground truth; the LUT is a cached lowering of it), (b) rank it
+against other components without re-evaluating (full error profile under
+every registry metric + cell-model electrical parameters), and (c) audit
+where it came from (objective, constraints, seed, generations, quant
+context).  The workflow follows the EvoApproxLib library pattern of
+arXiv 2004.10483, with the combined-constraint metadata of 2206.13077
+carried in the provenance block.
+
+On disk a library is one versioned, pickle-free npz container
+(``core.luts.write_container`` envelope, kind ``"component-library"``):
+per-entry ``nodes``/``outs``/``lut`` arrays plus one JSON metadata list.
+``save_entries``/``load_entries`` are the only serialization paths;
+loading validates shapes and re-derivable facts so a corrupt or
+hand-edited file fails with a typed ``LibraryFormatError`` instead of a
+downstream shape error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import cgp as cgp_mod
+from repro.core import luts as luts_mod
+from repro.core.cgp import Genome
+from repro.core.luts import (LibraryFormatError, LibraryVersionError,
+                             MultLib, read_container, write_container)
+
+# Version of the component-entry schema (independent of the MultLib
+# container version in core/luts.py; bump on any field-semantics change).
+SCHEMA_VERSION = 1
+
+CONTAINER_KIND = "component-library"
+
+
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """Where an entry came from: enough to re-run the search that made it.
+
+    ``objective_metric``/``level``/``achieved`` are in the objective's
+    metric scale; ``constraints`` mirrors ``objective.Constraints``
+    (None = constraint off); ``domain`` names the eval domain the search
+    scored on (``"exhaustive"`` or ``"sampled:<n>"``).  ``quant`` may
+    carry the (bits, frac_bits, signed) triples of the activation/weight
+    quantizers the component was designed against, so an inference replay
+    can reconstruct *equal quantization* without re-running calibration.
+    """
+
+    objective_metric: str = "wmed"
+    level: float = float("nan")
+    achieved: float = float("nan")
+    bias_frac: float | None = None
+    wce_cap: float | None = None
+    seed: int = -1
+    generations: int = 0
+    domain: str = "exhaustive"
+    quant: Dict[str, List[int]] | None = None  # {"x_qp"/"w_qp": [b, f, s]}
+    tag: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Provenance":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentEntry:
+    """One evolved (or conventional) approximate multiplier, fully described.
+
+    ``nodes``/``outs`` are the CGP netlist genome -- the circuit's ground
+    truth; ``lut`` is its cached exhaustive lowering (``compile_entry``
+    re-derives and cross-checks it).  ``profile`` maps every registry
+    error metric to the entry's score under its design-time distribution;
+    electrical parameters come from the cell model at characterization
+    time.
+    """
+
+    name: str
+    w: int
+    signed: bool
+    nodes: np.ndarray            # (c, 3) int32 CGP genome
+    outs: np.ndarray             # (n_o,) int32 output sources
+    lut: np.ndarray              # (2^w, 2^w) int32 cached lowering
+    profile: Dict[str, float]    # registry metric name -> score
+    area_um2: float
+    delay_ps: float
+    power_nw: float
+    pdp_fj: float
+    provenance: Provenance = Provenance()
+
+    def genome(self) -> Genome:
+        import jax.numpy as jnp
+        return Genome(jnp.asarray(self.nodes), jnp.asarray(self.outs))
+
+    @property
+    def lut_flat(self) -> np.ndarray:
+        return np.ascontiguousarray(self.lut.reshape(-1))
+
+    def as_multlib(self) -> MultLib:
+        """Project onto the lightweight core/luts view (MultLib is the
+        schema's ancestor -- same electrical fields, wmed/med slice of the
+        profile, no genome/provenance)."""
+        return MultLib(name=self.name, lut=self.lut, w=self.w,
+                       signed=self.signed, area_um2=self.area_um2,
+                       delay_ps=self.delay_ps, power_nw=self.power_nw,
+                       pdp_fj=self.pdp_fj,
+                       wmed=self.profile.get("wmed", float("nan")),
+                       med=self.profile.get("med", float("nan")))
+
+
+def validate_entry(e: ComponentEntry) -> None:
+    """Schema invariants every load/save path enforces."""
+    n = 1 << e.w
+    if e.nodes.ndim != 2 or e.nodes.shape[1] != 3:
+        raise LibraryFormatError(f"entry {e.name!r}: genome nodes shape "
+                                 f"{e.nodes.shape} (expected (c, 3))")
+    if e.outs.ndim != 1 or e.outs.shape[0] == 0:
+        raise LibraryFormatError(f"entry {e.name!r}: genome outs shape "
+                                 f"{e.outs.shape} (expected (n_o,))")
+    if e.lut.shape != (n, n):
+        raise LibraryFormatError(f"entry {e.name!r}: LUT shape {e.lut.shape}"
+                                 f" does not match w={e.w} (expected "
+                                 f"{(n, n)})")
+    for k, v in e.profile.items():
+        if not isinstance(v, float) or (not math.isfinite(v) and
+                                        not math.isnan(v)):
+            raise LibraryFormatError(f"entry {e.name!r}: profile[{k!r}] = "
+                                     f"{v!r} is not a finite float")
+
+
+def save_entries(path: str, entries: Sequence[ComponentEntry]) -> None:
+    """Write a component library (versioned, pickle-free container)."""
+    payload, meta = {}, []
+    for i, e in enumerate(entries):
+        validate_entry(e)
+        payload[f"nodes_{i}"] = np.asarray(e.nodes, np.int32)
+        payload[f"outs_{i}"] = np.asarray(e.outs, np.int32)
+        payload[f"lut_{i}"] = np.asarray(e.lut, np.int32)
+        meta.append({
+            "name": e.name, "w": e.w, "signed": bool(e.signed),
+            "profile": {k: float(v) for k, v in sorted(e.profile.items())},
+            "area_um2": float(e.area_um2), "delay_ps": float(e.delay_ps),
+            "power_nw": float(e.power_nw), "pdp_fj": float(e.pdp_fj),
+            "provenance": e.provenance.to_json(),
+        })
+    write_container(path, payload, {"schema": SCHEMA_VERSION,
+                                    "entries": meta},
+                    kind=CONTAINER_KIND, version=SCHEMA_VERSION)
+
+
+def load_entries(path: str) -> List[ComponentEntry]:
+    """Load a component library; typed errors on corrupt/foreign files."""
+    payload, meta = read_container(path, kind=CONTAINER_KIND,
+                                   version=SCHEMA_VERSION)
+    if not isinstance(meta, dict) or "entries" not in meta:
+        raise LibraryFormatError(f"{path}: container meta has no entry list")
+    out: List[ComponentEntry] = []
+    for i, row in enumerate(meta["entries"]):
+        missing = [k for k in ("nodes", "outs", "lut")
+                   if f"{k}_{i}" not in payload]
+        if missing:
+            raise LibraryFormatError(
+                f"{path}: entry {i} ({row.get('name')}) is missing arrays: "
+                f"{', '.join(missing)}")
+        e = ComponentEntry(
+            name=str(row["name"]), w=int(row["w"]),
+            signed=bool(row["signed"]),
+            nodes=payload[f"nodes_{i}"].astype(np.int32),
+            outs=payload[f"outs_{i}"].astype(np.int32),
+            lut=payload[f"lut_{i}"].astype(np.int32),
+            profile={k: float(v) for k, v in row["profile"].items()},
+            area_um2=float(row["area_um2"]), delay_ps=float(row["delay_ps"]),
+            power_nw=float(row["power_nw"]), pdp_fj=float(row["pdp_fj"]),
+            provenance=Provenance.from_json(row.get("provenance", {})))
+        validate_entry(e)
+        out.append(e)
+    return out
+
+
+def entry_from_multlib(m: MultLib, genome: Genome,
+                       provenance: Provenance = Provenance(),
+                       profile: Dict[str, float] | None = None
+                       ) -> ComponentEntry:
+    """Promote a characterized MultLib + its genome to a schema entry."""
+    prof = dict(profile) if profile is not None else {}
+    prof.setdefault("wmed", float(m.wmed))
+    prof.setdefault("med", float(m.med))
+    return ComponentEntry(
+        name=m.name, w=m.w, signed=m.signed,
+        nodes=np.asarray(genome.nodes, np.int32),
+        outs=np.asarray(genome.outs, np.int32),
+        lut=np.asarray(m.lut, np.int32), profile=prof,
+        area_um2=m.area_um2, delay_ps=m.delay_ps, power_nw=m.power_nw,
+        pdp_fj=m.pdp_fj, provenance=provenance)

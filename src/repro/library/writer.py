@@ -1,0 +1,170 @@
+"""LibraryWriter: the hook that persists what a sweep discovers.
+
+``pareto_sweep_batched(..., library_writer=w)`` hands every per-level
+best result to the writer as soon as the batch finishes; the writer
+characterizes each genome once (exhaustive LUT lowering + full registry
+error profile under the design distribution + cell-model electricals),
+stamps the search provenance, and flushes one versioned container to
+disk.  Evolved circuits used to die with the process -- now the sweep's
+output *is* the library, and inference replays read it back without
+re-evolving (``apps.nn_casestudy``, ``benchmarks/table1_nn``).
+
+Usable standalone too::
+
+    w = LibraryWriter("lib.npz")
+    w.add_result(res, cfg=cfg, objective=obj, pmf_x=pmf)
+    w.flush()
+
+or as a context manager (flush on exit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core import cgp as cgp_mod
+from repro.core import distributions as dist
+from repro.core import luts as luts_mod
+from repro.core import objective as obj_mod
+from repro.core.cgp import Genome
+from repro.library import schema as schema_mod
+from repro.library.compile import profile_lut
+from repro.library.schema import ComponentEntry, Provenance
+
+
+def characterize_entry(genome: Genome, w: int, signed: bool, *,
+                       name: str,
+                       pmf_x: np.ndarray | None = None,
+                       vec_weights: np.ndarray | None = None,
+                       provenance: Provenance = Provenance()
+                       ) -> ComponentEntry:
+    """Full characterization of one genome into a schema entry.
+
+    The LUT is the exhaustive lowering of the genome; the profile scores
+    it under every registry metric with the design-time weights (uniform
+    when none are given); electricals come from the cell model
+    (area / critical path / switching power under the same weights).
+    """
+    import jax.numpy as jnp
+
+    lut = luts_mod.genome_to_lut(genome, w, signed)
+    profile = profile_lut(lut, w, signed, pmf_x=pmf_x,
+                          vec_weights=vec_weights)
+    if vec_weights is None:
+        pmf = dist.uniform_pmf(w) if pmf_x is None else pmf_x
+        vec_weights = dist.vector_weights(pmf, w)
+    from repro.core import netlist as nl_mod
+    in_planes = jnp.asarray(nl_mod.pack_exhaustive_inputs(w))
+    vw = jnp.asarray(np.asarray(vec_weights, np.float32))
+    n_i = 2 * w
+    area = float(cgp_mod.area(genome, n_i=n_i))
+    delay = float(cgp_mod.critical_path_ps(genome, n_i=n_i))
+    power = float(cgp_mod.power_nw(genome, in_planes, vw, n_i=n_i))
+    return ComponentEntry(
+        name=name, w=w, signed=signed,
+        nodes=np.asarray(genome.nodes, np.int32),
+        outs=np.asarray(genome.outs, np.int32),
+        lut=np.asarray(lut, np.int32), profile=profile,
+        area_um2=area, delay_ps=delay, power_nw=power,
+        pdp_fj=power * delay * 1e-6, provenance=provenance)
+
+
+class LibraryWriter:
+    """Accumulate characterized entries and flush one versioned container.
+
+    ``append=True`` seeds the writer with an existing library at ``path``
+    (so successive sweeps extend one artifact); otherwise flush overwrites.
+    """
+
+    def __init__(self, path: str, *, append: bool = False, tag: str = ""):
+        self.path = str(path)
+        self.tag = tag
+        self.entries: List[ComponentEntry] = []
+        if append:
+            import os
+            if os.path.exists(self.path):
+                self.entries = list(schema_mod.load_entries(self.path))
+
+    def __enter__(self) -> "LibraryWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.flush()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def add(self, entry: ComponentEntry) -> ComponentEntry:
+        schema_mod.validate_entry(entry)
+        self.entries.append(entry)
+        return entry
+
+    def add_result(self, res, *, cfg, objective=None,
+                   pmf_x: np.ndarray | None = None,
+                   vec_weights: np.ndarray | None = None,
+                   name: str | None = None,
+                   quant: dict | None = None) -> ComponentEntry:
+        """Characterize one EvolveResult under its search context.
+
+        ``cfg`` is the EvolveConfig the lane ran with (width/sign/seed/
+        generations); ``objective`` the resolved Objective (or registry
+        metric name) whose metric scale ``res.level``/``res.error`` live
+        on; ``pmf_x``/``vec_weights`` the design distribution used both
+        for the profile and the power characterization.
+        """
+        obj = objective
+        if obj is None or isinstance(obj, str):
+            obj = obj_mod.Objective(metric=obj or res.metric)
+        dom = obj.resolve_domain(cfg.w)
+        dom_name = ("exhaustive" if isinstance(dom, obj_mod.ExhaustiveDomain)
+                    else f"sampled:{dom.n_samples}")
+        lane_seed = int(getattr(res, "seed", -1))
+        if lane_seed < 0:
+            lane_seed = int(cfg.seed)
+        prov = Provenance(
+            objective_metric=obj_mod.get_metric(obj.metric).name,
+            level=float(res.level), achieved=float(res.error),
+            bias_frac=obj.constraints.bias_frac,
+            wce_cap=obj.constraints.wce_cap,
+            seed=lane_seed, generations=int(res.generations),
+            domain=dom_name, quant=quant, tag=self.tag)
+        if name is None:
+            name = (f"{prov.objective_metric}_{res.level:g}"
+                    f"_s{lane_seed}")
+        genome = Genome(np.asarray(res.genome.nodes),
+                        np.asarray(res.genome.outs))
+        return self.add(characterize_entry(
+            genome, cfg.w, cfg.signed, name=name, pmf_x=pmf_x,
+            vec_weights=vec_weights, provenance=prov))
+
+    def add_sweep(self, results: Sequence, *, cfg, objective=None,
+                  pmf_x: np.ndarray | None = None,
+                  vec_weights: np.ndarray | None = None,
+                  quant: dict | None = None) -> List[ComponentEntry]:
+        """Characterize every per-level result of a Pareto sweep.
+
+        ``pareto_filter`` sweeps can report one genome at several levels;
+        duplicates (identical genomes) are collapsed to the first (tightest
+        feasible) level so the library holds distinct circuits.
+        """
+        out, seen = [], set()
+        for res in results:
+            key = (np.asarray(res.genome.nodes).tobytes(),
+                   np.asarray(res.genome.outs).tobytes())
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(self.add_result(res, cfg=cfg, objective=objective,
+                                       pmf_x=pmf_x,
+                                       vec_weights=vec_weights,
+                                       quant=quant))
+        return out
+
+    def flush(self) -> str:
+        """Write the accumulated entries; returns the library path."""
+        schema_mod.save_entries(self.path, self.entries)
+        return self.path

@@ -36,6 +36,20 @@ def lenet5_forward(params, x, mac: MacCtx = EXACT):
     return dense(h, params["fc2"], mac)
 
 
+def lenet5_forward_entry(params, x, entry, *, kernel: bool = True,
+                         x_qp=None, w_qp=None):
+    """Full inference through a library entry's evolved arithmetic.
+
+    Compiles the entry (genome-verified) to its LUT and runs all ~278k
+    MACs/inference through it -- the Pallas kernel when ``kernel=True``,
+    the pure-jnp gather otherwise.  Quant params default to the entry's
+    provenance.
+    """
+    from repro.library import mac_ctx
+    return lenet5_forward(params, x, mac_ctx(entry, x_qp, w_qp,
+                                             kernel=kernel))
+
+
 def accuracy(params, x, y, mac: MacCtx = EXACT, batch: int = 256):
     hits = 0
     for i in range(0, x.shape[0], batch):

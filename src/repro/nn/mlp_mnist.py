@@ -29,6 +29,19 @@ def mlp300_forward(params, x, mac: MacCtx = EXACT):
     return dense(h, params["w2"], mac) + params["b2"]
 
 
+def mlp300_forward_entry(params, x, entry, *, kernel: bool = True,
+                         x_qp=None, w_qp=None):
+    """Full inference through a library entry's evolved arithmetic.
+
+    Compiles the entry (genome-verified) to its LUT and runs every MAC
+    through it -- the Pallas kernel when ``kernel=True``, the pure-jnp
+    gather otherwise.  Quant params default to the entry's provenance.
+    """
+    from repro.library import mac_ctx
+    return mlp300_forward(params, x, mac_ctx(entry, x_qp, w_qp,
+                                             kernel=kernel))
+
+
 def accuracy(params, x, y, mac: MacCtx = EXACT, batch: int = 512):
     hits = 0
     for i in range(0, x.shape[0], batch):

@@ -1,0 +1,35 @@
+"""Regenerate the committed golden multiplier-library fixture.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tests/fixtures/make_golden.py
+
+The three entries are fully deterministic closed-form designs (no
+evolution, no RNG), so the fixture is reproducible bit-for-bit; tests
+assert that loading the *committed* file yields LUTs identical to the
+freshly constructed designs, pinning on-disk format stability across
+format-version bumps (a bump must either keep this file loadable or ship
+a new fixture + migration note).
+"""
+
+import os
+
+from repro.core import luts
+
+
+def build_entries():
+    return [
+        luts.exact_multiplier(8, signed=True),
+        luts.truncated_multiplier(8, 4),
+        luts.broken_array_multiplier(8, hbl=5, vbl=4),
+    ]
+
+
+def main():
+    path = os.path.join(os.path.dirname(__file__), "multlib_golden_v1.npz")
+    luts.save_library(path, build_entries())
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

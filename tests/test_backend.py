@@ -1,0 +1,44 @@
+"""Pallas execution-mode policy (kernels.backend)."""
+
+import jax
+import pytest
+
+from repro.kernels import backend
+
+
+def test_default_tracks_jax_backend(monkeypatch):
+    monkeypatch.delenv(backend.ENV_INTERPRET, raising=False)
+    assert backend.default_interpret() == (jax.default_backend() != "tpu")
+
+
+@pytest.mark.parametrize("val,expect", [
+    ("1", True), ("true", True), ("YES", True), (" on ", True),
+    ("0", False), ("false", False), ("No", False), ("off", False),
+])
+def test_env_override(monkeypatch, val, expect):
+    monkeypatch.setenv(backend.ENV_INTERPRET, val)
+    assert backend.default_interpret() is expect
+
+
+def test_env_garbage_rejected(monkeypatch):
+    monkeypatch.setenv(backend.ENV_INTERPRET, "maybe")
+    with pytest.raises(ValueError):
+        backend.default_interpret()
+
+
+def test_override_reaches_kernel_between_calls(monkeypatch):
+    """Flipping the env var takes effect per call (resolved outside jit)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.approx_matmul import exact_mul, matmul_lut_gather
+    from repro.kernels.lut_matmul import ops
+
+    mul = exact_mul(4, signed=False)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 16, (8, 8)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 16, (8, 8)), jnp.int32)
+    want = matmul_lut_gather(a, b, mul)
+    monkeypatch.setenv(backend.ENV_INTERPRET, "1")
+    got = ops.lut_matmul(a, b, mul.lut_flat, w=4)
+    assert jnp.array_equal(got, want)

@@ -1,0 +1,290 @@
+"""Oracle + property suite for the evolved-component library.
+
+The chain under test (DESIGN.md §12):
+
+    pareto_sweep_batched --LibraryWriter--> container on disk
+        --load_entries--> ComponentEntry --compile_entry--> LUT
+        --lut_matmul / MacCtx--> full NN inference
+
+Every hop is pinned against an independent oracle: a pure-python scalar
+netlist trace (no numpy bit-tricks, no jax) checks the LUT; scalar MAC
+sums check the matmul; and the end-to-end acceptance test asserts the
+library replay produces logits bit-identical to the in-process evolved
+path for both paper models.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import library as lib
+from repro.core import cgp as cgp_mod
+from repro.core import distributions as dist
+from repro.core import evolve as ev
+from repro.core import luts as luts_mod
+from repro.core import netlist as nl_mod
+from repro.core import objective as obj_mod
+from repro.core.approx_matmul import ApproxMul, matmul_lut_gather
+from repro.library.schema import ComponentEntry, Provenance
+
+
+# ------------------------------------------------------- scalar oracle
+
+def scalar_trace(nodes: np.ndarray, outs: np.ndarray, w: int,
+                 x_pat: int, y_pat: int, signed: bool) -> int:
+    """Pure-python netlist evaluation of one input pair.
+
+    Inputs: bit i of x at index i, bit i of y at index w + i; each gate
+    k computes bit = (f >> ((a_bit << 1) | b_bit)) & 1; outputs are
+    LSB-first; signed results are 2w-bit two's complement.
+    """
+    buf = [(x_pat >> i) & 1 for i in range(w)]
+    buf += [(y_pat >> i) & 1 for i in range(w)]
+    for a, b, f in nodes:
+        buf.append((int(f) >> ((buf[int(a)] << 1) | buf[int(b)])) & 1)
+    val = 0
+    for bit, idx in enumerate(outs):
+        val |= buf[int(idx)] << bit
+    if signed and val >= 1 << (2 * w - 1):
+        val -= 1 << (2 * w)
+    return val
+
+
+def _sample_pairs(w: int, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pairs = {(0, 0), (0, (1 << w) - 1), ((1 << w) - 1, 0),
+             ((1 << w) - 1, (1 << w) - 1)}
+    while len(pairs) < n:
+        pairs.add((int(rng.integers(0, 1 << w)),
+                   int(rng.integers(0, 1 << w))))
+    return sorted(pairs)
+
+
+@pytest.fixture(scope="module")
+def evolved_lib(tmp_path_factory):
+    """One tiny sweep shared by the whole module: writer-populated
+    container + the raw lane results for the in-process comparison."""
+    path = str(tmp_path_factory.mktemp("lib") / "evolved.npz")
+    cfg = ev.EvolveConfig(w=8, signed=True, generations=60, seed=7)
+    obj = obj_mod.Objective(metric="wmed")
+    pmf = dist.uniform_pmf(8)
+    writer = lib.LibraryWriter(path, tag="test")
+    results = ev.pareto_sweep_batched(cfg, pmf, levels=(0.005, 0.05),
+                                      repeats=1, objective=obj,
+                                      library_writer=writer)
+    return path, results, pmf
+
+
+def test_entry_lut_matches_scalar_trace(evolved_lib):
+    """Oracle: the persisted LUT equals the scalar netlist trace."""
+    path, _, _ = evolved_lib
+    for entry in lib.load_entries(path):
+        nodes = np.asarray(entry.nodes)
+        outs = np.asarray(entry.outs)
+        lut = np.asarray(entry.lut)
+        for x_pat, y_pat in _sample_pairs(entry.w, 48):
+            want = scalar_trace(nodes, outs, entry.w, x_pat, y_pat,
+                                entry.signed)
+            assert lut[x_pat, y_pat] == want, (entry.name, x_pat, y_pat)
+
+
+def test_entry_to_kernel_matches_scalar_macs(evolved_lib):
+    """Oracle: entry -> LUT -> lut_matmul == scalar-trace MAC sums."""
+    from repro.kernels.lut_matmul import ops as kops
+
+    path, _, _ = evolved_lib
+    entry = lib.load_entries(path)[0]
+    mul = lib.compile_entry(entry)
+    rng = np.random.default_rng(1)
+    M, K, N = 5, 11, 3   # deliberately ragged (K-pad correction in play)
+    a = rng.integers(0, 256, (M, K))
+    b = rng.integers(0, 256, (K, N))
+    got = np.asarray(kops.lut_matmul(jnp.asarray(a, jnp.int32),
+                                     jnp.asarray(b, jnp.int32),
+                                     mul.lut_flat, w=8))
+    nodes, outs = np.asarray(entry.nodes), np.asarray(entry.outs)
+    for m in range(M):
+        for n in range(N):
+            want = sum(scalar_trace(nodes, outs, 8, int(b[k, n]),
+                                    int(a[m, k]), True)
+                       for k in range(K))
+            assert got[m, n] == want, (m, n)
+
+
+def test_compile_entry_rejects_corrupt_lut(evolved_lib):
+    path, _, _ = evolved_lib
+    entry = lib.load_entries(path)[0]
+    bad_lut = np.asarray(entry.lut).copy()
+    bad_lut[3, 7] += 1
+    bad = dataclasses.replace(entry, lut=bad_lut)
+    with pytest.raises(lib.LibraryCompileError):
+        lib.compile_entry(bad)
+    # verify=False trusts the cache -- it must pass (shape is fine)
+    lib.compile_entry(bad, verify=False)
+
+
+def test_require_zero_and_zero_guard(evolved_lib):
+    path, _, _ = evolved_lib
+    entries = [e for e in lib.load_entries(path)
+               if int(np.asarray(e.lut)[0, 0]) != 0]
+    if not entries:
+        pytest.skip("this sweep evolved no M(0,0)!=0 entry")
+    entry = entries[0]
+    with pytest.raises(lib.LibraryCompileError):
+        lib.compile_entry(entry, require_zero=True)
+    guarded = lib.zero_guard_entry(entry)
+    mul = lib.compile_entry(guarded, require_zero=True)
+    glut = np.asarray(mul.lut_flat).reshape(256, 256)
+    assert (glut[0, :] == 0).all() and (glut[:, 0] == 0).all()
+    assert "zero_guarded" in guarded.provenance.tag
+
+
+def test_padding_safety_nonzero_m00(evolved_lib):
+    """M(0,0) != 0 LUTs stay bit-exact through every matmul path on
+    ragged shapes (the K-pad compensation contract)."""
+    from repro.core.approx_matmul import matmul_lut_gather_blocked
+    from repro.kernels.lut_matmul import ops as kops
+
+    path, _, _ = evolved_lib
+    entry = lib.load_entries(path)[0]
+    lut = np.asarray(entry.lut).copy()
+    lut[0, 0] = 123          # force a violation regardless of the sweep
+    mul = ApproxMul.from_lut(lut)
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.integers(0, 256, (9, 33)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, (33, 5)), jnp.int32)
+    want = matmul_lut_gather(a, b, mul)
+    got_k = kops.lut_matmul(a, b, mul.lut_flat, w=8)
+    got_b = matmul_lut_gather_blocked(a, b, mul, bm=4, bk=8)
+    assert jnp.array_equal(want, got_k)
+    assert jnp.array_equal(want, got_b)
+
+
+# ------------------------------------------------- schema + invariants
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(1e-5, 0.3))
+def test_schema_roundtrip_property(seed, level):
+    """Property: save_entries/load_entries is the identity on every
+    field -- arrays bit-exact, floats exact, provenance JSON-stable."""
+    import tempfile
+
+    m = luts_mod.truncated_multiplier(8, 2 + seed % 5)
+    g = cgp_mod.genome_from_netlist(nl_mod.array_multiplier(8))
+    prov = Provenance(objective_metric="med", level=level,
+                      achieved=level / 2, bias_frac=0.25, wce_cap=None,
+                      seed=seed, generations=seed % 997, domain="exhaustive",
+                      quant={"x_qp": [8, 5, True]}, tag=f"t{seed % 17}")
+    entry = lib.entry_from_multlib(
+        m, g, prov, lib.profile_lut(m.lut, 8, False))
+    with tempfile.TemporaryDirectory() as td:
+        p = f"{td}/lib.npz"
+        lib.save_entries(p, [entry])
+        got = lib.load_entries(p)[0]
+    assert got.name == entry.name
+    assert (np.asarray(got.lut) == np.asarray(entry.lut)).all()
+    assert (np.asarray(got.nodes) == np.asarray(entry.nodes)).all()
+    assert (np.asarray(got.outs) == np.asarray(entry.outs)).all()
+    assert got.profile == entry.profile
+    assert got.provenance == entry.provenance
+    assert got.area_um2 == entry.area_um2
+    assert got.pdp_fj == entry.pdp_fj
+
+
+def test_error_profile_invariants(evolved_lib):
+    """WCE >= MED, every score finite and >= 0, ER <= 1; and the sweep's
+    achieved error is consistent with the recorded target level."""
+    path, results, _ = evolved_lib
+    entries = lib.load_entries(path)
+    assert entries, "sweep wrote no entries"
+    for e in entries:
+        prof = e.profile
+        assert set(prof) >= {"wmed", "med", "wce", "er", "mre"}
+        for name, v in prof.items():
+            assert math.isfinite(v) and v >= 0.0, (e.name, name, v)
+        assert prof["wce"] >= prof["med"], e.name
+        assert prof["er"] <= 1.0, e.name
+        assert e.area_um2 > 0 and e.power_nw > 0 and e.delay_ps > 0
+        assert math.isfinite(e.provenance.achieved)
+    # feasible lanes must persist wmed scores within their target level
+    by_name = {e.name: e for e in entries}
+    for res in results:
+        e = by_name.get(f"wmed_{res.level:g}_s{res.seed}")
+        if e is not None and res.error <= res.level:
+            assert e.profile["wmed"] <= res.level * (1 + 1e-6), e.name
+
+
+def test_library_version_guard(evolved_lib, tmp_path):
+    path, _, _ = evolved_lib
+    with pytest.raises(lib.LibraryVersionError):
+        luts_mod.read_container(path, kind="component-library", version=999)
+    p = str(tmp_path / "foreign.npz")
+    np.savez(p, junk=np.zeros(3))
+    with pytest.raises(lib.LibraryVersionError):
+        lib.load_entries(p)
+
+
+# ------------------------------------------------ end-to-end acceptance
+
+def _inprocess_mac(res, pmf):
+    """The pre-library path: characterize the lane genome in process and
+    run the jnp gather MAC (the reference the replay must match)."""
+    from repro.nn.layers import MacCtx
+    mult = luts_mod.characterize(
+        "inproc", cgp_mod.Genome(jnp.asarray(res.genome.nodes),
+                                 jnp.asarray(res.genome.outs)),
+        8, True, pmf)
+    return MacCtx(mode="lut", mul=ApproxMul.from_lut(mult.lut))
+
+
+def test_mlp_replay_bit_exact(evolved_lib):
+    """Library replay (Pallas kernel path) == in-process evolved path,
+    bit-for-bit on MLP-300 logits at equal quantization."""
+    from repro.nn import mlp_mnist
+
+    path, results, pmf = evolved_lib
+    entry = lib.load_entries(path)[0]
+    res = next(r for r in results
+               if f"wmed_{r.level:g}_s{r.seed}" == entry.name)
+    params = mlp_mnist.init_mlp300(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (8, 784))
+    want = mlp_mnist.mlp300_forward(params, x, _inprocess_mac(res, pmf))
+    got = mlp_mnist.mlp300_forward_entry(params, x, entry, kernel=True)
+    assert jnp.array_equal(want, got)
+    got_gather = mlp_mnist.mlp300_forward_entry(params, x, entry,
+                                                kernel=False)
+    assert jnp.array_equal(want, got_gather)
+
+
+def test_lenet_replay_bit_exact(evolved_lib):
+    """Same acceptance for LeNet-5: conv + pool + dense all through the
+    library entry's arithmetic."""
+    from repro.nn import lenet5
+
+    path, results, pmf = evolved_lib
+    entry = lib.load_entries(path)[-1]
+    res = next(r for r in results
+               if f"wmed_{r.level:g}_s{r.seed}" == entry.name)
+    params = lenet5.init_lenet5(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+    want = lenet5.lenet5_forward(params, x, _inprocess_mac(res, pmf))
+    got = lenet5.lenet5_forward_entry(params, x, entry, kernel=True)
+    assert jnp.array_equal(want, got)
+
+
+def test_writer_dedups_and_appends(evolved_lib, tmp_path):
+    path, results, pmf = evolved_lib
+    p = str(tmp_path / "dedup.npz")
+    cfg = ev.EvolveConfig(w=8, signed=True, generations=60, seed=7)
+    with lib.LibraryWriter(p) as w:
+        w.add_sweep(list(results) + list(results), cfg=cfg,
+                    objective="wmed", pmf_x=pmf)
+        n_first = len(w)
+    assert n_first == len(lib.load_entries(p)) <= len(results)
+    with lib.LibraryWriter(p, append=True) as w:
+        assert len(w) == n_first

@@ -1,7 +1,11 @@
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import cgp, distributions as dist, luts, netlist as nl, wmed
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
 
 
 def test_genome_to_lut_exact():
@@ -53,3 +57,80 @@ def test_characterize_and_roundtrip(tmp_path):
     assert lib[0].name == "exact8"
     assert (lib[0].lut == m.lut).all()
     assert np.isclose(lib[0].pdp_fj, m.pdp_fj)
+
+
+# ------------------------------------------------------ container hygiene
+
+def test_load_rejects_corrupt_file(tmp_path):
+    p = str(tmp_path / "garbage.npz")
+    with open(p, "wb") as f:
+        f.write(b"\x00not a zip archive at all\xff" * 40)
+    with pytest.raises(luts.LibraryFormatError):
+        luts.load_library(p)
+
+
+def test_load_rejects_truncated_container(tmp_path):
+    p = str(tmp_path / "trunc.npz")
+    luts.save_library(p, [luts.truncated_multiplier(8, 4)])
+    data = open(p, "rb").read()
+    with open(p, "wb") as f:
+        f.write(data[: len(data) // 3])
+    with pytest.raises(luts.LibraryFormatError):
+        luts.load_library(p)
+
+
+def test_load_rejects_unversioned_npz(tmp_path):
+    p = str(tmp_path / "foreign.npz")
+    np.savez(p, lut_0=np.zeros((4, 4), np.int32))
+    with pytest.raises(luts.LibraryVersionError):
+        luts.load_library(p)
+
+
+def test_load_rejects_version_mismatch(tmp_path):
+    p = str(tmp_path / "future.npz")
+    luts.write_container(p, {"lut_0": np.zeros((256, 256), np.int32)},
+                         [], kind="multlib", version=999)
+    with pytest.raises(luts.LibraryVersionError):
+        luts.load_library(p)
+
+
+def test_load_rejects_wrong_kind(tmp_path):
+    p = str(tmp_path / "kind.npz")
+    luts.write_container(p, {}, [], kind="something-else",
+                         version=luts.LUTS_FORMAT_VERSION)
+    with pytest.raises(luts.LibraryFormatError):
+        luts.load_library(p)
+
+
+def test_load_rejects_bad_lut_shape(tmp_path):
+    p = str(tmp_path / "shape.npz")
+    m = luts.truncated_multiplier(8, 4)
+    meta = [{"name": m.name, "w": 8, "signed": False, "area_um2": 1.0,
+             "delay_ps": 1.0, "power_nw": 1.0, "pdp_fj": 1.0,
+             "wmed": 0.0, "med": 0.0}]
+    luts.write_container(p, {"lut_0": np.zeros((16, 16), np.int32)}, meta,
+                         kind="multlib", version=luts.LUTS_FORMAT_VERSION)
+    with pytest.raises(luts.LibraryFormatError):
+        luts.load_library(p)
+
+
+def test_golden_fixture_bit_exact():
+    """The committed fixture must load and match freshly built designs.
+
+    Pins the on-disk format: a format change that cannot read this file
+    must bump LUTS_FORMAT_VERSION and regenerate it (make_golden.py).
+    """
+    import sys
+    sys.path.insert(0, FIXTURES)
+    try:
+        from make_golden import build_entries
+    finally:
+        sys.path.remove(FIXTURES)
+    lib = luts.load_library(os.path.join(FIXTURES, "multlib_golden_v1.npz"))
+    fresh = build_entries()
+    assert [m.name for m in lib] == [m.name for m in fresh]
+    for got, want in zip(lib, fresh):
+        assert got.w == want.w and got.signed == want.signed
+        assert (got.lut == want.lut).all()
+        assert np.isclose(got.area_um2, want.area_um2)
+        assert np.isclose(got.wmed, want.wmed)

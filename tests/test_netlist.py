@@ -2,8 +2,33 @@
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import netlist as nl
+
+
+def _plane_bits(planes: np.ndarray) -> np.ndarray:
+    """(P, W) uint32 bit-planes -> (P, 32*W) individual bits."""
+    shifts = np.arange(32, dtype=np.uint32)
+    return ((planes[:, :, None] >> shifts) & 1).reshape(planes.shape[0], -1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 97))
+def test_pack_input_vectors_roundtrip(seed, n_vec):
+    """Property: unpacking the packed planes recovers both operands, and
+    every padded slot is the (0, 0) vector (the M(0,0) padding contract)."""
+    for w in (4, 8, 10):
+        rng = np.random.default_rng(seed + w)
+        x = rng.integers(0, 1 << w, n_vec)
+        y = rng.integers(0, 1 << w, n_vec)
+        planes = nl.pack_input_vectors(x, y, w)
+        assert planes.shape == (2 * w, -(-n_vec // 32))
+        bits = _plane_bits(planes).astype(np.int64)
+        xr = sum(bits[i] << i for i in range(w))
+        yr = sum(bits[w + i] << i for i in range(w))
+        assert (xr[:n_vec] == x).all() and (yr[:n_vec] == y).all()
+        assert (xr[n_vec:] == 0).all() and (yr[n_vec:] == 0).all()
 
 
 def _eval_vals(m, w):

@@ -27,6 +27,20 @@ def test_quantize_roundtrip_error_bound():
     assert float(err.max()) <= qp.scale / 2 + 1e-7
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.floats(-1.0, 1.0))
+def test_quantize_roundtrip_property(frac_of_range):
+    """Property: |dequantize(quantize(v)) - v| <= scale/2 for in-range v,
+    at every library width (w = 4, 8, 10)."""
+    for bits, fb in ((4, 2), (8, 5), (10, 7)):
+        qp = QuantParams(bits, fb, True)
+        lo, hi = qp.qmin * qp.scale, qp.qmax * qp.scale
+        v = lo + (frac_of_range + 1.0) / 2.0 * (hi - lo)
+        x = jnp.asarray([v], jnp.float32)
+        err = float(jnp.abs(dequantize(quantize(x, qp), qp) - x).max())
+        assert err <= qp.scale / 2 + 1e-6
+
+
 def test_quantize_pattern_twos_complement():
     qp = QuantParams(8, 0, True)
     pats = quantize_pattern(jnp.asarray([-1.0, -128.0, 5.0]), qp)
