@@ -146,15 +146,23 @@ def run(smoke: bool = False, strict: bool = False,
     t_batched = time.time() - t0
 
     # ---- parity: the batched sweep must reproduce the serial front, and
-    # the fused (default) fitness must reach the unfused path's genomes ----
+    # the fused fitness must reach the unfused path's genomes.  Both
+    # pipelines are forced explicitly: ``fused=None`` now resolves per
+    # backend (unfused on CPU hosts), and the benchmark must measure both
+    # paths wherever it runs ----
     _assert_front_parity(serial, batched, "serial vs batched")
+    fused_sweep = ev.pareto_sweep_batched(
+        dataclasses.replace(cfg, fused=True), pmf, levels=levels,
+        repeats=repeats)
     unfused = ev.pareto_sweep_batched(
         dataclasses.replace(cfg, fused=False), pmf, levels=levels,
         repeats=repeats)
-    _assert_front_parity(batched, unfused, "fused vs unfused")
+    _assert_front_parity(fused_sweep, unfused, "fused vs unfused")
 
     # ---- steady-state block throughput (compile excluded) ----
-    ms_fused = _steady_ms_per_lane_gen(cfg, obj, steady_lanes, steady_gens)
+    ms_fused = _steady_ms_per_lane_gen(
+        dataclasses.replace(cfg, fused=True), obj, steady_lanes,
+        steady_gens)
     ms_unfused = _steady_ms_per_lane_gen(
         dataclasses.replace(cfg, fused=False), obj, steady_lanes,
         steady_gens)
@@ -187,6 +195,8 @@ def run(smoke: bool = False, strict: bool = False,
             "mode": "smoke" if smoke else "full",
             "objective": objective,
             "wce_cap": wce_cap,
+            "backend": jax.default_backend(),
+            "fused_auto": ev.default_fused(),
             "devices": jax.local_device_count(),
             "lanes": lanes,
             "generations_per_lane": gens,

@@ -1,0 +1,298 @@
+"""QoS-aware serving benchmark: mixed-class stream through the QosEngine.
+
+The end-to-end acceptance run for ``repro.serve.qos`` (DESIGN.md §13):
+
+  1. train + calibrate the MLP-300 workload (``apps.nn_casestudy
+     .prepare_serving``) -- the int8-exact accuracy is the reference;
+  2. build a component library: a small bias-constrained WMED evolution
+     under the *deployment* weight x activation distribution (the
+     paper's data-driven search -- the bias constraint is what keeps
+     accumulated MAC error from wrecking the classifier, DESIGN.md
+     §7.2) followed by *accuracy admission control* (candidates that
+     miss their tightest class's ``min_rel_accuracy`` floor on the
+     target network never enter the library -- the paper's
+     validate-before-deploy step), plus the exact rung; or load a
+     container with ``--library``.
+     ``--ladder`` substitutes the deterministic output-truncation ladder
+     instead: it exists to demonstrate *why* the evolved library is
+     needed -- truncation's one-sided error at tiny WMED still
+     accumulates across 784-term dot products, so its accuracy floors
+     are NOT asserted (selection/PDP/cache contracts still are);
+  3. serve the full test set once per QoS class through one engine and
+     **assert** the subsystem's contract:
+       - per-class served accuracy meets the class's relative-accuracy
+         budget vs the int8 reference (``QosBudget.min_rel_accuracy``),
+       - selected-entry PDP is monotone non-increasing strict -> loose
+         and strictly lower at the loosest class,
+       - exactly one compile per distinct selected entry (the variant
+         cache's counters prove it);
+  4. replay a burst at tight watermarks to exercise downshift and
+     record demotions/drift (observability, not asserted accuracy).
+
+Emits ``name,us_per_call,derived`` CSV lines like every other suite and
+optionally a machine-readable ``BENCH_qos.json`` (CI artifact).
+
+    PYTHONPATH=src:. python benchmarks/bench_qos_serve.py --smoke
+    PYTHONPATH=src:. python benchmarks/bench_qos_serve.py --json
+    PYTHONPATH=src:. python benchmarks/bench_qos_serve.py --library lib.npz
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.apps.nn_casestudy import prepare_serving
+from repro.library import LibraryIndex, synthetic_ladder
+from repro.serve.qos import QosEngine, QosPolicy, QosRequest
+
+
+def _tightest_floor(policy, entry):
+    """Floor of the *tightest* QoS class whose budget ``entry`` satisfies.
+
+    Budgets are nested strict -> loose, so the tightest feasible class
+    is the one that would actually serve the entry first; its
+    ``min_rel_accuracy`` is the binding acceptance target (floors are
+    non-increasing along the ladder).  Returns ``None`` when no class
+    admits the entry at all.
+    """
+    for name in policy.names:
+        b = policy.budget(name)
+        if entry.profile.get(b.metric, float("inf")) > b.bound:
+            continue
+        if (b.wce_cap is not None
+                and entry.profile.get("wce", float("inf")) > b.wce_cap):
+            continue
+        return b.min_rel_accuracy
+    return None
+
+
+def _evolved_library(setup, *, generations: int, seed: int):
+    """Deployment-distribution WMED sweep, one lane per non-exact QoS
+    bound, plus the exact rung -- then *accuracy admission control*.
+
+    The search is bias-constrained only (``Constraints(bias_frac)``,
+    the ``run_case_study`` recipe): a WCE cap tight enough to matter
+    freezes the (1+lambda) search at the seed, and a loose one does not
+    predict NN accuracy anyway -- measured here, a lane at wmed ~ 1e-2
+    satisfies wce <= 5e-2 yet still costs ~ 67pp served accuracy,
+    because per-product error accumulates over 784-term dot products.
+    Component-level metrics alone cannot certify application quality,
+    which is exactly why the paper validates candidates on the target
+    network before deployment.  Admission does that validation: each
+    candidate's served accuracy is measured directly and the entry is
+    dropped unless it meets the ``min_rel_accuracy`` floor of the
+    tightest QoS class whose budget it satisfies.  A class whose lane
+    winner flunks admission simply falls back to the cheapest *safe*
+    entry (``LibraryIndex.query`` over the nested feasible set), so the
+    serving floors hold by construction and CI does not flake on search
+    stochasticity.
+
+    Returns ``(index, admitted, rejected)`` where the latter two map
+    entry name -> measured relative accuracy (pp vs int8 exact).
+    """
+    from repro.core import evolve as ev
+    from repro.core import objective as obj_mod
+    from repro.library import mac_ctx
+    from repro.library.synth import exact_genome
+    from repro.library.writer import characterize_entry
+    from repro.library.schema import Provenance
+
+    policy = QosPolicy.default()
+    levels = tuple(policy.budget(n).bound for n in policy.names
+                   if policy.budget(n).bound > 0.0)
+    cfg = ev.EvolveConfig(w=8, signed=True, generations=generations,
+                          seed=seed)
+    obj = obj_mod.Objective(
+        metric="wmed",
+        constraints=obj_mod.Constraints(bias_frac=0.25))
+    results = ev.pareto_sweep_batched(
+        cfg, setup.pmf, levels=levels, repeats=1, pareto_filter=True,
+        vec_weights=setup.vec_weights, objective=obj)
+    candidates = [characterize_entry(
+        exact_genome(8, True), 8, True, name="exact_w8",
+        pmf_x=setup.pmf, vec_weights=setup.vec_weights,
+        provenance=Provenance(objective_metric="wmed",
+                              domain="exhaustive", tag="qos-bench:exact"))]
+    for r in results:
+        candidates.append(characterize_entry(
+            r.genome, 8, True, name=f"evolved_{r.level:g}",
+            pmf_x=setup.pmf, vec_weights=setup.vec_weights,
+            provenance=Provenance(objective_metric="wmed",
+                                  domain="exhaustive",
+                                  tag=f"qos-bench:level={r.level:g}")))
+
+    entries, admitted, rejected = [], {}, {}
+    for e in candidates:
+        mac = mac_ctx(e, setup.x_qp, setup.w_qp, kernel=False)
+        acc = float(setup.acc_fn(setup.params, setup.xte, setup.yte,
+                                 mac=mac))
+        rel = 100.0 * (acc - setup.acc_int8)
+        floor = _tightest_floor(policy, e)
+        if floor is not None and rel >= floor:
+            entries.append(e)
+            admitted[e.name] = rel
+        else:
+            rejected[e.name] = rel
+    return LibraryIndex(entries), admitted, rejected
+
+
+def _accuracy_phase(setup, index, policy, *, batch):
+    """Serve the whole test set once per class; per-class accuracy is
+    then directly comparable to the int8 reference on the same examples."""
+    eng = QosEngine(setup.forward, setup.params, policy, index,
+                    batch=batch, x_qp=setup.x_qp, w_qp=setup.w_qp,
+                    high_watermark=10 ** 9)
+    xte, yte = setup.xte, setup.yte
+    reqs = []
+    rid = 0
+    for i in range(len(xte)):           # round-robin: mixed-class stream
+        for cls in policy.names:
+            reqs.append(QosRequest(rid, xte[i], qos=cls,
+                                   label=int(yte[i])))
+            rid += 1
+    t0 = time.time()
+    done = eng.run(reqs)
+    wall = time.time() - t0
+    assert len(done) == len(reqs)
+
+    per_class = {}
+    for cls in policy.names:
+        mine = [r for r in done if r.qos == cls]
+        acc = sum(r.pred == r.label for r in mine) / len(mine)
+        entry = eng._entry_for(cls, 0)
+        per_class[cls] = {
+            "entry": entry.name, "pdp_fj": entry.pdp_fj,
+            "served": len(mine), "acc": acc,
+            "acc_rel": 100.0 * (acc - setup.acc_int8),
+            "min_rel_accuracy": policy.budget(cls).min_rel_accuracy,
+        }
+    return eng, per_class, wall, len(reqs)
+
+
+def _burst_phase(setup, index, policy, *, batch):
+    """Tight watermarks + one burst: downshift must fire and recover."""
+    eng = QosEngine(setup.forward, setup.params, policy, index,
+                    batch=batch, high_watermark=2 * batch,
+                    low_watermark=batch, dwell=1,
+                    x_qp=setup.x_qp, w_qp=setup.w_qp)
+    n = 8 * batch
+    reqs = [QosRequest(i, setup.xte[i % len(setup.xte)],
+                       qos=policy.names[i % len(policy.names)])
+            for i in range(n)]
+    eng.run(reqs)
+    m = eng.metrics()
+    return {k: v for k, v in m.items()
+            if k.startswith(("qos.downshift", "qos.demoted", "qos.drift"))}
+
+
+def run(smoke: bool = True, library: str | None = None,
+        ladder: bool = False, json_path: str | None = None,
+        seed: int = 0, batch: int = 64) -> dict:
+    if smoke:
+        setup = prepare_serving("mlp", n_train=1500, n_test=600,
+                                seed=seed, epochs=3)
+    else:
+        setup = prepare_serving("mlp", seed=seed)
+
+    assert_floors = True
+    admitted, rejected = {}, {}
+    if library is not None:
+        index = LibraryIndex.load(library)
+    elif ladder:
+        # deterministic truncation ladder, characterized under the
+        # deployment distribution -- selection/PDP/cache contracts only
+        # (truncation bias is exactly what the evolved search avoids)
+        index = LibraryIndex(synthetic_ladder(
+            w=8, signed=True, pmf_x=setup.pmf,
+            vec_weights=setup.vec_weights))
+        assert_floors = False
+    else:
+        index, admitted, rejected = _evolved_library(
+            setup, generations=800 if smoke else 3000, seed=seed + 7)
+        for name, rel in rejected.items():
+            print(f"bench_qos_serve: admission dropped {name} "
+                  f"(acc_rel={rel:+.2f}pp)")
+    policy = QosPolicy.default()
+
+    eng, per_class, wall, n_req = _accuracy_phase(setup, index, policy,
+                                                  batch=batch)
+    m = eng.metrics()
+
+    # ---- the subsystem contract, asserted ----
+    names = list(policy.names)
+    pdps = [per_class[c]["pdp_fj"] for c in names]
+    assert all(a >= b for a, b in zip(pdps, pdps[1:])), \
+        f"per-class PDP not monotone non-increasing: {pdps}"
+    assert pdps[0] > pdps[-1], \
+        f"loosest class is not cheaper than exact: {pdps}"
+    distinct = len({per_class[c]["entry"] for c in names})
+    assert m["cache.compile"] == float(distinct), \
+        f'{m["cache.compile"]} compiles for {distinct} distinct entries'
+    for cls in names:
+        pc = per_class[cls]
+        floor = pc["min_rel_accuracy"]
+        if assert_floors and floor is not None:
+            assert pc["acc_rel"] >= floor, \
+                (f"{cls}: served accuracy {pc['acc_rel']:+.2f}pp below "
+                 f"budget {floor:+.2f}pp (entry {pc['entry']})")
+
+    burst = _burst_phase(setup, index, policy, batch=max(8, batch // 8))
+
+    us_per_req = wall / n_req * 1e6
+    emit("qos/stream", us_per_req,
+         f"requests={n_req};classes={len(names)};compiles={distinct}")
+    for cls in names:
+        pc = per_class[cls]
+        emit(f"qos/{cls}", us_per_req,
+             f"entry={pc['entry']};acc_rel={pc['acc_rel']:+.2f}pp;"
+             f"pdp={pc['pdp_fj']:.1f}fJ")
+    emit("qos/burst", 0.0,
+         f"downshifts={burst.get('qos.downshift.events', 0):.0f};"
+         f"recoveries={burst.get('qos.downshift.recoveries', 0):.0f}")
+
+    report = {
+        "smoke": smoke, "seed": seed, "batch": batch,
+        "floors_asserted": assert_floors,
+        "library": library or ("synthetic_ladder(deployment-pmf)"
+                               if ladder else "evolved(deployment-pmf)"),
+        "acc_float": setup.acc_float, "acc_int8": setup.acc_int8,
+        "requests": n_req, "us_per_request": us_per_req,
+        "admitted": admitted, "rejected": rejected,
+        "per_class": per_class,
+        "engine_metrics": m,
+        "burst": burst,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"bench_qos_serve: wrote {json_path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small train/test split + short training (CI)")
+    ap.add_argument("--library", default=None,
+                    help="serve from an existing component container "
+                         "instead of evolving one")
+    ap.add_argument("--ladder", action="store_true",
+                    help="serve the deterministic truncation ladder "
+                         "(accuracy floors not asserted; demonstrates "
+                         "the truncation-bias failure mode)")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", nargs="?", const="BENCH_qos.json",
+                    default=None, metavar="PATH",
+                    help="write a machine-readable report (default "
+                         "BENCH_qos.json)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, library=args.library, ladder=args.ladder,
+        json_path=args.json, seed=args.seed, batch=args.batch)
+
+
+if __name__ == "__main__":
+    main()

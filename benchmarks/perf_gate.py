@@ -1,0 +1,120 @@
+"""Performance regression gate over the evolution benchmark report.
+
+Compares a freshly produced ``BENCH_evolve.json`` (``bench_batched_sweep
+--smoke --json``) against the committed baseline and fails when a gated
+metric regresses by more than the tolerance (default 20%, override with
+``--tol`` or ``REPRO_PERF_GATE_TOL``).
+
+Gated metrics -- chosen for stability, not coverage:
+
+  - ``steady_ms_per_lane_generation.fused`` / ``.unfused`` (lower is
+    better): steady-state block throughput with compilation excluded,
+    the least noisy absolute numbers the benchmark produces;
+  - ``speedup_fused_vs_unfused`` (higher is better): a machine-relative
+    ratio, so it survives runner-hardware drift that shifts both
+    absolute numbers together.
+
+Deliberately NOT gated: end-to-end wall times (compile-dominated in
+smoke mode) and ``speedup_batched_vs_serial`` (mostly measures compile
+amortization at smoke lane counts).
+
+A large *improvement* (>30%) prints a reminder to refresh the baseline
+so the gate keeps teeth; refresh with::
+
+    PYTHONPATH=src:. python benchmarks/bench_batched_sweep.py --smoke --json
+    cp BENCH_evolve.json benchmarks/baselines/BENCH_evolve_baseline.json
+
+Usage::
+
+    PYTHONPATH=src:. python benchmarks/perf_gate.py \
+        --current BENCH_evolve.json \
+        [--baseline benchmarks/baselines/BENCH_evolve_baseline.json] \
+        [--tol 0.2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "BENCH_evolve_baseline.json")
+
+# (label, extractor, higher_is_better)
+GATES = (
+    ("steady_fused_ms",
+     lambda r: r["steady_ms_per_lane_generation"]["fused"], False),
+    ("steady_unfused_ms",
+     lambda r: r["steady_ms_per_lane_generation"]["unfused"], False),
+    ("speedup_fused_vs_unfused",
+     lambda r: r["speedup_fused_vs_unfused"], True),
+)
+
+
+def check(current: dict, baseline: dict, tol: float) -> list:
+    """Return [(label, base, cur, ratio, ok)] for every gated metric.
+
+    ``ratio`` is normalized so that > 1 always means *regression*:
+    cur/base for lower-is-better metrics, base/cur for higher-is-better.
+    Metrics missing from either report are skipped (older baselines stay
+    usable across report-schema growth).
+    """
+    rows = []
+    for label, get, higher in GATES:
+        try:
+            base, cur = float(get(baseline)), float(get(current))
+        except (KeyError, TypeError):
+            continue
+        if base <= 0 or cur <= 0:
+            continue
+        ratio = base / cur if higher else cur / base
+        rows.append((label, base, cur, ratio, ratio <= 1.0 + tol))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_evolve.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("REPRO_PERF_GATE_TOL",
+                                                 "0.20")),
+                    help="allowed fractional regression (default 0.20, "
+                         "env REPRO_PERF_GATE_TOL)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"perf_gate: no baseline at {args.baseline} -- nothing to "
+              f"gate (commit one to enable the gate)")
+        return 0
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows = check(current, baseline, args.tol)
+    if not rows:
+        print("perf_gate: no gated metrics present in both reports")
+        return 1
+
+    failed = [r for r in rows if not r[4]]
+    print(f"perf_gate: tol={args.tol:.0%} baseline={args.baseline}")
+    for label, base, cur, ratio, ok in rows:
+        flag = "ok" if ok else "REGRESSION"
+        print(f"  {label:28s} base={base:10.4f} cur={cur:10.4f} "
+              f"x{ratio:5.2f}  {flag}")
+        if ok and ratio < 0.70:
+            print(f"  {label:28s} improved >30% -- consider refreshing "
+                  f"the committed baseline")
+    if failed:
+        print(f"perf_gate: FAILED ({len(failed)}/{len(rows)} metrics "
+              f"beyond {args.tol:.0%})")
+        return 1
+    print("perf_gate: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

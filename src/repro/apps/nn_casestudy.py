@@ -121,6 +121,84 @@ def joint_vector_weights(pmf_w: np.ndarray, xs, x_qp: QuantParams,
     return dist.vector_weights_joint(pmf_w, pmf_act, w)
 
 
+# ------------------------------------------------------- serving setup
+
+@dataclasses.dataclass
+class ServingSetup:
+    """Everything the deployment side needs from the training side.
+
+    The first half of ``run_case_study`` (train float model, Ristretto
+    calibration, int8 reference accuracy, weight/activation
+    distributions), packaged so serving layers (``serve.qos.QosEngine``,
+    ``benchmarks/bench_qos_serve.py``) and replay tools reuse one
+    artifact instead of re-deriving it ad hoc.
+    """
+
+    model: str
+    params: dict
+    forward: Callable        # forward(params, x, mac)
+    acc_fn: Callable         # accuracy(params, x, y, mac=...)
+    x_qp: QuantParams
+    w_qp: QuantParams
+    xtr: np.ndarray
+    ytr: np.ndarray
+    xte: np.ndarray
+    yte: np.ndarray
+    acc_float: float
+    acc_int8: float          # exact int8 MAC reference (QoS baseline)
+    pmf: np.ndarray          # quantized-weight PMF (paper Fig. 6 top)
+    vec_weights: np.ndarray  # joint weight x activation WMED alpha
+
+
+def prepare_serving(model: str = "mlp", *, n_train: int = 6000,
+                    n_test: int = 1500, seed: int = 0,
+                    epochs: int | None = None,
+                    verbose: bool = True) -> ServingSetup:
+    """Train + calibrate one served workload (MLP-300 / LeNet-5).
+
+    Deterministic in (model, sizes, seed); ``epochs`` overrides the
+    trainer default for smoke-scale runs.  The int8-exact accuracy is
+    the reference every QoS class's relative-accuracy target is measured
+    against.
+    """
+    if model == "mlp":
+        x, y = digits.mnist_like(n_train + n_test, seed=seed)
+        fwd = mlp_mnist.mlp300_forward
+        acc_fn = mlp_mnist.accuracy
+        trainer = train_float_mlp
+    else:
+        x, y = digits.svhn_like(n_train + n_test, seed=seed)
+        fwd = lenet5.lenet5_forward
+        acc_fn = lenet5.accuracy
+        trainer = train_float_lenet
+    xtr, ytr = x[:n_train], y[:n_train]
+    xte, yte = x[n_train:], y[n_train:]
+
+    kw = {} if epochs is None else {"epochs": epochs}
+    params = trainer(xtr, ytr, seed=seed, **kw)
+    acc_float = acc_fn(params, xte, yte)
+
+    # Ristretto-like trimming: calibrate activations on a sample + weights
+    xs = xtr[:512]
+    x_qp = calibrate(np.asarray(xs), bits=8, signed=True)
+    w_all = np.concatenate([np.asarray(l).ravel()
+                            for l in jax.tree.leaves(params) if l.ndim >= 2])
+    w_qp = calibrate(w_all, bits=8, signed=True)
+    exact = luts_mod.exact_multiplier(8, signed=True)
+    acc_int8 = acc_fn(params, xte, yte, mac=make_mac(exact, x_qp, w_qp))
+    if verbose:
+        print(f"[{model}] float acc={acc_float:.4f} int8 acc={acc_int8:.4f}")
+
+    pmf = weight_pmf(params, w_qp)
+    vw = joint_vector_weights(pmf, xs, x_qp)
+    return ServingSetup(model=model, params=params, forward=fwd,
+                        acc_fn=acc_fn, x_qp=x_qp, w_qp=w_qp,
+                        xtr=np.asarray(xtr), ytr=np.asarray(ytr),
+                        xte=np.asarray(xte), yte=np.asarray(yte),
+                        acc_float=float(acc_float),
+                        acc_int8=float(acc_int8), pmf=pmf, vec_weights=vw)
+
+
 # ------------------------------------------------------------ the pipeline
 
 @dataclasses.dataclass
@@ -186,41 +264,18 @@ def run_case_study(model: str = "mlp", *, n_train=6000, n_test=1500,
     and ``generations`` are ignored in replay mode.
     """
     t0 = time.time()
-    if model == "mlp":
-        x, y = digits.mnist_like(n_train + n_test, seed=seed)
-        fwd = mlp_mnist.mlp300_forward
-        acc_fn = mlp_mnist.accuracy
-        trainer = train_float_mlp
-    else:
-        x, y = digits.svhn_like(n_train + n_test, seed=seed)
-        fwd = lenet5.lenet5_forward
-        acc_fn = lenet5.accuracy
-        trainer = train_float_lenet
-    xtr, ytr = x[:n_train], y[:n_train]
-    xte, yte = x[n_train:], y[n_train:]
-
-    params = trainer(xtr, ytr, seed=seed)
-    acc_float = acc_fn(params, xte, yte)
-
-    # Ristretto-like trimming: calibrate activations on a sample + weights
-    xs = xtr[:512]
-    acts = fwd(params, xs)  # output scale not needed; calibrate inputs
-    x_qp = calibrate(np.asarray(xs), bits=8, signed=True)
-    w_all = np.concatenate([np.asarray(l).ravel()
-                            for l in jax.tree.leaves(params) if l.ndim >= 2])
-    w_qp = calibrate(w_all, bits=8, signed=True)
+    setup = prepare_serving(model, n_train=n_train, n_test=n_test,
+                            seed=seed, verbose=verbose)
+    params, fwd, acc_fn = setup.params, setup.forward, setup.acc_fn
+    x_qp, w_qp = setup.x_qp, setup.w_qp
+    xtr, ytr, xte, yte = setup.xtr, setup.ytr, setup.xte, setup.yte
+    acc_float, acc_int8 = setup.acc_float, setup.acc_int8
     exact = luts_mod.exact_multiplier(8, signed=True)
-    mac_exact = make_mac(exact, x_qp, w_qp)
-    acc_int8 = acc_fn(params, xte, yte, mac=mac_exact)
-    if verbose:
-        print(f"[{model}] float acc={acc_float:.4f} int8 acc={acc_int8:.4f} "
-              f"({time.time() - t0:.0f}s)")
 
     # weight distribution -> WMED (paper Fig. 6 top); the data operand uses
     # the measured activation distribution (joint alpha) and the fitness
     # carries the bias constraint -- see DESIGN.md §7 deviations.
-    pmf = weight_pmf(params, w_qp)
-    vw = joint_vector_weights(pmf, xs, x_qp)
+    pmf, vw = setup.pmf, setup.vec_weights
 
     results: List[CaseStudyResult] = []
     if library is not None:

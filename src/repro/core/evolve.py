@@ -28,13 +28,15 @@ Two execution modes share one generation step:
   API compatibility and as the baseline for
   ``benchmarks/bench_batched_sweep.py``.
 
-The fitness inner loop is the **fused streaming pipeline** of DESIGN.md
-§11 by default: genome evaluation folds chunk-wise into the metric's
+The fitness inner loop has two pipelines (DESIGN.md §11): the **fused
+streaming** one folds genome evaluation chunk-wise into the metric's
 scalar sufficient statistics (``cgp.eval_genome_stats`` / the
-``cgp_fitness`` Pallas kernel) and no per-vector value array is ever
-materialized; ``EvolveConfig.fused=False`` -- or a metric registered
-without a stats form -- selects the historical materialize-then-reduce
-trace, kept bit-identical.
+``cgp_fitness`` Pallas kernel) so no per-vector value array is ever
+materialized, while the unfused materialize-then-reduce trace is the
+historical path, kept bit-identical.  ``EvolveConfig.fused=None`` (auto)
+picks per backend -- fused on TPU/GPU, unfused on CPU where the fusion's
+HBM win does not materialize (``default_fused``; ``REPRO_EVAL_FUSED``
+overrides); metrics without a stats form always run unfused.
 
 Per-lane RNG streams are derived exactly as the historical serial driver
 did (seed -> PRNGKey -> per-block split -> per-generation split), so a lane
@@ -74,6 +76,28 @@ PAPER_LEVELS = (0.00005, 0.0001, 0.0005, 0.001, 0.002, 0.005, 0.01,
 # Genome evaluation backends of the fitness inner loop.
 EVAL_BACKENDS = ("jnp", "pallas")
 
+# Env override for the per-backend fused-pipeline auto-selection
+# (``EvolveConfig.fused=None``): 1/true forces fused, 0/false unfused.
+EVAL_FUSED_ENV = "REPRO_EVAL_FUSED"
+
+
+def default_fused() -> bool:
+    """Per-backend resolution of ``fused=None`` (auto).
+
+    The fused streaming pipeline's win is HBM traffic -- it pays off on
+    real accelerators but measures ~0.89x vs the unfused trace on the
+    2-core CPU container (see the committed ``BENCH_evolve.json``
+    baseline), so auto picks **fused on TPU/GPU, unfused on CPU**.  The
+    ``REPRO_EVAL_FUSED`` env var (or an explicit ``fused=True/False``
+    kwarg/config) overrides; resolution happens at trace time, outside
+    the jit cache, like ``kernels.backend.default_interpret``.
+    """
+    from repro.kernels import backend as kb
+    env = kb.env_flag(EVAL_FUSED_ENV)
+    if env is not None:
+        return env
+    return jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+
 
 @dataclasses.dataclass(frozen=True)
 class EvolveConfig:
@@ -94,12 +118,13 @@ class EvolveConfig:
     # CPU, the real kernel on TPU).  Validated eagerly at construction so
     # a typo fails before the 2-3 s block compile.
     eval_backend: str = "jnp"
-    # Fused streaming fitness (DESIGN.md §11): None = auto (fused whenever
-    # the metric declares a sufficient-statistics form -- every registry
-    # metric does), True = require it (error if the metric has no stats
+    # Fused streaming fitness (DESIGN.md §11): None = auto -- fused on
+    # TPU/GPU backends, unfused on CPU (where the committed BENCH_evolve
+    # baseline shows fused at 0.89x), overridable via REPRO_EVAL_FUSED;
+    # metrics without a sufficient-statistics form always fall back
+    # unfused.  True = require fused (error if the metric has no stats
     # form), False = force the historical unfused materialize-then-reduce
-    # path (bit-identical to the pre-fusion engine; also the automatic
-    # fallback for plain fn-style metrics).
+    # path (bit-identical to the pre-fusion engine).
     fused: bool | None = None
     # DEPRECATED: pre-Objective spelling of the signed-bias bound
     # (DESIGN.md §7.2).  Folded into the objective's Constraints when that
@@ -229,7 +254,7 @@ def _fitness_fn(exact, pmax, n_i, signed, objective: Objective,
 
     Two fitness pipelines share this contract (DESIGN.md §11):
 
-    * **fused** (default whenever the metric declares a
+    * **fused** (auto-selected on TPU/GPU backends for metrics with a
       sufficient-statistics form): the evaluator streams the domain in
       chunks and folds each into scalar accumulators
       (``cgp.eval_genome_stats`` on the jnp backend, the ``cgp_fitness``
@@ -248,7 +273,7 @@ def _fitness_fn(exact, pmax, n_i, signed, objective: Objective,
         raise ValueError(f"unknown eval_backend {eval_backend!r}; "
                          "expected 'jnp' or 'pallas'")
     if fused is None:
-        fused = m.supports_stats
+        fused = m.supports_stats and default_fused()
     if fused and not m.supports_stats:
         raise ValueError(f"fused=True but metric {m.name!r} declares no "
                          "sufficient-statistics form")

@@ -31,16 +31,29 @@ _TRUE = ("1", "true", "yes", "on")
 _FALSE = ("0", "false", "no", "off")
 
 
+def env_flag(name: str) -> bool | None:
+    """Parse a tri-state boolean env override (None = unset).
+
+    Shared by every per-backend policy knob in the repo
+    (``REPRO_PALLAS_INTERPRET``, ``REPRO_EVAL_FUSED``): ``1/true/yes/on``
+    and ``0/false/no/off`` are accepted case-insensitively, anything else
+    raises rather than silently picking a default.
+    """
+    env = os.environ.get(name)
+    if env is None:
+        return None
+    v = env.strip().lower()
+    if v in _TRUE:
+        return True
+    if v in _FALSE:
+        return False
+    raise ValueError(f"{name}={env!r}: expected one of "
+                     f"{'/'.join(_TRUE)} or {'/'.join(_FALSE)}")
+
+
 def default_interpret() -> bool:
     """Should Pallas kernels run under the interpreter on this backend?"""
-    env = os.environ.get(ENV_INTERPRET)
+    env = env_flag(ENV_INTERPRET)
     if env is not None:
-        v = env.strip().lower()
-        if v in _TRUE:
-            return True
-        if v in _FALSE:
-            return False
-        raise ValueError(
-            f"{ENV_INTERPRET}={env!r}: expected one of "
-            f"{'/'.join(_TRUE)} or {'/'.join(_FALSE)}")
+        return env
     return jax.default_backend() != "tpu"

@@ -61,7 +61,8 @@ def cell_list():
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              pod_reduction: str = "compressed", force: bool = False,
-             mac_mode: str = None, tag: str = ""):
+             mac_mode: str = None, tag: str = "",
+             qos_library: str = None):
     import jax
     from repro.configs import SHAPES, get_config
     from repro.launch import hlo_analysis, specs
@@ -89,6 +90,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
               "mesh_shape": dict(mesh.shape), "overrides": ov,
               "pod_reduction": pod_reduction if multi else "n/a"}
+    if qos_library:
+        # per-QoS-tier power/latency prediction from the library's cell
+        # electricals (roofline.qos_tier_table); rides in the cell record
+        # so serving-cost analyses read one artifact
+        from repro.launch.roofline import qos_tier_table
+        result["qos_library"] = qos_library
+        result["qos_tiers"] = qos_tier_table(qos_library)
 
     t0 = time.time()
     try:
@@ -240,6 +248,9 @@ def main():
                     choices=["compressed", "plain"])
     ap.add_argument("--mac-mode", default=None)
     ap.add_argument("--tag", default="")
+    ap.add_argument("--qos-library", default=None,
+                    help="component library: embed the per-tier QoS "
+                         "electrical prediction in each cell record")
     args = ap.parse_args()
 
     if args.reanalyze:
@@ -268,7 +279,7 @@ def main():
             r = run_cell(arch, sname, mk, args.out,
                          pod_reduction=args.pod_reduction,
                          force=args.force, mac_mode=args.mac_mode,
-                         tag=args.tag)
+                         tag=args.tag, qos_library=args.qos_library)
             ok += r.get("status") == "ok"
             fail += r.get("status") == "error"
     print(f"[dryrun] done: {ok} ok, {fail} failed, {skip} skipped")

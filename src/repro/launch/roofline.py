@@ -17,6 +17,14 @@ MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params,
 D = tokens processed; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes
 remat/waste overheads.
 
+``--qos-library <container>`` additionally prints the QoS tier table:
+the default ``serve.qos.QosPolicy`` resolved against the library, with
+each tier's MAC power/delay/PDP delta vs the exact tier (from the
+entries' cell-model electricals).  For a MAC-bound cell the compute term
+scales by the tier's delay ratio and chip power by its power ratio --
+the per-tier latency/power *prediction* the serving layer trades
+against accuracy (DESIGN.md §13).
+
 Usage:  python -m repro.launch.roofline --dir results/dryrun [--md]
 """
 
@@ -80,6 +88,53 @@ def analyze_cell(rec: dict) -> dict:
     }
 
 
+def qos_tier_table(library: str, *, w: int | None = None,
+                   signed: bool | None = None) -> list:
+    """Per-QoS-tier electrical prediction from a component library.
+
+    Resolves the default serving policy against ``library`` and reports,
+    per tier: the selected entry, its profile error, and power / delay /
+    PDP / area deltas (percent) relative to the *exact* tier's entry.
+    ``delay_rel`` is the predicted compute-term latency delta of a
+    MAC-bound cell; ``power_rel`` the predicted MAC-array power delta.
+    """
+    from repro.library import LibraryIndex
+    from repro.serve.qos import QosPolicy
+
+    idx = LibraryIndex.load(library)
+    pol = QosPolicy.default()
+    table = pol.selection_table(idx, w=w, signed=signed)
+    base = table[pol.names[0]]
+    rows = []
+    for name, e in table.items():
+        b = pol.budget(name)
+        rows.append({
+            "qos": name, "entry": e.name,
+            "metric": b.metric, "bound": b.bound,
+            "err": float(e.profile.get(b.metric, float("nan"))),
+            "area_um2": e.area_um2, "delay_ps": e.delay_ps,
+            "power_nw": e.power_nw, "pdp_fj": e.pdp_fj,
+            "power_rel": 100.0 * (e.power_nw / base.power_nw - 1.0),
+            "delay_rel": 100.0 * (e.delay_ps / base.delay_ps - 1.0),
+            "pdp_rel": 100.0 * (e.pdp_fj / base.pdp_fj - 1.0),
+            "area_rel": 100.0 * (e.area_um2 / base.area_um2 - 1.0),
+        })
+    return rows
+
+
+def fmt_qos_table(rows: list) -> str:
+    hdr = (f'| {"qos":10s} | {"entry":16s} | {"err":>9s} | {"bound":>8s} '
+           f'| power | delay |   PDP |  area |')
+    lines = [hdr, "|" + "-" * (len(hdr) - 2) + "|"]
+    for r in rows:
+        lines.append(
+            f'| {r["qos"]:10s} | {r["entry"]:16s} | {r["err"]:9.2e} '
+            f'| {r["bound"]:8.0e} | {r["power_rel"]:+4.0f}% '
+            f'| {r["delay_rel"]:+4.0f}% | {r["pdp_rel"]:+4.0f}% '
+            f'| {r["area_rel"]:+4.0f}% |')
+    return "\n".join(lines)
+
+
 def fmt_s(x):
     if x == 0:
         return "0"
@@ -96,6 +151,9 @@ def main():
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--md", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--qos-library", default=None,
+                    help="component library: append the QoS tier "
+                         "power/latency prediction table")
     args = ap.parse_args()
 
     rows, skipped, failed = [], [], []
@@ -122,6 +180,10 @@ def main():
             f'| {fmt_s(r["dcn_s"]):>6s} | {r["dominant"]:10s} '
             f'| {r["useful_ratio"]:9.3f} | {r["roofline_frac"]:8.3f} |')
     text = "\n".join(lines)
+    if args.qos_library:
+        text += ("\n\nQoS tiers (" + args.qos_library + ", deltas vs "
+                 "exact tier):\n"
+                 + fmt_qos_table(qos_tier_table(args.qos_library)))
     if skipped:
         text += "\n\nskipped: " + ", ".join(skipped)
     if failed:

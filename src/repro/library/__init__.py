@@ -11,9 +11,15 @@ deployment side (``kernels/lut_matmul`` inference):
 * ``compile`` -- ``compile_entry`` lowers an entry to the exact LUT the
   matmul paths consume (with the M(0,0)=0 padding invariant enforced for
   kernel mode) and ``mac_ctx`` builds the MacCtx that runs full NN
-  inference through the evolved arithmetic.
+  inference through the evolved arithmetic;
+* ``index``   -- LibraryIndex, feasibility queries over loaded entries
+  (minimal-PDP entry under a metric bound + optional WCE cap) -- the
+  lookup behind per-request QoS variant selection (``serve.qos``);
+* ``synth``   -- deterministic output-truncation ladders: fully
+  characterized entries with a monotone error/PDP staircase, no search.
 
-See DESIGN.md §12 for the schema and the compile-to-LUT contract.
+See DESIGN.md §12 for the schema and the compile-to-LUT contract, §13
+for the QoS serving layer built on the index.
 """
 
 from repro.core.luts import (LibraryFormatError,  # noqa: F401
@@ -21,9 +27,13 @@ from repro.core.luts import (LibraryFormatError,  # noqa: F401
 from repro.library.compile import (LibraryCompileError,  # noqa: F401
                                    compile_entry, entry_lut, mac_ctx,
                                    profile_lut, zero_guard_entry)
+from repro.library.index import (InfeasibleQueryError,  # noqa: F401
+                                 LibraryIndex)
 from repro.library.schema import (SCHEMA_VERSION,  # noqa: F401
                                   ComponentEntry, Provenance,
                                   entry_from_multlib, load_entries,
                                   save_entries, validate_entry)
+from repro.library.synth import (exact_genome,  # noqa: F401
+                                 synthetic_ladder, truncate_outputs)
 from repro.library.writer import (LibraryWriter,  # noqa: F401
                                   characterize_entry)

@@ -1,0 +1,117 @@
+"""Feasibility queries over a component library (the QoS lookup path).
+
+The paper translates an application-level quality target into a
+component-level error budget; ``LibraryIndex`` is the runtime half of
+that translation: given *metric + bound (+ optional worst-case cap)*, it
+returns the **cheapest feasible** entry -- minimal PDP among all entries
+whose error profile satisfies the budget, the selection rule of the
+approximate-library deployment pattern (arXiv 2004.10483) with the
+combined MED+WCE constraint form of arXiv 2206.13077.
+
+Selection is pure metadata: no LUT is compiled and no genome evaluated,
+so a query is microseconds over a thousand-entry library and trivially
+unit-testable.  Determinism contract: ties on PDP break on (area, name),
+so equal libraries always resolve to the same entry -- the property
+``tests/test_library_index.py`` pins alongside feasibility/minimality.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Iterator, List, Sequence
+
+import math
+
+from repro.library.schema import ComponentEntry, load_entries
+
+
+class InfeasibleQueryError(LookupError):
+    """No library entry satisfies the requested error budget."""
+
+
+def _score(entry: ComponentEntry, metric: str) -> float:
+    """Entry's profile value for ``metric``; +inf when absent/non-finite
+    (an unprofiled or NaN-scored entry can never be selected)."""
+    v = entry.profile.get(metric)
+    if v is None or not math.isfinite(v):
+        return math.inf
+    return float(v)
+
+
+class LibraryIndex:
+    """In-memory view of a component library, optimized for budget queries.
+
+    Wraps a sequence of ``ComponentEntry`` (typically ``load_entries``
+    output); the entries are not copied, so one index can back many
+    policies/engines.
+    """
+
+    def __init__(self, entries: Iterable[ComponentEntry]):
+        self.entries: List[ComponentEntry] = list(entries)
+        self._metrics = sorted({k for e in self.entries
+                                for k in e.profile})
+
+    @classmethod
+    def load(cls, path: str) -> "LibraryIndex":
+        return cls(load_entries(path))
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self) -> Iterator[ComponentEntry]:
+        return iter(self.entries)
+
+    def metrics(self) -> Sequence[str]:
+        """Profile metrics present in at least one entry."""
+        return tuple(self._metrics)
+
+    def _check_metric(self, metric: str) -> None:
+        if metric not in self._metrics:
+            raise ValueError(
+                f"metric {metric!r} appears in no entry profile; this "
+                f"library scores {', '.join(self._metrics) or '(nothing)'}")
+
+    def feasible(self, metric: str, bound: float,
+                 wce_cap: float | None = None, *,
+                 w: int | None = None,
+                 signed: bool | None = None) -> List[ComponentEntry]:
+        """All entries whose profile satisfies the budget.
+
+        ``profile[metric] <= bound`` and, when ``wce_cap`` is given,
+        ``profile['wce'] <= wce_cap`` (the combined-constraint form);
+        ``w``/``signed`` optionally restrict mixed libraries to one
+        operand family.  Entries missing the metric (or scored NaN) are
+        never feasible.
+        """
+        self._check_metric(metric)
+        out = []
+        for e in self.entries:
+            if w is not None and e.w != w:
+                continue
+            if signed is not None and e.signed != signed:
+                continue
+            if _score(e, metric) > bound:
+                continue
+            if wce_cap is not None and _score(e, "wce") > wce_cap:
+                continue
+            out.append(e)
+        return out
+
+    def query(self, metric: str, bound: float,
+              wce_cap: float | None = None, *,
+              w: int | None = None,
+              signed: bool | None = None) -> ComponentEntry:
+        """The cheapest feasible entry: minimal PDP under the budget.
+
+        Ties on PDP break deterministically on (area, name).  Raises
+        ``InfeasibleQueryError`` when nothing satisfies the budget --
+        callers decide whether that means "fall back to exact" or "reject
+        the QoS class" (``serve.qos.QosPolicy`` does the former only if
+        an exact entry is in the library).
+        """
+        cands = self.feasible(metric, bound, wce_cap, w=w, signed=signed)
+        if not cands:
+            raise InfeasibleQueryError(
+                f"no entry with {metric} <= {bound!r}"
+                + (f" and wce <= {wce_cap!r}" if wce_cap is not None else "")
+                + f" among {len(self.entries)} entries")
+        return min(cands, key=lambda e: (e.pdp_fj, e.area_um2, e.name))

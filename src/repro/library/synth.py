@@ -1,0 +1,102 @@
+"""Deterministic synthetic component ladders (no evolution, no RNG).
+
+QoS serving, benchmarks and fixtures need a library whose error/PDP
+ladder is *reproducible bit-for-bit* without paying a CGP search.  The
+construction here is the output-truncation family: take the exact array
+(or Baugh-Wooley) multiplier netlist and rewire the ``k`` least
+significant product outputs to a constant-0 gate.  Because area/power
+are computed over the **active** cone only (``cgp.area``), each zeroed
+output drops its driving logic, so error grows and PDP shrinks
+monotonically with ``k`` -- a clean Pareto staircase from one
+deterministic genome transformation.
+
+Unlike ``core.luts.truncated_multiplier`` (a LUT-level construction with
+discount-model electricals and no genome), these are genuine netlist
+genomes, so they flow through the full ``ComponentEntry`` contract:
+``compile_entry(verify=True)`` re-derives the LUT from the genome, the
+scalar-trace oracle applies, and electricals come from the same cell
+model as evolved circuits.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core import cgp as cgp_mod
+from repro.core import netlist as nl_mod
+from repro.core.cgp import Genome
+from repro.library.schema import ComponentEntry, Provenance
+from repro.library.writer import characterize_entry
+
+
+def truncate_outputs(genome: Genome, k: int, *, n_i: int,
+                     rounded: bool = True) -> Genome:
+    """Drop the ``k`` LSB outputs by rewiring them to constant gates.
+
+    With ``rounded=True`` (default) bits ``0..k-2`` go to a const-0 gate
+    and bit ``k-1`` to a const-1 gate: *compensated* truncation, which
+    centers the product error near +0.5 LSB instead of the one-sided
+    ``-(2^k - 1)/2`` bias of floor truncation (``rounded=False``, all
+    ``k`` bits to const-0).  The bias matters downstream: floor
+    truncation's systematic offset accumulates across every MAC of a
+    dot product and wrecks NN accuracy even at tiny WMED, the very
+    failure mode the paper's evolution avoids with its bias constraint
+    (DESIGN.md §7/§10).  Both constant cells cost 0 area/power, so the
+    Pareto staircase is unchanged.
+
+    Only constant gates are appended; the rest of the netlist is
+    untouched, so the dropped LSB cones simply fall out of the active
+    mask.  ``k = 0`` returns the genome unchanged.
+    """
+    import jax.numpy as jnp
+
+    nodes = np.asarray(genome.nodes, np.int32)
+    outs = np.asarray(genome.outs, np.int32).copy()
+    if not 0 <= k <= outs.shape[0]:
+        raise ValueError(f"k={k} outside [0, {outs.shape[0]}] outputs")
+    if k == 0:
+        return genome
+    consts = np.asarray([[0, 0, 0], [0, 0, 15]], np.int32)  # const-0/-1
+    nodes = np.concatenate([nodes, consts], axis=0)
+    zero, one = n_i + nodes.shape[0] - 2, n_i + nodes.shape[0] - 1
+    outs[:k] = zero
+    if rounded:
+        outs[k - 1] = one
+    return Genome(jnp.asarray(nodes), jnp.asarray(outs))
+
+
+def exact_genome(w: int, signed: bool) -> Genome:
+    """The exact multiplier seed netlist for the operand family."""
+    nl = (nl_mod.baugh_wooley_multiplier(w) if signed
+          else nl_mod.array_multiplier(w))
+    return cgp_mod.genome_from_netlist(nl)
+
+
+def synthetic_ladder(w: int = 8, signed: bool = True,
+                     ks: Sequence[int] = (0, 3, 6, 9),
+                     pmf_x: np.ndarray | None = None,
+                     vec_weights: np.ndarray | None = None,
+                     tag: str = "synthetic-trunc"
+                     ) -> List[ComponentEntry]:
+    """Characterized output-truncation ladder, cheapest-last.
+
+    One fully profiled ``ComponentEntry`` per ``k`` in ``ks`` (``k = 0``
+    is the exact multiplier: every profile metric 0, highest PDP).
+    Deterministic end to end -- same inputs, bit-identical entries --
+    which is what makes it suitable for committed fixtures
+    (``tests/fixtures/component_golden_v1.npz``) and for QoS benchmarks
+    that must not inherit search noise.
+    """
+    g0 = exact_genome(w, signed)
+    entries = []
+    for k in sorted(int(k) for k in ks):
+        g = truncate_outputs(g0, k, n_i=2 * w)
+        name = (f"exact_w{w}" if k == 0 else f"trunc{k}_w{w}")
+        entries.append(characterize_entry(
+            g, w, signed, name=name, pmf_x=pmf_x,
+            vec_weights=vec_weights,
+            provenance=Provenance(objective_metric="wmed", domain="exhaustive",
+                                  tag=f"{tag}:k={k}")))
+    return entries

@@ -1,2 +1,5 @@
 """Serving: batched prefill + decode engine with slot-based continuous
-batching and int8 KV caches."""
+batching and int8 KV caches, plus the QoS-aware approximate-serving
+layer (``serve.qos``: per-request variant selection from the component
+library, variant cache, downshift-under-load) and the ``serve.metrics``
+counter registry backing its observability."""

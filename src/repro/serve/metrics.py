@@ -1,0 +1,50 @@
+"""Serving observability: a tiny process-local counter registry.
+
+One ``Counters`` instance is threaded through the QoS serving stack
+(``serve.qos``): the variant cache reports compiles/hits/evictions, the
+engine reports per-class served counts, downshift events and
+accuracy-drift estimates.  Names are dotted paths with the class (or
+other label) as the last segment -- ``qos.served.balanced``,
+``cache.compile`` -- so a snapshot sorts into readable groups without a
+label system.  Counters are floats (drift sums are fractional); gauges
+just overwrite (``set``).
+
+Deliberately not a metrics *protocol*: ``snapshot()`` returns a plain
+dict that benchmarks dump into ``BENCH_qos.json`` and tests assert on.
+Exporting to a real telemetry system is one adapter away and out of
+scope here.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+
+class Counters:
+    """Monotonic counters + gauges under dotted names."""
+
+    def __init__(self) -> None:
+        self._v: Dict[str, float] = {}
+
+    def inc(self, name: str, n: float = 1.0) -> float:
+        """Add ``n`` (counter semantics); returns the new value."""
+        v = self._v.get(name, 0.0) + float(n)
+        self._v[name] = v
+        return v
+
+    def set(self, name: str, v: float) -> None:
+        """Overwrite (gauge semantics)."""
+        self._v[name] = float(v)
+
+    def get(self, name: str, default: float = 0.0) -> float:
+        return self._v.get(name, default)
+
+    def snapshot(self) -> Dict[str, float]:
+        """Stable-ordered copy of every counter/gauge."""
+        return {k: self._v[k] for k in sorted(self._v)}
+
+    def __len__(self) -> int:
+        return len(self._v)
+
+    def __repr__(self) -> str:
+        return f"Counters({self.snapshot()!r})"

@@ -1,0 +1,25 @@
+"""``repro.serve.qos``: QoS-aware approximate serving (DESIGN.md §13).
+
+Turns the component library's offline Pareto front into a per-request
+runtime knob:
+
+* ``policy``  -- QosBudget / QosPolicy: QoS classes (strict -> loose)
+  mapped to component-level error budgets and resolved to the cheapest
+  feasible library entry (pure, deterministic selection);
+* ``cache``   -- VariantCache: each distinct entry compiles / jits
+  exactly once, LRU-bounded, with observable hit/miss/compile counters;
+* ``engine``  -- QosEngine: per-class lockstep batching with dynamic
+  downshift under queue pressure (hysteresis via watermarks + dwell) and
+  served-accuracy drift accounting via ``serve.metrics``.
+
+Quickstart (see README "QoS serving" and benchmarks/bench_qos_serve.py)::
+
+    index = LibraryIndex.load("library.npz")
+    eng = QosEngine(mlp300_forward, params, QosPolicy.default(), index,
+                    x_qp=x_qp, w_qp=w_qp)
+    done = eng.run([QosRequest(i, x, qos="balanced") for i, x in ...])
+"""
+
+from repro.serve.qos.cache import VariantCache, entry_digest  # noqa: F401
+from repro.serve.qos.engine import QosEngine, QosRequest      # noqa: F401
+from repro.serve.qos.policy import QosBudget, QosPolicy       # noqa: F401

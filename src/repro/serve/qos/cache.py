@@ -1,0 +1,136 @@
+"""VariantCache: each distinct library entry compiles exactly once.
+
+``library.compile_entry`` is deliberately expensive -- it re-derives the
+(2^w, 2^w) LUT from the genome and demands bit equality with the cached
+copy -- and each (entry, model) pair additionally pays a jit trace.
+Serving must amortize both across requests: the cache keys compiled
+``MacCtx`` objects by **entry digest + resolved quantization**, and
+jitted forwards by digest + model function (jax's own jit cache handles
+per-shape retraces under that).  LRU eviction bounds residency; hit /
+miss(=compile) / eviction counters feed ``serve.metrics`` so the
+"exactly one compile per distinct entry" property is observable, not
+just hoped for (``benchmarks/bench_qos_serve.py`` asserts it).
+
+The digest covers the circuit *function* (w, signedness, genome, LUT),
+not the name or provenance: two sweeps that rediscover the same circuit
+share one compilation.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from repro import library as lib_mod
+from repro.library.schema import ComponentEntry
+from repro.serve.metrics import Counters
+
+
+def entry_digest(entry: ComponentEntry) -> str:
+    """Function digest: sha1 over (w, signed, genome, LUT) bytes."""
+    h = hashlib.sha1()
+    h.update(f"w={entry.w};signed={int(entry.signed)};".encode())
+    h.update(np.ascontiguousarray(entry.nodes, np.int32).tobytes())
+    h.update(np.ascontiguousarray(entry.outs, np.int32).tobytes())
+    h.update(np.ascontiguousarray(entry.lut, np.int32).tobytes())
+    return h.hexdigest()
+
+
+def _qp_key(explicit, entry: ComponentEntry, field: str):
+    """The quantization actually used by ``library.mac_ctx`` for a slot:
+    explicit arg wins, else the entry's provenance triple, else None."""
+    if explicit is not None:
+        return (int(explicit.bits), int(explicit.frac_bits),
+                bool(explicit.signed))
+    q = (entry.provenance.quant or {}).get(field)
+    if q is not None:
+        return (int(q[0]), int(q[1]), bool(q[2]))
+    return None
+
+
+class VariantCache:
+    """LRU cache of compiled variants (MacCtx) + their jitted forwards.
+
+    ``capacity`` bounds distinct resident variants; evicting a variant
+    also drops its jitted forwards (the jit executable is useless without
+    the MacCtx that closed over the LUT).  ``kernel`` picks the
+    ``lut_matmul`` Pallas path vs the pure-jnp gather for every cached
+    variant; ``verify`` forwards to ``compile_entry`` (genome-verified by
+    default -- the cache must not weaken the compile contract).
+    """
+
+    def __init__(self, capacity: int = 8, *, kernel: bool = False,
+                 verify: bool = True, counters: Counters | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.kernel = bool(kernel)
+        self.verify = bool(verify)
+        self.counters = counters if counters is not None else Counters()
+        self._macs: "OrderedDict[Tuple, object]" = OrderedDict()
+        self._fwd: Dict[Tuple, Callable] = {}
+
+    # ------------------------------------------------------------- macs
+
+    def _key(self, entry: ComponentEntry, x_qp, w_qp) -> Tuple:
+        return (entry_digest(entry), _qp_key(x_qp, entry, "x_qp"),
+                _qp_key(w_qp, entry, "w_qp"), self.kernel)
+
+    def mac(self, entry: ComponentEntry, x_qp=None, w_qp=None):
+        """The compiled MacCtx for an entry; compiles at most once.
+
+        A hit refreshes LRU order; a miss pays ``library.mac_ctx`` (one
+        ``cache.compile`` counter tick) and may evict the least recently
+        used variant together with its jitted forwards.
+        """
+        key = self._key(entry, x_qp, w_qp)
+        hit = self._macs.get(key)
+        if hit is not None:
+            self._macs.move_to_end(key)
+            self.counters.inc("cache.hit")
+            return hit
+        self.counters.inc("cache.miss")
+        self.counters.inc("cache.compile")
+        mac = lib_mod.mac_ctx(entry, x_qp, w_qp, kernel=self.kernel,
+                              verify=self.verify)
+        self._macs[key] = mac
+        while len(self._macs) > self.capacity:
+            old_key, _ = self._macs.popitem(last=False)
+            self._fwd = {k: f for k, f in self._fwd.items()
+                         if k[0] != old_key}
+            self.counters.inc("cache.evict")
+        self.counters.set("cache.size", len(self._macs))
+        return mac
+
+    # ---------------------------------------------------------- forwards
+
+    def forward(self, entry: ComponentEntry, fn: Callable, params, x,
+                x_qp=None, w_qp=None):
+        """Run ``fn(params, x, mac)`` through a cached jitted wrapper.
+
+        One jit wrapper per (variant, model fn); jax's jit cache keys the
+        remaining shape/dtype dimension, so a fixed serving batch shape
+        compiles once and retraces never.
+        """
+        mac = self.mac(entry, x_qp, w_qp)
+        key = (self._key(entry, x_qp, w_qp), id(fn))
+        jitted = self._fwd.get(key)
+        if jitted is None:
+            import jax
+
+            jitted = jax.jit(lambda p, xx: fn(p, xx, mac))
+            self._fwd[key] = jitted
+        return jitted(params, x)
+
+    # ------------------------------------------------------------- stats
+
+    def __len__(self) -> int:
+        return len(self._macs)
+
+    def stats(self) -> Dict[str, float]:
+        """Counter slice relevant to the cache (hit/miss/compile/evict)."""
+        snap = self.counters.snapshot()
+        return {k: v for k, v in snap.items() if k.startswith("cache.")}

@@ -1,0 +1,223 @@
+"""QosEngine: per-request variant selection under live load.
+
+The serving counterpart of ``serve.engine.Engine``'s lockstep batching,
+specialized to the classifier workloads the paper deploys (MLP-300 /
+LeNet-5): requests arrive tagged with a QoS class, queue per class, and
+are served in fixed-size zero-padded batches so each (class, variant)
+pair compiles one jitted forward and never retraces.  Per batch the
+engine resolves the class -> ``ComponentEntry`` via ``QosPolicy`` over a
+``LibraryIndex`` and runs the model through the ``VariantCache`` -- the
+Pareto front as a runtime knob.
+
+**Dynamic downshift** (DESIGN.md §13): when total queue depth crosses
+the high watermark, every class is demoted one budget step toward
+cheaper arithmetic; below the low watermark it recovers one step.  Two
+watermarks plus a dwell period (minimum steps between transitions) give
+hysteresis, so a queue hovering near one threshold cannot flap the
+arithmetic every batch.  Load therefore sheds into *error* (bounded by
+the demoted class's budget, which the policy guarantees is a relaxation)
+instead of latency.
+
+**Observability** (``serve.metrics.Counters``): per-class served counts,
+downshift events and level, per-class error sums for the served and the
+nominal (undownshifted) variant -- their difference is the estimated
+served-accuracy drift the library's error profiles predict -- plus the
+variant cache's hit/miss/compile/evict counters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from repro.library.index import LibraryIndex
+from repro.library.schema import ComponentEntry
+from repro.serve.metrics import Counters
+from repro.serve.qos.cache import VariantCache
+from repro.serve.qos.policy import QosPolicy
+
+
+@dataclasses.dataclass
+class QosRequest:
+    """One classification request: input + QoS class (+ filled outputs)."""
+
+    rid: int
+    x: np.ndarray              # one example, model input shape (no batch dim)
+    qos: str                   # QoS class name (must be in the policy)
+    label: int | None = None   # optional ground truth (accuracy accounting)
+    # outputs, filled by the engine:
+    pred: int | None = None
+    served_as: str | None = None   # effective class after downshift
+    entry_name: str | None = None  # library entry that served it
+
+
+class QosEngine:
+    """Batched per-class serving with downshift-under-pressure.
+
+    ``forward(params, x, mac)`` is the model (e.g.
+    ``mlp_mnist.mlp300_forward``); ``policy`` orders classes strict ->
+    loose; ``index`` is the loaded component library.  Selection for
+    every class is resolved eagerly at construction (fail-fast on a
+    library that cannot satisfy the policy); downshifted selections
+    resolve lazily and memoize.
+
+    ``high_watermark``/``low_watermark`` are total-queue-depth
+    thresholds (defaults: 4x / 1x the batch size); ``dwell`` is the
+    minimum number of scheduler steps between downshift transitions.
+    """
+
+    def __init__(self, forward: Callable, params, policy: QosPolicy,
+                 index: LibraryIndex, *, batch: int = 64,
+                 cache: VariantCache | None = None,
+                 x_qp=None, w_qp=None, kernel: bool = False,
+                 high_watermark: int | None = None,
+                 low_watermark: int | None = None, dwell: int = 2,
+                 counters: Counters | None = None,
+                 w: int | None = None, signed: bool | None = None):
+        self.forward, self.params = forward, params
+        self.policy, self.index = policy, index
+        self.batch = int(batch)
+        self.x_qp, self.w_qp = x_qp, w_qp
+        self.counters = counters if counters is not None else Counters()
+        self.cache = cache if cache is not None else VariantCache(
+            kernel=kernel, counters=self.counters)
+        self.high = (int(high_watermark) if high_watermark is not None
+                     else 4 * self.batch)
+        self.low = (int(low_watermark) if low_watermark is not None
+                    else self.batch)
+        if self.low >= self.high:
+            raise ValueError(f"low watermark {self.low} must be < high "
+                             f"watermark {self.high} (hysteresis band)")
+        self.dwell = int(dwell)
+        self._w, self._signed = w, signed
+        self._queues: Dict[str, deque] = {n: deque()
+                                          for n in policy.names}
+        self._selection: Dict[tuple, ComponentEntry] = {}
+        self.downshift = 0
+        self._max_shift = len(policy.names) - 1
+        self._since_change = self.dwell  # first transition needs no wait
+        # fail fast: nominal selection for every class must be feasible
+        for name, entry in policy.selection_table(
+                index, 0, w=w, signed=signed).items():
+            self._selection[(name, 0)] = entry
+
+    # --------------------------------------------------------- intake
+
+    def submit(self, req: QosRequest) -> None:
+        if req.qos not in self._queues:
+            raise KeyError(f"request {req.rid}: unknown QoS class "
+                           f"{req.qos!r}; policy has "
+                           f"{', '.join(self.policy.names)}")
+        self._queues[req.qos].append(req)
+        self.counters.inc(f"qos.submitted.{req.qos}")
+
+    def submit_many(self, reqs: Sequence[QosRequest]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------- downshift
+
+    def _update_downshift(self) -> None:
+        """One hysteresis tick: at most one step per ``dwell`` steps."""
+        depth = self.pending()
+        if self._since_change >= self.dwell:
+            if depth > self.high and self.downshift < self._max_shift:
+                self.downshift += 1
+                self._since_change = 0
+                self.counters.inc("qos.downshift.events")
+            elif depth < self.low and self.downshift > 0:
+                self.downshift -= 1
+                self._since_change = 0
+                self.counters.inc("qos.downshift.recoveries")
+        self._since_change += 1
+        self.counters.set("qos.downshift.level", self.downshift)
+
+    def _entry_for(self, name: str, downshift: int) -> ComponentEntry:
+        key = (name, downshift)
+        entry = self._selection.get(key)
+        if entry is None:
+            entry = self.policy.select(self.index, name, downshift,
+                                       w=self._w, signed=self._signed)
+            self._selection[key] = entry
+        return entry
+
+    # ------------------------------------------------------------ serve
+
+    def _next_class(self) -> str | None:
+        """Deepest queue wins; ties resolve strictest-first (policy
+        order), so under uniform load tight classes never starve."""
+        best, best_n = None, 0
+        for name in self.policy.names:
+            n = len(self._queues[name])
+            if n > best_n:
+                best, best_n = name, n
+        return best
+
+    def step(self) -> List[QosRequest]:
+        """Serve one batch of the deepest class; returns served requests.
+
+        The batch is zero-padded to the fixed engine batch size (the
+        lockstep-engine trade: one compiled shape per variant, masked
+        tail), predictions are argmax over the model's logits.
+        """
+        self._update_downshift()
+        name = self._next_class()
+        if name is None:
+            return []
+        q = self._queues[name]
+        reqs = [q.popleft() for _ in range(min(self.batch, len(q)))]
+        entry = self._entry_for(name, self.downshift)
+        served_as, budget = self.policy.effective(name, self.downshift)
+        nominal = self._selection[(name, 0)]
+
+        xb = np.zeros((self.batch,) + tuple(reqs[0].x.shape), np.float32)
+        for i, r in enumerate(reqs):
+            xb[i] = r.x
+        logits = self.cache.forward(entry, self.forward, self.params, xb,
+                                    self.x_qp, self.w_qp)
+        preds = np.asarray(np.argmax(np.asarray(logits), axis=-1))
+        n = len(reqs)
+        for i, r in enumerate(reqs):
+            r.pred = int(preds[i])
+            r.served_as = served_as
+            r.entry_name = entry.name
+        # profile-predicted error accounting: served vs nominal variant.
+        # The gap is the estimated served-accuracy drift downshift causes.
+        err_used = float(entry.profile.get(budget.metric, float("nan")))
+        err_nom = float(nominal.profile.get(
+            self.policy.budget(name).metric, float("nan")))
+        self.counters.inc(f"qos.served.{name}", n)
+        self.counters.inc(f"qos.err_sum.{name}", n * err_used)
+        self.counters.inc(f"qos.err_sum_nominal.{name}", n * err_nom)
+        self.counters.inc(f"qos.drift.{name}", n * (err_used - err_nom))
+        if served_as != name:
+            self.counters.inc(f"qos.demoted.{name}", n)
+        return reqs
+
+    def run(self, reqs: Sequence[QosRequest] | None = None
+            ) -> List[QosRequest]:
+        """Drain the queues (optionally submitting ``reqs`` first)."""
+        if reqs is not None:
+            self.submit_many(reqs)
+        done: List[QosRequest] = []
+        while self.pending():
+            done.extend(self.step())
+        return done
+
+    # ------------------------------------------------------------ stats
+
+    def selection(self, downshift: int | None = None
+                  ) -> Dict[str, str]:
+        """class -> entry-name map at a downshift level (default current)."""
+        d = self.downshift if downshift is None else downshift
+        return {n: self._entry_for(n, d).name for n in self.policy.names}
+
+    def metrics(self) -> Dict[str, float]:
+        """Counter snapshot (engine + cache share one registry)."""
+        return self.counters.snapshot()

@@ -1,0 +1,157 @@
+"""QoS classes -> component-level error budgets -> library entries.
+
+The paper's core move is translating an application-level quality target
+into a component-level error budget; ``QosPolicy`` makes that a runtime
+knob.  Each QoS class carries a ``QosBudget`` (registry metric + bound +
+optional worst-case cap, per the combined MED+WCE constraint form of
+arXiv 2206.13077) and resolves, against a ``LibraryIndex``, to the
+**lowest-PDP feasible** ``ComponentEntry`` -- the deployment pattern of
+libraries of approximate circuits (arXiv 2004.10483).
+
+Everything here is pure metadata: resolution never compiles a LUT, so
+the selection logic is unit-testable against fixture libraries and a
+policy can be re-resolved per request batch for free.  Classes are
+ordered strict -> loose; *downshift* demotes a class ``n`` budget steps
+along that order (clamped at the loosest class), which is how the
+serving engine sheds load into cheaper arithmetic (DESIGN.md §13).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.library.index import LibraryIndex
+from repro.library.schema import ComponentEntry
+
+
+@dataclasses.dataclass(frozen=True)
+class QosBudget:
+    """Component-level error budget for one QoS class.
+
+    ``metric``/``bound`` constrain the entry's error profile
+    (``profile[metric] <= bound``); ``wce_cap`` additionally caps the
+    normalized worst-case error.  ``min_rel_accuracy`` is the
+    *application-level* acceptance target (measured accuracy relative to
+    the exact-arithmetic reference, in percent points, e.g. ``-2.0`` =
+    "at most two points below exact") -- the serving layer never enforces
+    it, but benchmarks and monitoring assert measured accuracy against
+    it (``benchmarks/bench_qos_serve.py``).
+    """
+
+    metric: str = "wmed"
+    bound: float = 0.0
+    wce_cap: float | None = None
+    min_rel_accuracy: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class QosPolicy:
+    """Ordered (strict -> loose) mapping of QoS class names to budgets.
+
+    The order is load-bearing twice: it defines the downshift ladder and
+    the tie-break for engine scheduling.  Budget bounds must be
+    non-decreasing along it (a "looser" class may never demand a tighter
+    error), which ``__post_init__`` enforces so a downshifted budget is
+    always a relaxation.
+    """
+
+    budgets: Tuple[Tuple[str, QosBudget], ...]
+
+    def __post_init__(self):
+        if not self.budgets:
+            raise ValueError("QosPolicy needs at least one class")
+        names = [n for n, _ in self.budgets]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate QoS class names: {names}")
+        prev = None
+        for name, b in self.budgets:
+            if not isinstance(b, QosBudget):
+                raise TypeError(f"class {name!r}: expected QosBudget, got "
+                                f"{type(b).__name__}")
+            if prev is not None and b.bound < prev[1].bound:
+                raise ValueError(
+                    f"class order must be strict -> loose: {name!r} bound "
+                    f"{b.bound} < {prev[0]!r} bound {prev[1].bound}")
+            prev = (name, b)
+
+    @classmethod
+    def default(cls) -> "QosPolicy":
+        """The four-tier ladder of ISSUE/DESIGN.md §13.
+
+        ``exact`` demands a *bit-exact* entry: ``wmed <= 0`` alone is
+        distribution-relative (a circuit wrong only on zero-probability
+        operand patterns scores wmed = 0 -- the paper's free-lunch
+        region), so the class additionally caps the exhaustive-domain
+        worst case at 0.  The approximate tiers spread over the WMED
+        decades the paper's Table-I ladder covers.  Their WCE caps sit
+        well above the bound because evolved circuits concentrate error
+        mass off the deployment distribution: measured deployment-pmf
+        sweeps land at wce ~ 100x wmed (benchmarks/bench_qos_serve.py),
+        so a cap at the bound's decade would make every evolved entry
+        infeasible.  ``min_rel_accuracy`` floors are workload acceptance
+        targets for the MLP-300/MNIST case study at smoke scale (600
+        test samples, sigma ~ 1.7pp) -- library admission and the QoS
+        benchmark validate served accuracy against them; they are not
+        universal promises of the error bound alone.
+        """
+        return cls(budgets=(
+            ("exact", QosBudget(metric="wmed", bound=0.0, wce_cap=0.0,
+                                min_rel_accuracy=0.0)),
+            ("high", QosBudget(metric="wmed", bound=1e-4, wce_cap=5e-2,
+                               min_rel_accuracy=-4.0)),
+            ("balanced", QosBudget(metric="wmed", bound=1e-3, wce_cap=2e-1,
+                                   min_rel_accuracy=-12.0)),
+            ("throughput", QosBudget(metric="wmed", bound=1e-2, wce_cap=None,
+                                     min_rel_accuracy=-15.0)),
+        ))
+
+    # ------------------------------------------------------------ lookup
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.budgets)
+
+    def budget(self, name: str) -> QosBudget:
+        for n, b in self.budgets:
+            if n == name:
+                return b
+        raise KeyError(f"unknown QoS class {name!r}; policy has "
+                       f"{', '.join(self.names)}")
+
+    def rank(self, name: str) -> int:
+        """Position on the strict -> loose ladder (0 = strictest)."""
+        return self.names.index(name)
+
+    def effective(self, name: str, downshift: int = 0
+                  ) -> Tuple[str, QosBudget]:
+        """The (class, budget) actually served after ``downshift`` steps.
+
+        Demotion moves ``downshift`` steps toward the loose end, clamped
+        at the last class; ``downshift = 0`` is the nominal budget.
+        """
+        if downshift < 0:
+            raise ValueError(f"downshift must be >= 0, got {downshift}")
+        i = min(self.rank(name) + downshift, len(self.budgets) - 1)
+        return self.budgets[i]
+
+    def select(self, index: LibraryIndex, name: str, downshift: int = 0,
+               *, w: int | None = None, signed: bool | None = None
+               ) -> ComponentEntry:
+        """Resolve a class to the cheapest feasible library entry.
+
+        Pure and deterministic: same policy + same library -> same entry
+        (``LibraryIndex.query`` minimality + tie-break contract).  Raises
+        ``InfeasibleQueryError`` when the library cannot satisfy the
+        class's (possibly downshifted) budget.
+        """
+        _, b = self.effective(name, downshift)
+        return index.query(b.metric, b.bound, b.wce_cap, w=w, signed=signed)
+
+    def selection_table(self, index: LibraryIndex, downshift: int = 0,
+                        *, w: int | None = None,
+                        signed: bool | None = None
+                        ) -> Dict[str, ComponentEntry]:
+        """Every class resolved at once (fail-fast at engine init)."""
+        return {n: self.select(index, n, downshift, w=w, signed=signed)
+                for n in self.names}

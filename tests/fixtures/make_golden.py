@@ -1,20 +1,28 @@
-"""Regenerate the committed golden multiplier-library fixture.
+"""Regenerate the committed golden fixtures.
 
 Run from the repo root::
 
     PYTHONPATH=src python tests/fixtures/make_golden.py
 
-The three entries are fully deterministic closed-form designs (no
-evolution, no RNG), so the fixture is reproducible bit-for-bit; tests
-assert that loading the *committed* file yields LUTs identical to the
-freshly constructed designs, pinning on-disk format stability across
-format-version bumps (a bump must either keep this file loadable or ship
-a new fixture + migration note).
+Two fixtures, both fully deterministic closed-form designs (no
+evolution, no RNG), reproducible bit-for-bit:
+
+* ``multlib_golden_v1.npz`` -- three ``core.luts.MultLib`` designs in
+  the lightweight LUT-library format; tests assert that loading the
+  *committed* file yields LUTs identical to the freshly constructed
+  designs, pinning on-disk format stability across format-version bumps
+  (a bump must either keep this file loadable or ship a new fixture +
+  migration note).
+* ``component_golden_v1.npz`` -- the 4-rung ``library.synth`` output-
+  truncation ladder as full ``ComponentEntry`` records (genome + LUT +
+  error profile + electricals), the fixture the QoS selection tests
+  (``tests/test_qos_serve.py``) resolve classes against.
 """
 
 import os
 
 from repro.core import luts
+from repro.library import save_entries, synthetic_ladder
 
 
 def build_entries():
@@ -26,9 +34,14 @@ def build_entries():
 
 
 def main():
-    path = os.path.join(os.path.dirname(__file__), "multlib_golden_v1.npz")
+    here = os.path.dirname(__file__)
+    path = os.path.join(here, "multlib_golden_v1.npz")
     luts.save_library(path, build_entries())
     print(f"wrote {path}")
+
+    cpath = os.path.join(here, "component_golden_v1.npz")
+    save_entries(cpath, synthetic_ladder(w=8, signed=True))
+    print(f"wrote {cpath}")
 
 
 if __name__ == "__main__":

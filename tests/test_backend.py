@@ -26,6 +26,84 @@ def test_env_garbage_rejected(monkeypatch):
         backend.default_interpret()
 
 
+def test_env_flag_tristate(monkeypatch):
+    monkeypatch.delenv("REPRO_TEST_FLAG", raising=False)
+    assert backend.env_flag("REPRO_TEST_FLAG") is None
+    monkeypatch.setenv("REPRO_TEST_FLAG", "on")
+    assert backend.env_flag("REPRO_TEST_FLAG") is True
+    monkeypatch.setenv("REPRO_TEST_FLAG", "0")
+    assert backend.env_flag("REPRO_TEST_FLAG") is False
+    monkeypatch.setenv("REPRO_TEST_FLAG", "maybe")
+    with pytest.raises(ValueError):
+        backend.env_flag("REPRO_TEST_FLAG")
+
+
+def test_default_fused_tracks_jax_backend(monkeypatch):
+    """Eval-path auto-selection: fused on TPU/GPU, unfused on CPU."""
+    from repro.core import evolve as ev
+
+    monkeypatch.delenv(ev.EVAL_FUSED_ENV, raising=False)
+    assert ev.default_fused() == (
+        jax.default_backend() in ("tpu", "gpu", "cuda", "rocm"))
+    # on the CPU containers that run this suite, auto means unfused
+    if jax.default_backend() == "cpu":
+        assert ev.default_fused() is False
+
+
+@pytest.mark.parametrize("val,expect", [("1", True), ("off", False)])
+def test_default_fused_env_override(monkeypatch, val, expect):
+    from repro.core import evolve as ev
+
+    monkeypatch.setenv(ev.EVAL_FUSED_ENV, val)
+    assert ev.default_fused() is expect
+
+
+def test_fused_auto_reaches_fitness_resolution(monkeypatch):
+    """``fused=None`` resolves through ``default_fused`` inside
+    ``_fitness_fn``: with the env forced on, the auto config builds the
+    fused (stats-consuming) pipeline; forced off, the unfused one.  The
+    two pipelines score an exact genome identically, so the probe checks
+    resolution via the traced callable rather than fitness values."""
+    import jax.numpy as jnp
+
+    from repro.core import cgp as cgp_mod
+    from repro.core import distributions as dist
+    from repro.core import evolve as ev
+    from repro.core import netlist as nl_mod
+    from repro.core import objective as obj_mod
+    from repro.core import wmed as wmed_mod
+
+    w = 4
+    obj = obj_mod.Objective()
+    ctx = obj.resolve_domain(w).build(w, False, dist.uniform_pmf(w), None)
+    calls = {"stats": 0, "planes": 0}
+    real_stats = cgp_mod.eval_genome_stats
+    real_eval = cgp_mod.eval_genome
+
+    def spy_stats(*a, **kw):
+        calls["stats"] += 1
+        return real_stats(*a, **kw)
+
+    def spy_eval(*a, **kw):
+        calls["planes"] += 1
+        return real_eval(*a, **kw)
+
+    monkeypatch.setattr(cgp_mod, "eval_genome_stats", spy_stats)
+    monkeypatch.setattr(cgp_mod, "eval_genome", spy_eval)
+    g = cgp_mod.genome_from_netlist(nl_mod.array_multiplier(w))
+    pmax = jnp.float32(wmed_mod.p_max(w))
+    cons = jax.tree.map(lambda x: x[0], obj.constraints.lane_params(
+        jnp.asarray([0.5], jnp.float32)))
+
+    for env, key in (("1", "stats"), ("0", "planes")):
+        monkeypatch.setenv(ev.EVAL_FUSED_ENV, env)
+        calls["stats"] = calls["planes"] = 0
+        fit = ev._fitness_fn(ctx.exact, pmax, 2 * w, False, obj,
+                             fused=None)
+        fit(g, ctx.in_planes, ctx.weights, cons)
+        assert calls[key] > 0, f"env={env}: expected the {key} pipeline"
+
+
 def test_override_reaches_kernel_between_calls(monkeypatch):
     """Flipping the env var takes effect per call (resolved outside jit)."""
     import jax.numpy as jnp

@@ -1,0 +1,170 @@
+"""Property suite for ``LibraryIndex`` feasibility queries.
+
+The QoS lookup contract (DESIGN.md §13): ``query(metric, bound[,
+wce_cap])`` returns an entry that (a) satisfies the budget, (b) has
+minimal PDP among every feasible entry, and (c) resolves ties
+deterministically on (pdp, area, name).  Pinned here on the synthetic
+output-truncation ladder (``library.synth``), whose error/PDP ordering
+is known analytically: truncating more output bits strictly loosens
+wmed and strictly shrinks the active circuit.
+"""
+
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.library import (InfeasibleQueryError, LibraryIndex,
+                           synthetic_ladder, truncate_outputs)
+
+
+@functools.lru_cache(maxsize=1)
+def ladder_index() -> LibraryIndex:
+    """Characterized 4-entry truncation ladder, built once per session."""
+    return LibraryIndex(synthetic_ladder(w=8, signed=True))
+
+
+# ------------------------------------------------------------ the ladder
+
+def test_ladder_shape_and_monotonicity():
+    idx = ladder_index()
+    assert len(idx) == 4
+    ordered = sorted(idx.entries, key=lambda e: e.profile["wmed"])
+    assert ordered[0].name == "exact_w8"
+    assert ordered[0].profile["wmed"] == 0.0
+    wmeds = [e.profile["wmed"] for e in ordered]
+    pdps = [e.pdp_fj for e in ordered]
+    areas = [e.area_um2 for e in ordered]
+    # error strictly loosens while cost strictly shrinks: a real Pareto
+    # ladder, so every bound has a unique cheapest feasible answer
+    assert all(a < b for a, b in zip(wmeds, wmeds[1:]))
+    assert all(a > b for a, b in zip(pdps, pdps[1:]))
+    assert all(a > b for a, b in zip(areas, areas[1:]))
+
+
+def test_truncation_preserves_io_contract():
+    idx = ladder_index()
+    for e in idx.entries:
+        assert e.w == 8 and e.signed
+        assert e.lut.shape == (256, 256)
+    # truncating zero bits is the identity
+    g = idx.entries[0].genome()
+    same = truncate_outputs(g, 0, n_i=16)
+    assert same is g
+
+
+def test_metrics_lists_profile_keys():
+    idx = ladder_index()
+    ms = idx.metrics()
+    for required in ("wmed", "wce", "med"):
+        assert required in ms
+
+
+# ------------------------------------------------------------- feasibility
+
+def test_query_zero_bound_returns_exact():
+    e = ladder_index().query("wmed", 0.0)
+    assert e.name == "exact_w8"
+    assert e.profile["wmed"] == 0.0
+
+
+def test_query_infeasible_raises():
+    with pytest.raises(InfeasibleQueryError):
+        ladder_index().query("wmed", -1.0)
+
+
+def test_query_unknown_metric_raises():
+    with pytest.raises(ValueError):
+        ladder_index().query("not_a_metric", 1.0)
+
+
+def test_query_family_filter():
+    idx = ladder_index()
+    with pytest.raises(InfeasibleQueryError):
+        idx.query("wmed", 1.0, w=4)  # ladder is all w=8
+    assert idx.query("wmed", 1.0, w=8, signed=True).w == 8
+
+
+def test_wce_cap_is_a_real_constraint():
+    idx = ladder_index()
+    loosest = max(idx.entries, key=lambda e: e.profile["wmed"])
+    # generous wmed bound, but a wce cap below the loosest entry's wce:
+    # the loosest (cheapest) rung must be excluded
+    cap = loosest.profile["wce"] * 0.5
+    picked = idx.query("wmed", 1.0, wce_cap=cap)
+    assert picked.name != loosest.name
+    assert picked.profile["wce"] <= cap
+
+
+def test_nan_profile_never_feasible():
+    idx = ladder_index()
+    e = idx.entries[0]
+    bad = dataclasses.replace(
+        e, name="nan_entry", pdp_fj=0.0,
+        profile={**e.profile, "wmed": float("nan")})
+    idx2 = LibraryIndex(list(idx.entries) + [bad])
+    # despite pdp=0 (cheapest possible), the NaN-scored entry loses
+    assert idx2.query("wmed", 1.0).name != "nan_entry"
+    assert bad not in idx2.feasible("wmed", 1.0)
+
+
+def test_tie_break_is_deterministic_on_area_then_name():
+    idx = ladder_index()
+    base = min(idx.entries, key=lambda e: e.pdp_fj)
+    twin_b = dataclasses.replace(base, name="zz_twin")
+    twin_a = dataclasses.replace(base, name="aa_twin",
+                                 area_um2=base.area_um2 * 0.5)
+    idx2 = LibraryIndex(list(idx.entries) + [twin_b, twin_a])
+    # equal pdp: smaller area wins; equal (pdp, area): lexicographic name
+    assert idx2.query("wmed", 1.0).name == "aa_twin"
+    idx3 = LibraryIndex(list(idx.entries) + [twin_b])
+    winner = idx3.query("wmed", 1.0)
+    assert winner.name == min(base.name, "zz_twin")
+
+
+# ----------------------------------------------------------- properties
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(min_value=-8.0, max_value=0.0),
+       st.floats(min_value=-4.0, max_value=0.0))
+def test_query_feasible_and_minimal(log_bound, log_cap):
+    """For any budget: the result is feasible and PDP-minimal, or the
+    query raises and brute force agrees nothing is feasible."""
+    idx = ladder_index()
+    bound, cap = 10.0 ** log_bound, 10.0 ** log_cap
+    brute = [e for e in idx.entries
+             if e.profile["wmed"] <= bound and e.profile["wce"] <= cap]
+    try:
+        picked = idx.query("wmed", bound, wce_cap=cap)
+    except InfeasibleQueryError:
+        assert not brute
+        return
+    assert picked.profile["wmed"] <= bound
+    assert picked.profile["wce"] <= cap
+    assert brute and picked.pdp_fj == min(e.pdp_fj for e in brute)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(min_value=-8.0, max_value=0.0))
+def test_query_monotone_in_bound(log_bound):
+    """Loosening the bound never increases the selected entry's PDP."""
+    idx = ladder_index()
+    bound = 10.0 ** log_bound
+    tight = idx.query("wmed", bound)
+    loose = idx.query("wmed", bound * 10.0)
+    assert loose.pdp_fj <= tight.pdp_fj
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_query_order_invariant(seed):
+    """Selection is a function of the entry *set*, not list order."""
+    idx = ladder_index()
+    rng = np.random.default_rng(seed)
+    shuffled = list(idx.entries)
+    rng.shuffle(shuffled)
+    a = ladder_index().query("wmed", 1e-3)
+    b = LibraryIndex(shuffled).query("wmed", 1e-3)
+    assert a.name == b.name

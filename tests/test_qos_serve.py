@@ -1,0 +1,287 @@
+"""QoS-aware serving tests: policy selection, variant cache, engine.
+
+Coverage mandated by DESIGN.md §13:
+
+* deterministic class -> entry selection against the committed golden
+  component fixture (``tests/fixtures/component_golden_v1.npz``);
+* downshift hysteresis: under a one-shot burst the downshift-level trace
+  is unimodal (rises, then falls, never oscillates) and transitions are
+  separated by at least the dwell period;
+* variant cache: exactly one compile per distinct entry, LRU eviction,
+  digest covers the circuit function (not its name);
+* drift accounting: ``qos.drift.<class>`` is zero without pressure and
+  equals served-vs-nominal profile error mass under demotion.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.library import LibraryIndex, synthetic_ladder
+from repro.nn import layers
+from repro.quant.fixed_point import calibrate
+from repro.serve.metrics import Counters
+from repro.serve.qos import (QosBudget, QosEngine, QosPolicy, QosRequest,
+                             VariantCache, entry_digest)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "component_golden_v1.npz")
+
+
+@pytest.fixture(scope="module")
+def index():
+    return LibraryIndex.load(FIXTURE)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """A 4->3 linear classifier + calibrated quant params: the smallest
+    model that still runs every MAC through the approximate LUT path."""
+    rng = np.random.default_rng(7)
+    params = {"w": rng.uniform(-0.5, 0.5, (4, 3)).astype(np.float32)}
+    xs = rng.uniform(0.0, 1.0, (64, 4)).astype(np.float32)
+    x_qp = calibrate(xs, bits=8, signed=True)
+    w_qp = calibrate(params["w"], bits=8, signed=True)
+
+    def forward(p, x, mac):
+        return layers.dense(x, p["w"], mac)
+
+    return params, forward, xs, x_qp, w_qp
+
+
+def make_engine(index, tiny, **kw):
+    params, forward, _, x_qp, w_qp = tiny
+    kw.setdefault("batch", 4)
+    return QosEngine(forward, params, QosPolicy.default(), index,
+                     x_qp=x_qp, w_qp=w_qp, **kw)
+
+
+def burst(xs, n, qos, start=0):
+    return [QosRequest(start + i, xs[i % len(xs)], qos=qos)
+            for i in range(n)]
+
+
+# ------------------------------------------------------------------ policy
+
+def test_policy_default_is_strict_to_loose():
+    pol = QosPolicy.default()
+    assert pol.names[0] == "exact"
+    bounds = [pol.budget(n).bound for n in pol.names]
+    assert bounds == sorted(bounds)
+    assert bounds[0] == 0.0
+
+
+def test_policy_rejects_disordered_budgets():
+    with pytest.raises(ValueError):
+        QosPolicy(budgets=(("loose", QosBudget(bound=1e-2)),
+                           ("tight", QosBudget(bound=1e-4))))
+    with pytest.raises(ValueError):
+        QosPolicy(budgets=(("a", QosBudget()), ("a", QosBudget())))
+    with pytest.raises(ValueError):
+        QosPolicy(budgets=())
+
+
+def test_policy_effective_clamps_at_loosest():
+    pol = QosPolicy.default()
+    name, budget = pol.effective("exact", 1)
+    assert name == pol.names[1]
+    name, _ = pol.effective("throughput", 99)
+    assert name == "throughput"  # already loosest: demotion saturates
+    name, _ = pol.effective("exact", 0)
+    assert name == "exact"
+
+
+def test_selection_deterministic_on_golden_fixture(index):
+    """The committed fixture + default policy resolve to the truncation
+    ladder, one distinct rung per class -- and do so on every call."""
+    pol = QosPolicy.default()
+    table = {n: e.name for n, e in
+             pol.selection_table(index, w=8, signed=True).items()}
+    assert table == {"exact": "exact_w8", "high": "trunc3_w8",
+                     "balanced": "trunc6_w8", "throughput": "trunc9_w8"}
+    again = {n: e.name for n, e in
+             pol.selection_table(index, w=8, signed=True).items()}
+    assert again == table
+
+
+def test_selection_pdp_monotone_across_classes(index):
+    """Looser class -> cheaper arithmetic, strictly, on the fixture."""
+    pol = QosPolicy.default()
+    entries = list(pol.selection_table(index).values())
+    pdps = [e.pdp_fj for e in entries]
+    assert all(a > b for a, b in zip(pdps, pdps[1:]))
+
+
+def test_fixture_matches_fresh_synthesis(index):
+    """The committed container replays the in-process ladder bit-exactly
+    (genome + LUT), so selection tests pin real on-disk state."""
+    fresh = {e.name: e for e in synthetic_ladder(w=8, signed=True)}
+    assert set(fresh) == {e.name for e in index.entries}
+    for e in index.entries:
+        f = fresh[e.name]
+        np.testing.assert_array_equal(e.lut, f.lut)
+        np.testing.assert_array_equal(e.nodes, f.nodes)
+        np.testing.assert_array_equal(e.outs, f.outs)
+        assert e.profile["wmed"] == pytest.approx(f.profile["wmed"])
+
+
+# ------------------------------------------------------------------- cache
+
+def test_digest_covers_function_not_name(index):
+    import dataclasses
+    a, b = index.entries[0], index.entries[1]
+    renamed = dataclasses.replace(a, name="totally_different",
+                                  provenance=b.provenance)
+    assert entry_digest(renamed) == entry_digest(a)
+    assert entry_digest(a) != entry_digest(b)
+
+
+def test_cache_single_compile_per_entry(index):
+    c = Counters()
+    cache = VariantCache(counters=c)
+    a, b = index.entries[0], index.entries[1]
+    m1 = cache.mac(a)
+    m2 = cache.mac(a)
+    assert m1 is m2
+    cache.mac(b)
+    assert c.get("cache.compile") == 2.0
+    assert c.get("cache.hit") == 1.0
+    assert len(cache) == 2
+
+
+def test_cache_lru_eviction(index):
+    c = Counters()
+    cache = VariantCache(capacity=1, counters=c)
+    a, b = index.entries[0], index.entries[1]
+    cache.mac(a)
+    cache.mac(b)            # evicts a
+    assert c.get("cache.evict") == 1.0
+    cache.mac(a)            # recompile after eviction
+    assert c.get("cache.compile") == 3.0
+    assert len(cache) == 1
+
+
+def test_cache_forward_runs_the_variant(index, tiny):
+    params, forward, xs, x_qp, w_qp = tiny
+    c = Counters()
+    cache = VariantCache(counters=c)
+    exact = next(e for e in index.entries if e.name == "exact_w8")
+    y1 = np.asarray(cache.forward(exact, forward, params, xs[:4],
+                                  x_qp, w_qp))
+    y2 = np.asarray(cache.forward(exact, forward, params, xs[:4],
+                                  x_qp, w_qp))
+    np.testing.assert_array_equal(y1, y2)
+    assert y1.shape == (4, 3)
+    assert c.get("cache.compile") == 1.0
+
+
+# ------------------------------------------------------------------ engine
+
+def test_engine_rejects_unknown_class(index, tiny):
+    eng = make_engine(index, tiny)
+    with pytest.raises(KeyError):
+        eng.submit(QosRequest(0, np.zeros(4, np.float32), qos="bogus"))
+
+
+def test_engine_serves_all_and_counts(index, tiny):
+    _, _, xs, _, _ = tiny
+    eng = make_engine(index, tiny, high_watermark=10 ** 6)
+    reqs = (burst(xs, 6, "exact") + burst(xs, 6, "balanced", 6)
+            + burst(xs, 6, "throughput", 12))
+    done = eng.run(reqs)
+    assert len(done) == 18 and eng.pending() == 0
+    assert all(r.pred is not None for r in done)
+    m = eng.metrics()
+    assert m["qos.served.exact"] == 6.0
+    assert m["qos.served.balanced"] == 6.0
+    assert m["qos.served.throughput"] == 6.0
+    # no pressure: nobody demoted, zero drift
+    assert m.get("qos.downshift.events", 0.0) == 0.0
+    for cls in ("exact", "balanced", "throughput"):
+        assert m.get(f"qos.drift.{cls}", 0.0) == 0.0
+        assert m.get(f"qos.demoted.{cls}", 0.0) == 0.0
+    assert {r.served_as for r in done} == {"exact", "balanced",
+                                           "throughput"}
+
+
+def test_engine_single_compile_per_distinct_entry(index, tiny):
+    _, _, xs, _, _ = tiny
+    eng = make_engine(index, tiny, high_watermark=10 ** 6)
+    for cls in QosPolicy.default().names:
+        eng.run(burst(xs, 8, cls))
+    distinct = len(set(eng.selection(0).values()))
+    assert distinct == 4
+    assert eng.metrics()["cache.compile"] == float(distinct)
+    # a second wave hits only the cache
+    for cls in QosPolicy.default().names:
+        eng.run(burst(xs, 8, cls, 100))
+    assert eng.metrics()["cache.compile"] == float(distinct)
+
+
+def test_downshift_hysteresis_unimodal(index, tiny):
+    """One burst, then drain: the level trace must rise, peak, and fall
+    without ever oscillating, and transitions respect the dwell."""
+    _, _, xs, _, _ = tiny
+    eng = make_engine(index, tiny, batch=4, high_watermark=12,
+                      low_watermark=5, dwell=2)
+    eng.submit_many(burst(xs, 40, "exact"))
+    trace = [eng.downshift]  # level before the first step (0)
+    while eng.pending():
+        eng.step()
+        trace.append(eng.downshift)
+    assert max(trace) >= 1  # pressure actually triggered demotion
+    peak = trace.index(max(trace))
+    rising, falling = trace[:peak + 1], trace[peak:]
+    assert all(a <= b for a, b in zip(rising, rising[1:]))
+    assert all(a >= b for a, b in zip(falling, falling[1:]))
+    # dwell: consecutive transitions at least `dwell` steps apart
+    changes = [i for i in range(1, len(trace))
+               if trace[i] != trace[i - 1]]
+    assert all(b - a >= 2 for a, b in zip(changes, changes[1:]))
+    m = eng.metrics()
+    assert m["qos.downshift.events"] == float(
+        sum(1 for i in changes if trace[i] > trace[i - 1]))
+    assert m.get("qos.downshift.recoveries", 0.0) == float(
+        sum(1 for i in changes if trace[i] < trace[i - 1]))
+
+
+def test_drift_accounting_under_demotion(index, tiny):
+    """Demoted batches accrue drift = n * (served - nominal) profile
+    error; the exact class's nominal error is 0, so its drift equals the
+    served entries' error mass exactly."""
+    _, _, xs, _, _ = tiny
+    eng = make_engine(index, tiny, batch=4, high_watermark=8,
+                      low_watermark=4, dwell=1)
+    done = eng.run(burst(xs, 24, "exact"))
+    m = eng.metrics()
+    demoted = [r for r in done if r.served_as != "exact"]
+    assert demoted  # pressure demoted at least one batch
+    assert m["qos.demoted.exact"] == float(len(demoted))
+    # reconstruct expected drift from the served entries' profiles
+    prof = {e.name: e.profile["wmed"] for e in index.entries}
+    expect = sum(prof[r.entry_name] for r in done)
+    assert m["qos.drift.exact"] == pytest.approx(expect)
+    assert m["qos.err_sum_nominal.exact"] == 0.0
+    assert m["qos.err_sum.exact"] == pytest.approx(expect)
+
+
+def test_demoted_error_stays_within_demoted_budget(index, tiny):
+    """Load sheds into *bounded* error: every served entry satisfies the
+    budget of the class it was served as (the policy's relaxation)."""
+    _, _, xs, _, _ = tiny
+    eng = make_engine(index, tiny, batch=4, high_watermark=8,
+                      low_watermark=4, dwell=1)
+    done = eng.run(burst(xs, 24, "exact"))
+    pol = QosPolicy.default()
+    prof = {e.name: e.profile for e in index.entries}
+    for r in done:
+        b = pol.budget(r.served_as)
+        assert prof[r.entry_name][b.metric] <= b.bound
+        if b.wce_cap is not None:
+            assert prof[r.entry_name]["wce"] <= b.wce_cap
+
+
+def test_engine_watermark_validation(index, tiny):
+    with pytest.raises(ValueError):
+        make_engine(index, tiny, high_watermark=4, low_watermark=4)
