@@ -32,6 +32,15 @@ worst-case-error metric, ``--wce-cap`` adds the combined-constraint form of
 arxiv 2206.13077 -- with the same serial-vs-batched parity obligations; CI
 exercises one non-WMED objective so that path stays green.
 
+Preemption tolerance (DESIGN.md §14): ``--checkpoint-dir`` snapshots the
+batched sweep every jit block, ``--resume`` continues from the latest
+snapshot, ``--fail-at GEN`` injects a simulated node failure -- in every
+case the serial-vs-batched parity assert doubles as the genome-exactness
+proof.  The report's ``checkpoint`` section measures the snapshot cost
+against the steady block time; ``perf_gate.py`` holds its
+``overhead_frac`` under 5% (the acceptance bound for the default
+1-save-per-block interval).
+
 Full mode: 8 paper levels x 2 repeats x 40 generations (expected >= 3x on
 a 2-core CPU container; the margin grows with lanes and with real XLA:TPU
 backends where per-dispatch overhead is higher).
@@ -41,6 +50,8 @@ import argparse
 import dataclasses
 import json
 import os
+import shutil
+import tempfile
 import time
 
 # Force a multi-device host platform for the lane-sharded engine before
@@ -57,8 +68,10 @@ import jax.numpy as jnp                                       # noqa: E402
 import numpy as np                                            # noqa: E402
 
 from benchmarks.common import emit                            # noqa: E402
+from repro.core import checkpoint as evo_ckpt                 # noqa: E402
 from repro.core import cgp, distributions as dist, evolve as ev  # noqa: E402
 from repro.core import netlist as nl                          # noqa: E402
+from repro.train.fault import FailureInjector, StepMonitor    # noqa: E402
 
 
 def _front_summary(results):
@@ -121,9 +134,47 @@ def _steady_ms_per_lane_gen(cfg: ev.EvolveConfig, objective: ev.Objective,
     return best / (lanes * gens) * 1e3
 
 
+def _checkpoint_overhead(w: int, lanes: int, gens: int,
+                         block_ms: float, iters: int = 5) -> dict:
+    """Cost of one sweep snapshot vs one jit block at the default interval.
+
+    Times ``core.checkpoint.save_sweep`` on a representative lane state
+    (best-of-N, same atomic manifest+rename path the engine uses) and
+    reports it as a fraction of the steady compile-excluded block time --
+    the number the ≤5% overhead acceptance criterion (perf gate
+    ``ckpt_overhead_frac``) is stated in.
+    """
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(w))
+    gs = cgp.tile_genome(g0, lanes)
+    state = {
+        "nodes": np.asarray(gs.nodes), "outs": np.asarray(gs.outs),
+        "parent_f": np.zeros(lanes, np.float32),
+        "keys": np.zeros((lanes, 2), np.uint32),
+        "hist": np.zeros((8, lanes, 2), np.float32),
+        "error": np.zeros(lanes, np.float32),
+        "area": np.zeros(lanes, np.float32),
+    }
+    d = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        best = float("inf")
+        for i in range(iters):
+            t0 = time.time()
+            evo_ckpt.save_sweep(d, i + 1, state, "bench-digest")
+            best = min(best, time.time() - t0)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    save_ms = best * 1e3
+    return {"save_ms": save_ms, "block_ms": block_ms,
+            "block_lanes": lanes, "block_generations": gens,
+            "interval_blocks": 1,
+            "overhead_frac": save_ms / block_ms if block_ms > 0 else 0.0}
+
+
 def run(smoke: bool = False, strict: bool = False,
         objective: str = "wmed", wce_cap: float | None = None,
-        json_path: str | None = None):
+        json_path: str | None = None,
+        checkpoint_dir: str | None = None, resume: bool = False,
+        fail_at: int | None = None):
     if smoke:
         levels, repeats, gens, block = ev.PAPER_LEVELS[:4], 1, 20, 20
         steady_lanes, steady_gens = 4, 20
@@ -140,10 +191,17 @@ def run(smoke: bool = False, strict: bool = False,
     serial = ev.pareto_sweep(cfg, pmf, levels=levels, repeats=repeats)
     t_serial = time.time() - t0
 
+    injector = (FailureInjector(fail_at_steps=(fail_at,))
+                if fail_at is not None else None)
+    monitor = StepMonitor()
     t0 = time.time()
     batched = ev.pareto_sweep_batched(cfg, pmf, levels=levels,
-                                      repeats=repeats)
+                                      repeats=repeats,
+                                      checkpoint_dir=checkpoint_dir,
+                                      resume=resume, injector=injector,
+                                      monitor=monitor)
     t_batched = time.time() - t0
+    fault = batched[0].fault
 
     # ---- parity: the batched sweep must reproduce the serial front, and
     # the fused fitness must reach the unfused path's genomes.  Both
@@ -167,6 +225,11 @@ def run(smoke: bool = False, strict: bool = False,
         dataclasses.replace(cfg, fused=False), obj, steady_lanes,
         steady_gens)
 
+    # ---- checkpoint overhead at the default interval (1 save / block) ----
+    ms_best = min(ms_fused, ms_unfused)
+    ckpt = _checkpoint_overhead(cfg.w, steady_lanes, steady_gens,
+                                ms_best * steady_lanes * steady_gens)
+
     speedup = t_serial / t_batched
     total_gens = lanes * gens
     emit("bench_batched_sweep/serial", t_serial * 1e6,
@@ -179,6 +242,12 @@ def run(smoke: bool = False, strict: bool = False,
          f"lanes={steady_lanes};ms_per_lane_gen={ms_fused:.3f}")
     emit("bench_batched_sweep/steady_unfused", ms_unfused * 1e3,
          f"lanes={steady_lanes};ms_per_lane_gen={ms_unfused:.3f}")
+    emit("bench_batched_sweep/checkpoint", ckpt["save_ms"] * 1e3,
+         f"save_ms={ckpt['save_ms']:.3f};"
+         f"overhead_frac={ckpt['overhead_frac']:.4f};"
+         f"retries={fault.get('retries', 0)};"
+         f"saves={fault.get('checkpoint_saves', 0)};"
+         f"stragglers={fault.get('monitor', {}).get('stragglers', 0)}")
     emit("bench_batched_sweep/summary", 0.0,
          f"speedup={speedup:.2f}x;front_parity=ok;fused_parity=ok;"
          f"objective={objective};levels={len(levels)};repeats={repeats};"
@@ -209,6 +278,8 @@ def run(smoke: bool = False, strict: bool = False,
                 "generations": steady_gens,
             },
             "speedup_fused_vs_unfused": ms_unfused / ms_fused,
+            "checkpoint": ckpt,
+            "fault": fault,
             "parity": {"serial_vs_batched": "ok", "fused_vs_unfused": "ok"},
             "front": [{"level": lvl, metric: err, "area": ar}
                       for lvl, err, ar in _front_summary(batched)],
@@ -242,6 +313,19 @@ if __name__ == "__main__":
                     default=None, metavar="PATH",
                     help="write the machine-readable report (default "
                          "BENCH_evolve.json)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="snapshot the batched sweep's state here every "
+                         "jit block (atomic manifest + LATEST rename)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the batched sweep from --checkpoint-dir "
+                         "(bit-identical continuation; the serial-parity "
+                         "assert then proves genome-exactness)")
+    ap.add_argument("--fail-at", type=int, default=None, metavar="GEN",
+                    help="inject a simulated node failure at this "
+                         "generation; the retry-with-restore loop must "
+                         "recover to the same front (parity asserted)")
     args = ap.parse_args()
     run(smoke=args.smoke, strict=args.strict, objective=args.objective,
-        wce_cap=args.wce_cap, json_path=args.json)
+        wce_cap=args.wce_cap, json_path=args.json,
+        checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+        fail_at=args.fail_at)

@@ -52,6 +52,28 @@ GATES = (
      lambda r: r["speedup_fused_vs_unfused"], True),
 )
 
+# Absolute bounds on the current report alone (no baseline needed):
+# (label, extractor, max_value).  The checkpoint-overhead bound is the
+# preemption-tolerance acceptance criterion -- one snapshot per jit block
+# must cost <= 5% of the block itself (env REPRO_CKPT_OVERHEAD_MAX).
+ABS_GATES = (
+    ("ckpt_overhead_frac",
+     lambda r: r["checkpoint"]["overhead_frac"],
+     float(os.environ.get("REPRO_CKPT_OVERHEAD_MAX", "0.05"))),
+)
+
+
+def check_abs(current: dict) -> list:
+    """Return [(label, cur, bound, ok)] for absolute gates present."""
+    rows = []
+    for label, get, bound in ABS_GATES:
+        try:
+            cur = float(get(current))
+        except (KeyError, TypeError):
+            continue
+        rows.append((label, cur, bound, cur <= bound))
+    return rows
+
 
 def check(current: dict, baseline: dict, tol: float) -> list:
     """Return [(label, base, cur, ratio, ok)] for every gated metric.
@@ -108,9 +130,15 @@ def main() -> int:
         if ok and ratio < 0.70:
             print(f"  {label:28s} improved >30% -- consider refreshing "
                   f"the committed baseline")
-    if failed:
+    abs_rows = check_abs(current)
+    abs_failed = [r for r in abs_rows if not r[3]]
+    for label, cur, bound, ok in abs_rows:
+        flag = "ok" if ok else "OVER BOUND"
+        print(f"  {label:28s} cur={cur:10.4f} bound={bound:7.4f}  {flag}")
+    if failed or abs_failed:
         print(f"perf_gate: FAILED ({len(failed)}/{len(rows)} metrics "
-              f"beyond {args.tol:.0%})")
+              f"beyond {args.tol:.0%}, {len(abs_failed)}/{len(abs_rows)} "
+              f"absolute bounds exceeded)")
         return 1
     print("perf_gate: passed")
     return 0

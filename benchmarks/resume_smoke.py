@@ -1,0 +1,143 @@
+"""SIGKILL-and-resume smoke: real process death, genome-exact recovery.
+
+The kill/resume parity *tests* (tests/test_evolve_checkpoint.py) inject
+failures as exceptions -- the process survives and restores in-memory.
+This driver proves the stronger property the fleet actually needs: a
+sweep process killed with SIGKILL (no handlers, no atexit, nothing
+flushed) is resumed by a *fresh* process from its on-disk checkpoints to
+the bit-identical Pareto front of an uninterrupted run.
+
+Protocol (the parent orchestrates, DESIGN.md §14):
+
+1. run the reference sweep uninterrupted, in-process;
+2. spawn a child process running the same sweep with ``--checkpoint-dir``;
+   the child patches ``core.checkpoint.save_sweep`` to SIGKILL itself
+   right after the snapshot for ``--kill-after-block`` commits -- death
+   mid-flight, after a durable checkpoint, like a preemption;
+3. assert the child died by SIGKILL (rc -9) and that LATEST points at the
+   expected block;
+4. resume in-process (``resume=True``) and assert the front is
+   genome-exact vs the reference: same nodes, same output genes, same
+   error/area scalars, same per-block history.
+
+CI runs this as the ``resume-smoke`` job and uploads the checkpoint
+directory as an artifact::
+
+    PYTHONPATH=src:. python benchmarks/resume_smoke.py \
+        [--checkpoint-dir DIR] [--kill-after-block N]
+"""
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+# Pin the host platform shape *before* jax initializes so the parent, the
+# child, and the resumed run all shard lanes identically (parity demands
+# one program shape end to end).  Respect an operator-provided override.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count=2".strip())
+
+import numpy as np                                            # noqa: E402
+
+from repro.core import checkpoint as evo_ckpt                 # noqa: E402
+from repro.core import cgp, distributions as dist             # noqa: E402
+from repro.core import evolve as ev                           # noqa: E402
+from repro.core import netlist as nl                          # noqa: E402
+
+# Tiny but multi-block: 3 jit blocks so a kill after block 1 leaves real
+# work to replay, at a width the CPU container sweeps in seconds.
+W, GENS, BLOCK, SEED = 4, 60, 20, 7
+LEVELS = (0.01, 0.03)
+
+
+def _cfg() -> ev.BatchedEvolveConfig:
+    return ev.BatchedEvolveConfig(w=W, signed=False, generations=GENS,
+                                  gens_per_jit_block=BLOCK, seed=SEED,
+                                  levels=LEVELS, repeats=1)
+
+
+def _run(ckpt_dir: str | None = None,
+         resume: bool = False) -> ev.BatchedEvolveResult:
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(W))
+    return ev.evolve_batched(_cfg(), g0, dist.half_normal_pmf(W),
+                             checkpoint_dir=ckpt_dir, resume=resume)
+
+
+def child(ckpt_dir: str, kill_after_block: int) -> None:
+    """Run the sweep; SIGKILL ourselves once the target snapshot lands."""
+    real = evo_ckpt.save_sweep
+
+    def kamikaze(root, block, state, digest, **kw):
+        path = real(root, block, state, digest, **kw)
+        if block >= kill_after_block:
+            os.kill(os.getpid(), signal.SIGKILL)  # no cleanup, no flush
+        return path
+
+    evo_ckpt.save_sweep = kamikaze
+    _run(ckpt_dir)
+    raise SystemExit(f"child survived the whole sweep: kill-after-block "
+                     f"{kill_after_block} never fired")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="checkpoint directory (default: a fresh tempdir; "
+                         "CI passes one so it can be uploaded)")
+    ap.add_argument("--kill-after-block", type=int, default=1,
+                    help="SIGKILL the child right after this block's "
+                         "snapshot commits (default 1 of 3)")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    ckpt_dir = args.checkpoint_dir or tempfile.mkdtemp(prefix="resume_smoke_")
+    if args.child:
+        child(ckpt_dir, args.kill_after_block)
+        return 1  # unreachable
+
+    n_blocks = GENS // BLOCK
+    if not 1 <= args.kill_after_block < n_blocks:
+        raise SystemExit(f"--kill-after-block must be in [1, {n_blocks})")
+
+    print(f"resume_smoke: reference sweep ({n_blocks} blocks, "
+          f"{len(LEVELS)} lanes, w={W})")
+    ref = _run()
+
+    cmd = [sys.executable, os.path.abspath(__file__), "--child",
+           "--checkpoint-dir", ckpt_dir,
+           "--kill-after-block", str(args.kill_after_block)]
+    print(f"resume_smoke: child sweep, SIGKILL after block "
+          f"{args.kill_after_block}'s snapshot")
+    proc = subprocess.run(cmd, env=os.environ.copy())
+    assert proc.returncode == -signal.SIGKILL, \
+        f"child exited rc={proc.returncode}, expected SIGKILL " \
+        f"({-signal.SIGKILL})"
+    latest = evo_ckpt.latest_block(ckpt_dir)
+    assert latest == args.kill_after_block, \
+        f"LATEST points at block {latest}, expected {args.kill_after_block}"
+
+    print(f"resume_smoke: resuming from {ckpt_dir} (block {latest})")
+    res = _run(ckpt_dir, resume=True)
+    assert res.fault.get("resumed_at_block") == args.kill_after_block
+
+    assert np.array_equal(ref.genomes.nodes, res.genomes.nodes), \
+        "resumed front genomes differ from the uninterrupted run"
+    assert np.array_equal(ref.genomes.outs, res.genomes.outs), \
+        "resumed front output genes differ from the uninterrupted run"
+    assert np.array_equal(ref.error, res.error), "error scalars differ"
+    assert np.array_equal(ref.area, res.area), "area scalars differ"
+    assert np.array_equal(ref.history, res.history), \
+        "per-block history differs"
+    print(f"resume_smoke: PASS -- SIGKILL at block {args.kill_after_block}"
+          f"/{n_blocks}, resumed genome-exact "
+          f"(checkpoints: {ckpt_dir})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,242 @@
+"""Preemption-tolerant evolution: snapshot/resume of the batched sweep.
+
+The paper's CGP search runs for hours per (level, repeat) configuration
+and the fleet-scale roadmap wants week-long multi-host sweeps -- a single
+preemption must not lose the run.  This module is the durability layer
+under ``core.evolve`` (DESIGN.md §14):
+
+* **What is snapshotted** -- the *complete* loop-carried state of the
+  batched engine at a block boundary: per-lane parents (genome nodes +
+  output genes), per-lane parent fitness, per-lane RNG block keys, the
+  per-block best-(error, area) history accumulated so far, and the final
+  (error, area) scoring of the snapshotted parents.  The generation step
+  is deterministic given that state, so a run killed at any generation
+  and resumed from its last checkpoint replays the remaining blocks
+  **bit-identically** -- the resumed Pareto front is genome-exact vs an
+  uninterrupted run (``tests/test_evolve_checkpoint.py``).
+
+* **How it is written** -- through ``train/checkpoint``'s atomic layout:
+  one ``step_<block>`` directory per snapshot (manifest + one ``.npy``
+  per leaf), committed by an atomic rename of the ``LATEST`` pointer, so
+  a crash mid-save leaves the previous checkpoint intact.
+
+* **The config-digest guard** -- every snapshot carries a SHA-256 digest
+  of everything that shapes the search trajectory: the engine config
+  (width, signedness, lambda, h, generations, block length, allowed
+  gate set, eval backend, the *resolved* fused-pipeline choice), the
+  objective (metric, constraint bounds, eval domain), the per-lane
+  levels and RNG seeds, and the actual evaluation context bytes (packed
+  input planes are implied by exact/weights/mask, which are hashed
+  directly).  ``load_sweep`` refuses a checkpoint whose digest does not
+  match the resuming run's -- resuming a WMED sweep under a WCE
+  objective, a different seed ladder, or a different distribution is a
+  silent-corruption bug, not a recovery.
+
+Failure model: fail-stop (preemption, OOM-kill, node loss).  Librarian
+state (the component library) has its own crash-safety story in
+``library/schema.py``/``writer.py``; this module only owns search state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import shutil
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.train import checkpoint as train_ckpt
+
+# Bump on any change to the snapshot tree layout or digest recipe.
+SWEEP_CKPT_VERSION = 1
+
+# Leaf names of the snapshot tree (flat dict -> train/checkpoint paths).
+_LEAVES = ("nodes", "outs", "parent_f", "keys", "hist", "error", "area")
+
+
+class SweepCheckpointError(RuntimeError):
+    """Base class for sweep checkpoint failures."""
+
+
+class SweepDigestError(SweepCheckpointError):
+    """Checkpoint was written under a different search configuration
+    (objective, constraints, seeds, distribution, engine config) than the
+    run trying to resume it.  Resuming would not be bit-identical to any
+    uninterrupted run -- refuse instead of silently corrupting the sweep."""
+
+
+class SweepCheckpointCorruptError(SweepCheckpointError):
+    """Checkpoint exists but cannot be read back (truncated manifest,
+    missing leaf, version mismatch).  Fall back to an earlier step or a
+    fresh start."""
+
+
+# ------------------------------------------------------------------ digest
+
+def config_digest(*, cfg_fields: dict, metric: str,
+                  bias_frac, wce_cap, domain: str, fused: bool,
+                  lane_levels: np.ndarray, lane_seeds: np.ndarray,
+                  exact: np.ndarray, weights: np.ndarray,
+                  mask: Optional[np.ndarray]) -> str:
+    """SHA-256 over everything that determines the search trajectory.
+
+    ``cfg_fields`` is the EvolveConfig field dict minus the fields already
+    captured elsewhere (``objective`` is folded into metric/constraint/
+    domain arguments; ``fused`` must be passed *resolved*, because
+    ``fused=None`` resolves per backend and a CPU-written checkpoint must
+    not silently resume through a different fitness pipeline).  The eval
+    context arrays (``exact``/``weights``/``mask``) are hashed by value:
+    they pin the distribution and domain sample bytes the fitness actually
+    saw, which subsumes pmf/vec_weights/sample-seed provenance.
+    """
+    h = hashlib.sha256()
+    h.update(f"v{SWEEP_CKPT_VERSION};".encode())
+    for key in sorted(cfg_fields):
+        if key in ("objective", "fused"):
+            continue
+        h.update(f"{key}={cfg_fields[key]!r};".encode())
+    h.update(f"metric={metric};bias_frac={bias_frac!r};"
+             f"wce_cap={wce_cap!r};domain={domain};"
+             f"fused={bool(fused)};".encode())
+    h.update(np.ascontiguousarray(lane_levels, np.float32).tobytes())
+    h.update(np.ascontiguousarray(lane_seeds, np.int64).tobytes())
+    h.update(np.ascontiguousarray(exact).tobytes())
+    h.update(np.ascontiguousarray(weights).tobytes())
+    if mask is not None:
+        h.update(np.ascontiguousarray(mask).tobytes())
+    return h.hexdigest()
+
+
+# ----------------------------------------------------------------- save/load
+
+def _tree_path(name: str) -> str:
+    """The train/checkpoint manifest path of a flat-dict leaf."""
+    return f"['{name}']"
+
+
+def save_sweep(root: str, block: int, state: Dict[str, np.ndarray],
+               digest: str, *, keep_last: int = 3) -> str:
+    """Snapshot the sweep state completed through ``block`` blocks.
+
+    ``state`` maps the ``_LEAVES`` names to host arrays; the write goes
+    through ``train/checkpoint.save`` (atomic manifest + LATEST rename),
+    with the digest/version/block stamped into the manifest's extra
+    metadata.  Returns the committed step directory.
+    """
+    missing = [k for k in _LEAVES if k not in state]
+    if missing:
+        raise ValueError(f"sweep snapshot missing leaves: {missing}")
+    tree = {k: np.asarray(state[k]) for k in _LEAVES}
+    return train_ckpt.save(root, block, tree, keep_last=keep_last,
+                           extra={"kind": "evolve-sweep",
+                                  "version": SWEEP_CKPT_VERSION,
+                                  "digest": digest, "block": int(block)})
+
+
+def latest_block(root: str) -> Optional[int]:
+    """Last committed block count, or None when no checkpoint exists."""
+    if not os.path.isdir(root):
+        return None
+    return train_ckpt.latest_step(root)
+
+
+def load_sweep(root: str, digest: str,
+               block: Optional[int] = None
+               ) -> Tuple[int, Dict[str, np.ndarray]]:
+    """Restore ``(block, state)`` from the latest (or given) snapshot.
+
+    Typed failure surface: ``SweepCheckpointCorruptError`` for truncated
+    manifests / missing leaves / foreign or future snapshot versions,
+    ``SweepDigestError`` when the checkpoint was written under a different
+    search configuration than ``digest`` describes.
+    """
+    if block is None:
+        block = latest_block(root)
+        if block is None:
+            raise SweepCheckpointError(f"no sweep checkpoint under {root}")
+    try:
+        meta, arrays = train_ckpt.load_step(root, block)
+    except train_ckpt.CheckpointError as e:
+        raise SweepCheckpointCorruptError(str(e)) from e
+    extra = meta.get("extra") or {}
+    if extra.get("kind") != "evolve-sweep":
+        raise SweepCheckpointCorruptError(
+            f"{root} step {block}: not an evolve-sweep checkpoint "
+            f"(kind={extra.get('kind')!r})")
+    if int(extra.get("version", -1)) != SWEEP_CKPT_VERSION:
+        raise SweepCheckpointCorruptError(
+            f"{root} step {block}: snapshot version "
+            f"{extra.get('version')!r} unsupported (expected "
+            f"{SWEEP_CKPT_VERSION})")
+    if extra.get("digest") != digest:
+        raise SweepDigestError(
+            f"{root} step {block}: checkpoint was written under a "
+            f"different search configuration (digest "
+            f"{str(extra.get('digest'))[:12]}... vs this run's "
+            f"{digest[:12]}...); refusing to resume -- the resumed front "
+            "would not match any uninterrupted run")
+    state = {}
+    for name in _LEAVES:
+        path = _tree_path(name)
+        if path not in arrays:
+            raise SweepCheckpointCorruptError(
+                f"{root} step {block}: snapshot leaf {name!r} missing")
+        state[name] = arrays[path]
+    return int(block), state
+
+
+def reset_dir(root: str) -> None:
+    """Clear prior sweep snapshots so a fresh (non-resume) run cannot be
+    confused with whatever ran in the directory before it."""
+    if not os.path.isdir(root):
+        return
+    for d in os.listdir(root):
+        full = os.path.join(root, d)
+        if d.startswith("step_") or d.startswith(".tmp_step_"):
+            shutil.rmtree(full, ignore_errors=True)
+        elif d == "LATEST" or d == ".LATEST_tmp":
+            try:
+                os.remove(full)
+            except OSError:
+                pass
+
+
+# ------------------------------------------------------- engine-facing API
+
+@dataclasses.dataclass
+class SweepCheckpointer:
+    """The engine's handle on one checkpoint directory + config digest.
+
+    Built by ``evolve_batched`` once per run; owns interval policy
+    (``every`` blocks), save bookkeeping (``saves`` feeds the result's
+    fault stats), and the resume/fresh-start decision.
+    """
+
+    root: str
+    digest: str
+    every: int = 1
+    keep_last: int = 3
+    saves: int = 0
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"checkpoint interval must be >= 1 block, "
+                             f"got {self.every}")
+
+    def due(self, block: int, n_blocks: int) -> bool:
+        """Save after ``block`` blocks? (always at the final block)"""
+        return block == n_blocks or block % self.every == 0
+
+    def save(self, block: int, state: Dict[str, np.ndarray]) -> str:
+        path = save_sweep(self.root, block, state, self.digest,
+                          keep_last=self.keep_last)
+        self.saves += 1
+        return path
+
+    def resume_state(self) -> Optional[Tuple[int, Dict[str, np.ndarray]]]:
+        """Latest restorable state, or None when the dir has none."""
+        if latest_block(self.root) is None:
+            return None
+        return load_sweep(self.root, self.digest)

@@ -42,6 +42,18 @@ Per-lane RNG streams are derived exactly as the historical serial driver
 did (seed -> PRNGKey -> per-block split -> per-generation split), so a lane
 of a batched run is bit-identical to a serial run with the same seed --
 ``tests/test_evolve_batched.py`` locks this in.
+
+**Preemption tolerance** (DESIGN.md §14): ``checkpoint_dir=`` snapshots
+the full loop-carried state (parents, fitness, RNG keys, history, final
+scores) at block boundaries through ``core.checkpoint``'s atomic layout;
+``resume=True`` restores and continues bit-identically -- a run killed at
+any generation resumes to a genome-exact Pareto front vs an uninterrupted
+run.  A config digest guards resume: a checkpoint written under a
+different objective/constraints/seed ladder/distribution is refused with
+``SweepDigestError``.  ``injector=``/``monitor=`` wire
+``train/fault.FailureInjector``/``StepMonitor`` in as a bounded
+retry-with-restore loop (exponential backoff, straggler accounting in the
+result's ``fault`` block).
 """
 
 from __future__ import annotations
@@ -58,12 +70,14 @@ import numpy as np
 
 from repro.core import cellcost as cc
 from repro.core import cgp as cgp_mod
+from repro.core import checkpoint as evo_ckpt
 from repro.core import distributions as dist
 from repro.core import netlist as nl_mod
 from repro.core import objective as obj_mod
 from repro.core import selection as sel_mod
 from repro.core import wmed as wmed_mod
 from repro.core.cgp import Genome
+from repro.train.fault import FailureInjector, SimulatedFailure, StepMonitor
 from repro.core.objective import (  # noqa: F401  (re-exported API surface)
     Constraints, ErrorMetric, EvalDomain, ExhaustiveDomain, LaneConstraints,
     Objective, SampledDomain)
@@ -163,6 +177,9 @@ class EvolveResult:
     wall_s: float
     metric: str = "wmed"  # registry name of the metric ``error`` is in
     seed: int = -1        # the lane's RNG seed (-1 = unknown/legacy)
+    # resilience accounting of the run that produced this lane (shared
+    # across lanes of one batched sweep); empty for serial runs
+    fault: dict = dataclasses.field(default_factory=dict)
 
     @property
     def wmed(self) -> float:
@@ -185,6 +202,11 @@ class BatchedEvolveResult:
     history: np.ndarray   # (G//block, L, 2) best (error, area) per block
     wall_s: float
     metric: str = "wmed"
+    # resilience accounting (DESIGN.md §14): retries taken by the
+    # retry-with-restore loop, checkpoint saves, resume origin, and the
+    # StepMonitor's observed/decisions/straggler counts when one is wired
+    # in -- benchmarks surface this block in BENCH_evolve.json.
+    fault: dict = dataclasses.field(default_factory=dict)
 
     @property
     def wmed(self) -> np.ndarray:
@@ -205,7 +227,7 @@ class BatchedEvolveResult:
             error=float(self.error[i]), area=float(self.area[i]),
             level=float(self.levels[i]), generations=self.generations,
             history=self.history[:, i, :], wall_s=self.wall_s,
-            metric=self.metric, seed=int(self.seeds[i]))
+            metric=self.metric, seed=int(self.seeds[i]), fault=self.fault)
 
 
 def _base_config(cfg: EvolveConfig) -> dict:
@@ -492,7 +514,15 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
                    pmf_x: np.ndarray | None = None, *,
                    vec_weights: np.ndarray | None = None,
                    objective: Objective | str | None = None,
-                   verbose: bool = False) -> BatchedEvolveResult:
+                   verbose: bool = False,
+                   checkpoint_dir: str | None = None,
+                   checkpoint_every: int = 1,
+                   checkpoint_keep_last: int = 3,
+                   resume: bool = False,
+                   injector: FailureInjector | None = None,
+                   monitor: StepMonitor | None = None,
+                   max_retries: int = 3,
+                   backoff_s: float = 0.0) -> BatchedEvolveResult:
     """Run ``len(cfg.levels) * cfg.repeats`` independent evolutions at once.
 
     ``seed_genome`` is either a single genome (replicated to every lane) or
@@ -504,6 +534,22 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
     for per-lane distributions.  Default is the paper's alpha = D(x)
     derived from ``pmf_x``; metrics that don't consume weights (``med``,
     ``wce``) fall back to a uniform D when no PMF is given.
+
+    **Preemption tolerance** (DESIGN.md §14): with ``checkpoint_dir`` the
+    full loop state is snapshotted every ``checkpoint_every`` blocks
+    (atomic manifest + LATEST rename; always at the final block);
+    ``resume=True`` restores the latest snapshot and continues
+    bit-identically (a digest guard refuses checkpoints written under a
+    different config/objective/seed ladder).  A fresh run (``resume``
+    False) clears prior snapshots in the directory first.  ``injector``
+    (``train/fault.FailureInjector``, generation-numbered fail steps) and
+    ``monitor`` (``StepMonitor`` over per-block wall times) drive the
+    bounded retry-with-restore loop: on a simulated failure the last
+    checkpoint -- or the initial state when none exists -- is restored and
+    the run continues, up to ``max_retries`` times with exponential
+    backoff starting at ``backoff_s``.  Real preemptions (SIGKILL) follow
+    the same path through a process restart with ``resume=True``.
+    Resilience accounting lands in ``BatchedEvolveResult.fault``.
     """
     w = cfg.w
     obj = _resolve_objective(cfg, objective)
@@ -529,41 +575,145 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
                                    objective=obj, mask=ctx.mask)
     cons = obj.constraints.lane_params(lane_levels)
 
-    if seed_genome.nodes.ndim == 2:
-        parents = cgp_mod.tile_genome(seed_genome, L)
-    else:
-        # copy (not view) the caller's stacked seed: the block donates its
-        # parent buffers, and donation must never invalidate caller arrays
-        parents = jax.tree.map(jnp.array, seed_genome)
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in lane_seeds])
-    # NaN = "unscored"; the first block call scores the seed in-program.
-    parent_f = jnp.full((L,), jnp.nan, jnp.float32)
+    n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
+    gpb = cfg.gens_per_jit_block
+
+    def init_state():
+        if seed_genome.nodes.ndim == 2:
+            p = cgp_mod.tile_genome(seed_genome, L)
+        else:
+            # copy (not view) the caller's stacked seed: the block donates
+            # its parent buffers, and donation must never invalidate
+            # caller arrays
+            p = jax.tree.map(jnp.array, seed_genome)
+        k = jnp.stack([jax.random.PRNGKey(int(s)) for s in lane_seeds])
+        # NaN = "unscored"; the first block call scores the seed in-program.
+        f = jnp.full((L,), jnp.nan, jnp.float32)
+        return p, f, k
+
+    ck = None
+    fault: dict = {}
+    if checkpoint_dir is not None:
+        # the digest pins the *resolved* fused pipeline: fused=None picks
+        # per backend, and a checkpoint must not silently resume through a
+        # different fitness pipeline on another host
+        fused_resolved = (cfg.fused if cfg.fused is not None
+                          else (metric.supports_stats and default_fused()))
+        digest = evo_ckpt.config_digest(
+            cfg_fields=_base_config(cfg), metric=metric.name,
+            bias_frac=obj.constraints.bias_frac,
+            wce_cap=obj.constraints.wce_cap,
+            domain=repr(obj.resolve_domain(w)), fused=fused_resolved,
+            lane_levels=lane_levels, lane_seeds=lane_seeds,
+            exact=np.asarray(ctx.exact), weights=np.asarray(weights),
+            mask=None if ctx.mask is None else np.asarray(ctx.mask))
+        ck = evo_ckpt.SweepCheckpointer(checkpoint_dir, digest,
+                                        every=checkpoint_every,
+                                        keep_last=checkpoint_keep_last)
+    elif resume:
+        raise ValueError("resume=True requires checkpoint_dir")
+
+    parents, parent_f, keys = init_state()
+    start_block = 0
+    hist_done = np.zeros((0, L, 2), np.float32)  # blocks restored on resume
+    e_fin = a_fin = None
+
+    def unpack(st):
+        return (Genome(jnp.asarray(st["nodes"]), jnp.asarray(st["outs"])),
+                jnp.asarray(st["parent_f"]), jnp.asarray(st["keys"]),
+                np.asarray(st["hist"], np.float32),
+                st["error"], st["area"])
+
+    if ck is not None:
+        if resume:
+            restored = ck.resume_state()  # digest-guarded (SweepDigestError)
+            if restored is not None:
+                b0, st = restored
+                parents, parent_f, keys, hist_done, e_fin, a_fin = unpack(st)
+                start_block = b0
+                fault["resumed_at_block"] = b0
+                if verbose:
+                    print(f"  resumed at generation {b0 * gpb} "
+                          f"({b0}/{n_blocks} blocks) from {checkpoint_dir}")
+        else:
+            evo_ckpt.reset_dir(checkpoint_dir)
 
     t0 = time.time()
-    # per-block history stays on-device; it is stacked and fetched in one
-    # transfer after the loop so the driver never forces a host sync per
-    # block (verbose mode still syncs explicitly to print progress)
+    # per-block history of *this process* stays on-device; it is stacked
+    # and fetched in one transfer at the end (and at checkpoint saves) so
+    # the driver never forces a host sync per block (verbose mode still
+    # syncs explicitly to print progress)
     hist_e, hist_a = [], []
-    e_fin = a_fin = None
-    n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
-    for b in range(n_blocks):
-        parents, parent_f, keys, e_last, a_last, e_fin, a_fin = block(
-            parents, parent_f, keys, weights, cons)
-        hist_e.append(e_last)
-        hist_a.append(a_last)
-        if verbose and (b % 4 == 0 or b == n_blocks - 1):
-            e_np, a_np = np.asarray(e_last), np.asarray(a_last)
-            print(f"  gen {(b + 1) * cfg.gens_per_jit_block:6d} x{L} lanes "
-                  f"{metric.name}=[{e_np.min():.5f},{e_np.max():.5f}] "
-                  f"area=[{a_np.min():8.2f},{a_np.max():8.2f}]")
-    history = np.asarray(jnp.stack(
-        [jnp.stack(hist_e), jnp.stack(hist_a)], axis=-1))  # (B, L, 2)
+
+    def hist_so_far():
+        if not hist_e:
+            return hist_done
+        new = np.asarray(jnp.stack(
+            [jnp.stack(hist_e), jnp.stack(hist_a)], axis=-1))
+        return np.concatenate([hist_done, new], axis=0)
+
+    def snapshot():
+        return {"nodes": np.asarray(jax.device_get(parents.nodes)),
+                "outs": np.asarray(jax.device_get(parents.outs)),
+                "parent_f": np.asarray(jax.device_get(parent_f)),
+                "keys": np.asarray(jax.device_get(keys)),
+                "hist": hist_so_far(),
+                "error": np.asarray(e_fin), "area": np.asarray(a_fin)}
+
+    retries = 0
+    b = start_block
+    while b < n_blocks:
+        try:
+            if injector is not None:
+                # generations are 1-numbered; block b covers this span
+                injector.check_span(b * gpb + 1, (b + 1) * gpb + 1)
+            t_blk = time.time()
+            parents, parent_f, keys, e_last, a_last, e_fin, a_fin = block(
+                parents, parent_f, keys, weights, cons)
+            if monitor is not None:
+                jax.block_until_ready(a_fin)
+                monitor.observe(b, time.time() - t_blk)
+            hist_e.append(e_last)
+            hist_a.append(a_last)
+            b += 1
+            if ck is not None and ck.due(b, n_blocks):
+                ck.save(b, snapshot())
+            if verbose and ((b - 1) % 4 == 0 or b == n_blocks):
+                e_np, a_np = np.asarray(e_last), np.asarray(a_last)
+                print(f"  gen {b * gpb:6d} x{L} lanes "
+                      f"{metric.name}=[{e_np.min():.5f},{e_np.max():.5f}] "
+                      f"area=[{a_np.min():8.2f},{a_np.max():8.2f}]")
+        except SimulatedFailure as e:
+            retries += 1
+            if retries > max_retries:
+                raise
+            if verbose:
+                print(f"  {e}; restore+retry {retries}/{max_retries}")
+            if backoff_s > 0:
+                time.sleep(min(backoff_s * 2 ** (retries - 1), 30.0))
+            hist_e, hist_a = [], []
+            restored = ck.resume_state() if ck is not None else None
+            if restored is None:
+                # nothing durable yet: replay from the seed population
+                parents, parent_f, keys = init_state()
+                b = 0
+                hist_done = np.zeros((0, L, 2), np.float32)
+                e_fin = a_fin = None
+            else:
+                b, st = restored
+                parents, parent_f, keys, hist_done, e_fin, a_fin = unpack(st)
+
+    history = hist_so_far()
+    fault["retries"] = retries
+    fault["checkpoint_saves"] = ck.saves if ck is not None else 0
+    if monitor is not None:
+        fault["monitor"] = monitor.stats()
     return BatchedEvolveResult(
         genomes=jax.tree.map(np.asarray, parents),
         error=np.asarray(e_fin), area=np.asarray(a_fin),
         levels=lane_levels, seeds=lane_seeds,
         generations=cfg.generations, history=history,
-        wall_s=time.time() - t0, metric=metric.name)
+        wall_s=time.time() - t0, metric=metric.name, fault=fault)
 
 
 def evolve(cfg: EvolveConfig, seed_genome: Genome,
@@ -624,7 +774,15 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                          vec_weights: np.ndarray | None = None,
                          pareto_filter: bool = False,
                          objective: Objective | str | None = None,
-                         library_writer=None
+                         library_writer=None,
+                         checkpoint_dir: str | None = None,
+                         checkpoint_every: int = 1,
+                         checkpoint_keep_last: int = 3,
+                         resume: bool = False,
+                         injector: FailureInjector | None = None,
+                         monitor: StepMonitor | None = None,
+                         max_retries: int = 3,
+                         backoff_s: float = 0.0
                          ) -> List[EvolveResult]:
     """Lane-batched Pareto sweep: all (level, repeat) lanes in one program.
 
@@ -646,6 +804,11 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
     lowering + full registry error profile + cell-model electricals +
     search provenance) and the writer is flushed before returning, so the
     sweep's output survives the process (DESIGN.md §12).
+
+    ``checkpoint_dir``/``resume``/``injector``/``monitor`` pass through to
+    ``evolve_batched`` (preemption tolerance, DESIGN.md §14); the batch's
+    resilience accounting is copied onto every returned lane's ``fault``
+    via the batch result, so benches can surface retry/straggler counts.
     """
     levels = tuple(float(l) for l in levels)
     if pareto_filter and any(b < a for a, b in zip(levels, levels[1:])):
@@ -656,7 +819,13 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                                levels=levels, repeats=repeats)
     batch = evolve_batched(bcfg, _seed_genome(cfg), pmf_x,
                            vec_weights=vec_weights, objective=objective,
-                           verbose=verbose)
+                           verbose=verbose,
+                           checkpoint_dir=checkpoint_dir,
+                           checkpoint_every=checkpoint_every,
+                           checkpoint_keep_last=checkpoint_keep_last,
+                           resume=resume, injector=injector,
+                           monitor=monitor, max_retries=max_retries,
+                           backoff_s=backoff_s)
     R = max(1, int(repeats))
     results = []
     for li, level in enumerate(levels):

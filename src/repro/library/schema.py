@@ -141,7 +141,16 @@ def validate_entry(e: ComponentEntry) -> None:
 
 
 def save_entries(path: str, entries: Sequence[ComponentEntry]) -> None:
-    """Write a component library (versioned, pickle-free container)."""
+    """Write a component library (versioned, pickle-free container).
+
+    The write is atomic: the container goes to a same-directory temp file
+    first and is committed with ``os.replace``, so a crash mid-save (or a
+    validation error on any entry) leaves whatever was at ``path`` intact
+    -- a failed sweep can never persist a partial library over a good one
+    (tests/test_library_crashsafe.py).
+    """
+    import os
+
     payload, meta = {}, []
     for i, e in enumerate(entries):
         validate_entry(e)
@@ -155,9 +164,17 @@ def save_entries(path: str, entries: Sequence[ComponentEntry]) -> None:
             "power_nw": float(e.power_nw), "pdp_fj": float(e.pdp_fj),
             "provenance": e.provenance.to_json(),
         })
-    write_container(path, payload, {"schema": SCHEMA_VERSION,
-                                    "entries": meta},
-                    kind=CONTAINER_KIND, version=SCHEMA_VERSION)
+    # the ".npz" suffix matters: np.savez would otherwise append one and
+    # the temp file would land at a different path than we os.replace from
+    tmp = f"{path}.{os.getpid()}.tmp.npz"
+    try:
+        write_container(tmp, payload, {"schema": SCHEMA_VERSION,
+                                       "entries": meta},
+                        kind=CONTAINER_KIND, version=SCHEMA_VERSION)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load_entries(path: str) -> List[ComponentEntry]:

@@ -77,21 +77,53 @@ class LibraryWriter:
 
     ``append=True`` seeds the writer with an existing library at ``path``
     (so successive sweeps extend one artifact); otherwise flush overwrites.
+
+    Crash safety (DESIGN.md §14): ``flush`` goes through the atomic
+    ``schema.save_entries`` (temp file + ``os.replace``), and append-mode
+    flushes are additionally *journaled*: the session's new entries are
+    committed to a ``<path>.journal.npz`` sidecar before the main library
+    is rewritten, and the journal is removed only after the rewrite lands.
+    A process that dies anywhere in between leaves either the old library
+    plus a recoverable journal, or the new library -- never a truncated
+    file and never lost entries.  The next append-mode open replays any
+    leftover journal (entries not already in the main file, by name) and
+    compacts it away on its own flush.  ``__exit__`` flushes only on a
+    clean exit, so a sweep that raised mid-run cannot overwrite a good
+    library with its partial state.
     """
+
+    JOURNAL_SUFFIX = ".journal.npz"
 
     def __init__(self, path: str, *, append: bool = False, tag: str = ""):
         self.path = str(path)
         self.tag = tag
+        self.append = bool(append)
         self.entries: List[ComponentEntry] = []
+        self.recovered = 0   # journal entries replayed by this open
         if append:
             import os
             if os.path.exists(self.path):
                 self.entries = list(schema_mod.load_entries(self.path))
+            jpath = self._journal_path()
+            if os.path.exists(jpath):
+                have = {e.name for e in self.entries}
+                for e in schema_mod.load_entries(jpath):
+                    if e.name not in have:
+                        self.entries.append(e)
+                        self.recovered += 1
+        # entries[:_n_seed] came from disk; the journal covers the rest
+        self._n_seed = len(self.entries)
+
+    def _journal_path(self) -> str:
+        return self.path + self.JOURNAL_SUFFIX
 
     def __enter__(self) -> "LibraryWriter":
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
+        # flush only on clean exit: an exception mid-sweep means the
+        # accumulated entries are suspect, and the library on disk (plus
+        # any journal) must survive untouched
         if exc_type is None:
             self.flush()
 
@@ -165,6 +197,22 @@ class LibraryWriter:
         return out
 
     def flush(self) -> str:
-        """Write the accumulated entries; returns the library path."""
+        """Write the accumulated entries; returns the library path.
+
+        Append mode journals first: the session's new entries (plus any
+        replayed from a prior crash) hit the sidecar atomically before the
+        main rewrite, and the journal is dropped only once the rewrite is
+        committed.
+        """
+        import os
+
+        jpath = self._journal_path()
+        if self.append:
+            new = self.entries[self._n_seed - self.recovered:] \
+                if self.recovered else self.entries[self._n_seed:]
+            if new:
+                schema_mod.save_entries(jpath, new)
         schema_mod.save_entries(self.path, self.entries)
+        if os.path.exists(jpath):
+            os.remove(jpath)
         return self.path

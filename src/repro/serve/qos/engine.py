@@ -23,6 +23,16 @@ downshift events and level, per-class error sums for the served and the
 nominal (undownshifted) variant -- their difference is the estimated
 served-accuracy drift the library's error profiles predict -- plus the
 variant cache's hit/miss/compile/evict counters.
+
+**Graceful degradation** (DESIGN.md §14): a live engine never throws a
+request away mid-stream.  Requests tagged with an unknown QoS class,
+classes whose library query turns out infeasible (at init or after a
+downshift), and variants whose compile raises are all routed to the
+*exact tier* -- the strictest class's nominal selection, the safest
+arithmetic the policy knows -- and counted under ``qos.degraded`` (with
+``.unknown_class`` / ``.infeasible`` / ``.compile_error`` causes).  The
+exact tier itself must resolve at construction; that one failure is
+still fail-fast, because there is nothing safer to fall back to.
 """
 
 from __future__ import annotations
@@ -33,7 +43,7 @@ from typing import Callable, Dict, List, Sequence
 
 import numpy as np
 
-from repro.library.index import LibraryIndex
+from repro.library.index import InfeasibleQueryError, LibraryIndex
 from repro.library.schema import ComponentEntry
 from repro.serve.metrics import Counters
 from repro.serve.qos.cache import VariantCache
@@ -99,18 +109,31 @@ class QosEngine:
         self.downshift = 0
         self._max_shift = len(policy.names) - 1
         self._since_change = self.dwell  # first transition needs no wait
-        # fail fast: nominal selection for every class must be feasible
-        for name, entry in policy.selection_table(
-                index, 0, w=w, signed=signed).items():
-            self._selection[(name, 0)] = entry
+        # the exact tier (strictest class, nominal budget) is the
+        # degradation target for everything below -- it alone is fail-fast
+        exact_name = policy.names[0]
+        self._exact = policy.select(index, exact_name, 0, w=w, signed=signed)
+        self._selection[(exact_name, 0)] = self._exact
+        for name in policy.names[1:]:
+            try:
+                self._selection[(name, 0)] = policy.select(
+                    index, name, 0, w=w, signed=signed)
+            except InfeasibleQueryError:
+                self._selection[(name, 0)] = self._exact
+                self._degrade(name, "infeasible")
+
+    def _degrade(self, name: str, cause: str) -> None:
+        self.counters.inc("qos.degraded")
+        self.counters.inc(f"qos.degraded.{cause}.{name}")
 
     # --------------------------------------------------------- intake
 
     def submit(self, req: QosRequest) -> None:
         if req.qos not in self._queues:
-            raise KeyError(f"request {req.rid}: unknown QoS class "
-                           f"{req.qos!r}; policy has "
-                           f"{', '.join(self.policy.names)}")
+            # unknown class: serve it on the safest arithmetic we have
+            # instead of failing the stream (DESIGN.md §14)
+            self._degrade(req.qos, "unknown_class")
+            req.qos = self.policy.names[0]
         self._queues[req.qos].append(req)
         self.counters.inc(f"qos.submitted.{req.qos}")
 
@@ -142,8 +165,15 @@ class QosEngine:
         key = (name, downshift)
         entry = self._selection.get(key)
         if entry is None:
-            entry = self.policy.select(self.index, name, downshift,
-                                       w=self._w, signed=self._signed)
+            try:
+                entry = self.policy.select(self.index, name, downshift,
+                                           w=self._w, signed=self._signed)
+            except InfeasibleQueryError:
+                # a downshifted budget the library cannot meet: serve the
+                # exact tier rather than drop the class (the memo makes
+                # the degradation counter fire once per (class, shift))
+                entry = self._exact
+                self._degrade(name, "infeasible")
             self._selection[key] = entry
         return entry
 
@@ -179,8 +209,21 @@ class QosEngine:
         xb = np.zeros((self.batch,) + tuple(reqs[0].x.shape), np.float32)
         for i, r in enumerate(reqs):
             xb[i] = r.x
-        logits = self.cache.forward(entry, self.forward, self.params, xb,
-                                    self.x_qp, self.w_qp)
+        try:
+            logits = self.cache.forward(entry, self.forward, self.params,
+                                        xb, self.x_qp, self.w_qp)
+        except Exception:
+            if entry.name == self._exact.name:
+                raise  # nothing safer to degrade to
+            # variant compile/dispatch failure: serve this batch on the
+            # exact tier (its forward compiled at first use or now; if
+            # the exact tier itself fails, the raise above surfaces it)
+            self._degrade(name, "compile_error")
+            entry = self._exact
+            served_as, budget = self.policy.effective(
+                self.policy.names[0], 0)
+            logits = self.cache.forward(entry, self.forward, self.params,
+                                        xb, self.x_qp, self.w_qp)
         preds = np.asarray(np.argmax(np.asarray(logits), axis=-1))
         n = len(reqs)
         for i, r in enumerate(reqs):

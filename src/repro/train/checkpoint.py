@@ -26,10 +26,23 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint read failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint that exists but cannot be read back: truncated or
+    unparseable manifest, a leaf file missing or unreadable.  The atomic
+    rename commit makes this unreachable through the normal save path --
+    seeing it means on-disk tampering or filesystem damage, and the caller
+    should fall back to an earlier step (or start fresh) instead of
+    crashing on a raw json/numpy exception."""
 
 
 def _flatten_with_paths(tree):
@@ -40,8 +53,14 @@ def _flatten_with_paths(tree):
 
 
 def save(root: str, step: int, tree: Any, keep_last: int = 3,
-         blocking: bool = True) -> str:
-    """Write checkpoint; commit via atomic rename of the LATEST pointer."""
+         blocking: bool = True, extra: Optional[dict] = None) -> str:
+    """Write checkpoint; commit via atomic rename of the LATEST pointer.
+
+    ``extra`` is an optional JSON-serializable dict stored verbatim in the
+    manifest (``meta["extra"]``) -- callers use it for run metadata that
+    must travel with the arrays (e.g. the evolution sweep's config digest,
+    ``core/checkpoint.py``).
+    """
     os.makedirs(root, exist_ok=True)
     name = f"step_{step:08d}"
     tmp = os.path.join(root, f".tmp_{name}")
@@ -52,6 +71,8 @@ def save(root: str, step: int, tree: Any, keep_last: int = 3,
 
     paths, leaves, _ = _flatten_with_paths(tree)
     meta = {"step": step, "leaves": []}
+    if extra is not None:
+        meta["extra"] = extra
     for i, (p, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         fn = f"arr_{i:04d}.npy"
@@ -96,6 +117,45 @@ def latest_step(root: str) -> Optional[int]:
     return int(name.split("_")[1])
 
 
+def load_step(root: str, step: int) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Read one checkpoint step as ``(manifest, {leaf_path: array})``.
+
+    The raw, structure-free reading primitive under ``restore``: callers
+    that persist their own tree layout (the evolution sweep checkpointer)
+    rebuild it from the path-keyed arrays.  A truncated manifest, a
+    missing or unreadable leaf file, or a manifest/leaf disagreement all
+    raise ``CheckpointCorruptError`` -- never a raw json/numpy error.
+    """
+    d = os.path.join(root, f"step_{step:08d}")
+    manifest = os.path.join(d, "manifest.json")
+    if not os.path.isdir(d):
+        raise CheckpointError(f"no checkpoint step {step} under {root}")
+    try:
+        with open(manifest) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{manifest}: unreadable or truncated manifest ({e})") from e
+    if not isinstance(meta, dict) or "leaves" not in meta:
+        raise CheckpointCorruptError(f"{manifest}: manifest has no leaf "
+                                     "list")
+    arrays: Dict[str, np.ndarray] = {}
+    for leaf in meta["leaves"]:
+        fn = os.path.join(d, leaf["file"])
+        try:
+            arr = np.load(fn)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"{fn}: missing or unreadable leaf for path "
+                f"{leaf['path']!r} ({e})") from e
+        if list(arr.shape) != list(leaf["shape"]):
+            raise CheckpointCorruptError(
+                f"{fn}: shape {list(arr.shape)} disagrees with manifest "
+                f"{leaf['shape']} for path {leaf['path']!r}")
+        arrays[leaf["path"]] = arr
+    return meta, arrays
+
+
 def restore(root: str, target_like: Any, step: Optional[int] = None,
             sharding_fn: Optional[Callable[[str, tuple], Any]] = None) -> Any:
     """Load into the structure of ``target_like``; reshard for this mesh.
@@ -106,17 +166,17 @@ def restore(root: str, target_like: Any, step: Optional[int] = None,
     if step is None:
         step = latest_step(root)
         assert step is not None, f"no checkpoint under {root}"
-    d = os.path.join(root, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        meta = json.load(f)
+    meta, arrays = load_step(root, step)
     by_path = {leaf["path"]: leaf for leaf in meta["leaves"]}
 
     paths, leaves, treedef = _flatten_with_paths(target_like)
     out = []
     for p, like in zip(paths, leaves):
-        info = by_path[p]
-        arr = np.load(os.path.join(d, info["file"]))
-        if info["dtype"] == "bfloat16":
+        if p not in by_path:
+            raise CheckpointCorruptError(
+                f"{root} step {step}: leaf {p!r} absent from checkpoint")
+        arr = arrays[p]
+        if by_path[p]["dtype"] == "bfloat16":
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)
         if sharding_fn is not None:

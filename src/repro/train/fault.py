@@ -34,6 +34,22 @@ class FailureInjector:
             self._fired.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
 
+    def check_span(self, start: int, stop: int):
+        """Fire if any un-fired target lies in ``[start, stop)``.
+
+        Drivers that advance in multi-step blocks (the batched evolution
+        sweep runs ``gens_per_jit_block`` generations per dispatch) cannot
+        observe every step number; they check the whole span a block is
+        about to cover, so a target generation anywhere inside it still
+        kills the block -- once, like ``check``.
+        """
+        for s in self.fail_at_steps:
+            if start <= s < stop and s not in self._fired:
+                self._fired.add(s)
+                raise SimulatedFailure(
+                    f"injected node failure at step {s} "
+                    f"(span [{start}, {stop}))")
+
 
 @dataclass
 class StepMonitor:
@@ -42,12 +58,23 @@ class StepMonitor:
     _ewma: Optional[float] = None
     stragglers: List[int] = field(default_factory=list)
     on_straggler: Optional[Callable[[int, float], None]] = None
+    observed: int = 0    # every observe() call
+    decisions: int = 0   # observations actually judged against the deadline
 
     def observe(self, step: int, dt: float) -> bool:
-        """Returns True if this step breached the deadline."""
+        """Returns True if this step breached the deadline.
+
+        The first observation only seeds the EWMA: there is no baseline
+        yet, so it is neither a straggler nor a non-straggler -- it does
+        not count as a decision (``decisions`` stays 0 until the second
+        step).  Consumers reading straggler *rates* must divide by
+        ``decisions``, not ``observed``.
+        """
+        self.observed += 1
         if self._ewma is None:
             self._ewma = dt
             return False
+        self.decisions += 1
         breach = dt > self.deadline_factor * self._ewma
         if breach:
             self.stragglers.append(step)
@@ -58,6 +85,12 @@ class StepMonitor:
             self._ewma = (1 - self.ewma_alpha) * self._ewma \
                 + self.ewma_alpha * dt
         return breach
+
+    def stats(self) -> dict:
+        """Snapshot for run reports (the sweep result's fault block)."""
+        return {"observed": self.observed, "decisions": self.decisions,
+                "stragglers": len(self.stragglers),
+                "ewma_s": self._ewma if self._ewma is not None else 0.0}
 
 
 def run_with_recovery(train_fn, *, n_steps: int, ckpt_every: int,

@@ -1,0 +1,230 @@
+"""Preemption tolerance of the batched evolution engine (DESIGN.md §14).
+
+The load-bearing property: a sweep killed at *any* generation and resumed
+from its last checkpoint produces a **genome-exact** Pareto front vs the
+uninterrupted run.  It holds because the jit block is deterministic given
+its loop-carried state (parents, parent fitness, per-lane RNG keys), all
+of which the snapshot captures -- so the hypothesis test below kills at a
+random generation and demands bitwise equality, across the fused and
+unfused fitness pipelines and a wce-capped objective.
+
+Also covered: the retry-with-restore loop (injected failures, bounded
+retries), the config-digest refusal rule, typed corruption errors
+(truncated manifest, missing leaf), and fresh-run directory reset.
+"""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cgp
+from repro.core import checkpoint as evo_ckpt
+from repro.core import distributions as dist
+from repro.core import evolve as ev
+from repro.core import netlist as nl
+from repro.core.objective import Constraints, Objective
+from repro.train.fault import FailureInjector, SimulatedFailure, StepMonitor
+
+W, GENS, BLOCK = 4, 60, 20   # 3 jit blocks; w=4 keeps exhaustive eval tiny
+LEVELS = (0.01, 0.03)
+
+
+def _cfg(seed=7, fused=None, objective=None):
+    return ev.BatchedEvolveConfig(w=W, signed=False, generations=GENS,
+                                  gens_per_jit_block=BLOCK, seed=seed,
+                                  levels=LEVELS, repeats=1, fused=fused,
+                                  objective=objective)
+
+
+def _seed_genome():
+    return cgp.genome_from_netlist(nl.array_multiplier(W))
+
+
+def _run(cfg, **kw):
+    return ev.evolve_batched(cfg, _seed_genome(), dist.half_normal_pmf(W),
+                             **kw)
+
+
+def _assert_identical(ref, got):
+    assert np.array_equal(ref.genomes.nodes, got.genomes.nodes)
+    assert np.array_equal(ref.genomes.outs, got.genomes.outs)
+    assert np.array_equal(ref.error, got.error)
+    assert np.array_equal(ref.area, got.area)
+    assert np.array_equal(ref.history, got.history)
+
+
+# ------------------------------------------------- kill/resume parity
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=1, max_value=GENS))
+def test_injected_kill_resumes_genome_exact(kill_gen):
+    """Killed at a random generation -> retry-with-restore is bit-exact."""
+    cfg = _cfg()
+    ref = _run(cfg)
+    d = "/tmp/evo_ckpt_hyp"
+    shutil.rmtree(d, ignore_errors=True)
+    got = _run(cfg, checkpoint_dir=d,
+               injector=FailureInjector(fail_at_steps=(kill_gen,)))
+    _assert_identical(ref, got)
+    assert got.fault["retries"] == 1
+    shutil.rmtree(d, ignore_errors=True)
+
+
+def test_resume_from_disk_genome_exact(tmp_path):
+    """Process-death shape: partial run to block 1, fresh resume to end."""
+    cfg = _cfg()
+    ref = _run(cfg)
+    d = str(tmp_path / "ck")
+    full = _run(cfg, checkpoint_dir=d)
+    _assert_identical(ref, full)
+    assert full.fault["checkpoint_saves"] == GENS // BLOCK
+    # wind LATEST back to the first snapshot, as if the process died there
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("step_00000001")
+    res = _run(cfg, checkpoint_dir=d, resume=True)
+    assert res.fault["resumed_at_block"] == 1
+    _assert_identical(ref, res)
+
+
+def test_resume_parity_fused_and_unfused(tmp_path):
+    """The guarantee is per-pipeline: each resumes bit-exact vs itself."""
+    for fused in (True, False):
+        cfg = _cfg(fused=fused)
+        ref = _run(cfg)
+        d = str(tmp_path / f"ck_{fused}")
+        _run(cfg, checkpoint_dir=d)
+        with open(os.path.join(d, "LATEST"), "w") as f:
+            f.write("step_00000002")
+        res = _run(cfg, checkpoint_dir=d, resume=True)
+        assert res.fault["resumed_at_block"] == 2
+        _assert_identical(ref, res)
+
+
+def test_resume_parity_wce_capped(tmp_path):
+    """Constrained objectives snapshot/resume identically too."""
+    obj = Objective(metric="wmed", constraints=Constraints(wce_cap=0.3))
+    cfg = _cfg(objective=obj)
+    ref = _run(cfg)
+    d = str(tmp_path / "ck")
+    got = _run(cfg, checkpoint_dir=d,
+               injector=FailureInjector(fail_at_steps=(BLOCK + 3,)))
+    _assert_identical(ref, got)
+
+
+def test_retry_without_checkpoint_replays_from_seed():
+    """No checkpoint_dir: restore falls back to the seed population."""
+    cfg = _cfg()
+    ref = _run(cfg)
+    got = _run(cfg, injector=FailureInjector(fail_at_steps=(GENS - 5,)))
+    _assert_identical(ref, got)
+    assert got.fault["retries"] == 1
+    assert got.fault["checkpoint_saves"] == 0
+
+
+def test_retries_are_bounded():
+    cfg = _cfg()
+    # one failure per retry attempt and then some: must give up
+    inj = FailureInjector(fail_at_steps=(1, 2, 3, 4, 5))
+    with pytest.raises(SimulatedFailure):
+        _run(cfg, injector=inj, max_retries=2)
+
+
+def test_monitor_stats_flow_into_result():
+    cfg = _cfg()
+    mon = StepMonitor()
+    got = _run(cfg, monitor=mon)
+    stats = got.fault["monitor"]
+    assert stats["observed"] == GENS // BLOCK
+    assert stats["decisions"] == GENS // BLOCK - 1  # first only seeds EWMA
+    assert stats["stragglers"] == 0
+
+
+def test_resume_requires_checkpoint_dir():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        _run(_cfg(), resume=True)
+
+
+def test_fresh_run_resets_stale_checkpoints(tmp_path):
+    d = str(tmp_path / "ck")
+    _run(_cfg(), checkpoint_dir=d)
+    assert evo_ckpt.latest_block(d) == GENS // BLOCK
+    # a non-resume run in the same dir must not see (or keep) stale state
+    _run(_cfg(seed=11), checkpoint_dir=d, checkpoint_every=10 ** 6)
+    steps = [f for f in os.listdir(d) if f.startswith("step_")]
+    assert steps == [f"step_{GENS // BLOCK:08d}"]  # only the final save
+
+
+# ------------------------------------------------- digest refusal rule
+
+def test_digest_guard_refuses_different_seed(tmp_path):
+    d = str(tmp_path / "ck")
+    _run(_cfg(seed=7), checkpoint_dir=d)
+    with pytest.raises(evo_ckpt.SweepDigestError):
+        _run(_cfg(seed=8), checkpoint_dir=d, resume=True)
+
+
+def test_digest_guard_refuses_different_objective(tmp_path):
+    d = str(tmp_path / "ck")
+    _run(_cfg(), checkpoint_dir=d)
+    obj = Objective(metric="wce")
+    with pytest.raises(evo_ckpt.SweepDigestError):
+        _run(_cfg(objective=obj), checkpoint_dir=d, resume=True)
+
+
+def test_digest_guard_refuses_different_constraints(tmp_path):
+    d = str(tmp_path / "ck")
+    _run(_cfg(), checkpoint_dir=d)
+    obj = Objective(metric="wmed", constraints=Constraints(wce_cap=0.3))
+    with pytest.raises(evo_ckpt.SweepDigestError):
+        _run(_cfg(objective=obj), checkpoint_dir=d, resume=True)
+
+
+# ------------------------------------------------- corruption surface
+
+def _one_checkpoint(tmp_path):
+    d = str(tmp_path / "ck")
+    _run(_cfg(), checkpoint_dir=d)
+    step_dir = os.path.join(d, f"step_{GENS // BLOCK:08d}")
+    assert os.path.isdir(step_dir)
+    return d, step_dir
+
+
+def test_truncated_manifest_is_typed(tmp_path):
+    d, step_dir = _one_checkpoint(tmp_path)
+    mf = os.path.join(step_dir, "manifest.json")
+    with open(mf) as f:
+        blob = f.read()
+    with open(mf, "w") as f:
+        f.write(blob[:len(blob) // 2])  # mid-JSON truncation
+    with pytest.raises(evo_ckpt.SweepCheckpointCorruptError):
+        _run(_cfg(), checkpoint_dir=d, resume=True)
+
+
+def test_missing_leaf_is_typed(tmp_path):
+    d, step_dir = _one_checkpoint(tmp_path)
+    os.remove(os.path.join(step_dir, "arr_0000.npy"))
+    with pytest.raises(evo_ckpt.SweepCheckpointCorruptError):
+        _run(_cfg(), checkpoint_dir=d, resume=True)
+
+
+def test_foreign_checkpoint_is_typed(tmp_path):
+    """A train/checkpoint dir that is not an evolve-sweep snapshot."""
+    d, step_dir = _one_checkpoint(tmp_path)
+    mf = os.path.join(step_dir, "manifest.json")
+    with open(mf) as f:
+        meta = json.load(f)
+    meta["extra"]["kind"] = "model-weights"
+    with open(mf, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(evo_ckpt.SweepCheckpointCorruptError):
+        _run(_cfg(), checkpoint_dir=d, resume=True)
+
+
+def test_load_sweep_missing_dir_is_typed(tmp_path):
+    with pytest.raises(evo_ckpt.SweepCheckpointError):
+        evo_ckpt.load_sweep(str(tmp_path / "nope"), "digest")

@@ -71,3 +71,26 @@ def test_straggler_monitor():
     assert mon.stragglers == [4] and hits == [4]
     # EWMA not poisoned by the straggler
     assert mon._ewma < 1.5
+
+
+def test_monitor_first_step_seeds_without_deciding():
+    """The first observation has no baseline to judge against: it seeds
+    the EWMA but is neither a straggler nor a non-straggler decision."""
+    mon = StepMonitor(deadline_factor=3.0)
+    assert mon.observe(0, 100.0) is False   # huge, but nothing to compare
+    assert mon.observed == 1 and mon.decisions == 0
+    assert mon.stragglers == []
+    mon.observe(1, 1.0)
+    assert mon.observed == 2 and mon.decisions == 1
+    stats = mon.stats()
+    assert stats["observed"] == 2 and stats["decisions"] == 1
+    assert stats["stragglers"] == 0 and stats["ewma_s"] > 0
+
+
+def test_injector_span_fires_once_per_target():
+    inj = FailureInjector(fail_at_steps=(45,))
+    inj.check_span(1, 21)       # target outside: no fire
+    inj.check_span(21, 41)
+    with pytest.raises(SimulatedFailure):
+        inj.check_span(41, 61)  # 45 in [41, 61)
+    inj.check_span(41, 61)      # already fired: retry passes through

@@ -1,0 +1,107 @@
+"""Crash safety of library persistence (DESIGN.md §14).
+
+The component library is the sweep's durable asset -- a crash mid-flush
+must never leave a truncated container or lose previously persisted
+entries.  Covered: the atomic temp-file + ``os.replace`` commit in
+``schema.save_entries``, the journaled append mode of ``LibraryWriter``
+(journal lands before the main rewrite; leftover journals are replayed
+by the next append-mode open), and the exception-aware context manager
+(no flush when the sweep raised).
+"""
+
+import os
+
+import pytest
+
+from repro.library import schema as sm
+from repro.library.synth import synthetic_ladder
+from repro.library.writer import LibraryWriter
+
+
+@pytest.fixture(scope="module")
+def ladder():
+    return synthetic_ladder(w=4, signed=False, ks=(0, 2, 4))
+
+
+@pytest.fixture
+def lib(tmp_path, ladder):
+    p = str(tmp_path / "lib.npz")
+    sm.save_entries(p, ladder[:1])
+    return p
+
+
+def test_save_entries_is_atomic(lib, ladder, monkeypatch):
+    """Dying after the temp write but before the rename keeps the old
+    library intact and leaks no temp file."""
+    real = sm.write_container
+
+    def boom(path, *a, **kw):
+        real(path, *a, **kw)
+        raise RuntimeError("crash between temp write and replace")
+
+    monkeypatch.setattr(sm, "write_container", boom)
+    with pytest.raises(RuntimeError):
+        sm.save_entries(lib, ladder)
+    monkeypatch.undo()
+    assert [e.name for e in sm.load_entries(lib)] == [ladder[0].name]
+    leftover = [f for f in os.listdir(os.path.dirname(lib)) if ".tmp" in f]
+    assert leftover == []
+
+
+def test_save_entries_validates_before_touching_disk(lib, ladder):
+    """An invalid entry aborts the save with the old file untouched."""
+    import dataclasses
+    bad = dataclasses.replace(ladder[1], lut=ladder[1].lut[:-3])
+    with pytest.raises(Exception):
+        sm.save_entries(lib, [ladder[0], bad])
+    assert len(sm.load_entries(lib)) == 1
+
+
+def test_append_journal_recovery(lib, ladder):
+    """Journal committed, main rewrite lost: the next open replays it."""
+    w = LibraryWriter(lib, append=True)
+    w.add(ladder[1])
+    # emulate a crash after the journal landed but before the main
+    # rewrite: write the journal exactly as flush() would, then die
+    sm.save_entries(w._journal_path(), w.entries[w._n_seed:])
+    del w
+
+    w2 = LibraryWriter(lib, append=True)
+    assert w2.recovered == 1
+    assert {e.name for e in w2.entries} == {ladder[0].name, ladder[1].name}
+    w2.flush()
+    assert not os.path.exists(w2._journal_path())
+    assert len(sm.load_entries(lib)) == 2
+    # a third open sees a clean state, nothing left to recover
+    assert LibraryWriter(lib, append=True).recovered == 0
+
+
+def test_append_flush_writes_journal_then_compacts(lib, ladder,
+                                                   monkeypatch):
+    """flush() commits new entries to the journal before the rewrite, so
+    a crash *during* the rewrite still loses nothing."""
+    w = LibraryWriter(lib, append=True)
+    w.add(ladder[2])
+
+    real = sm.save_entries
+    calls = []
+    monkeypatch.setattr(sm, "save_entries",
+                        lambda p, e: (calls.append(p), real(p, e)))
+    w.flush()
+    assert calls == [w._journal_path(), lib]   # journal first
+    assert not os.path.exists(w._journal_path())  # compacted after commit
+    assert len(sm.load_entries(lib)) == 2
+
+
+def test_exit_flushes_only_on_clean_exit(lib, ladder):
+    with pytest.raises(ValueError):
+        with LibraryWriter(lib, append=False) as w:
+            w.add(ladder[2])
+            raise ValueError("sweep died mid-characterization")
+    # the overwrite-mode partial state (1 entry) must not have replaced
+    # the good library
+    assert [e.name for e in sm.load_entries(lib)] == [ladder[0].name]
+
+    with LibraryWriter(lib, append=True) as w:
+        w.add(ladder[2])
+    assert len(sm.load_entries(lib)) == 2

@@ -178,10 +178,65 @@ def test_cache_forward_runs_the_variant(index, tiny):
 
 # ------------------------------------------------------------------ engine
 
-def test_engine_rejects_unknown_class(index, tiny):
+def test_engine_degrades_unknown_class(index, tiny):
+    # an unknown class is served on the exact tier, not raised mid-stream
     eng = make_engine(index, tiny)
-    with pytest.raises(KeyError):
-        eng.submit(QosRequest(0, np.zeros(4, np.float32), qos="bogus"))
+    eng.submit(QosRequest(0, np.zeros(4, np.float32), qos="bogus"))
+    done = eng.run()
+    assert len(done) == 1 and done[0].pred is not None
+    assert done[0].served_as == eng.policy.names[0]
+    assert eng.counters.get("qos.degraded") == 1.0
+    assert eng.counters.get("qos.degraded.unknown_class.bogus") == 1.0
+
+
+def _infeasible_policy():
+    """Two classes; the loose one demands a negative worst-case error --
+    unsatisfiable by any library, so its query raises InfeasibleQuery."""
+    return QosPolicy(budgets=(
+        ("exact", QosBudget(bound=0.0)),
+        ("impossible", QosBudget(bound=1e-2, wce_cap=-1.0))))
+
+
+def test_engine_degrades_infeasible_class(index, tiny):
+    params, forward, xs, x_qp, w_qp = tiny
+    eng = QosEngine(forward, params, _infeasible_policy(), index,
+                    x_qp=x_qp, w_qp=w_qp, batch=4)
+    # init resolved the exact tier and degraded the infeasible class to it
+    assert eng.counters.get("qos.degraded.infeasible.impossible") == 1.0
+    done = eng.run(burst(xs, 3, "impossible"))
+    assert len(done) == 3
+    assert all(r.entry_name == eng._exact.name for r in done)
+
+
+def test_engine_degrades_infeasible_downshift(index, tiny):
+    params, forward, _, x_qp, w_qp = tiny
+    eng = QosEngine(forward, params, _infeasible_policy(), index,
+                    x_qp=x_qp, w_qp=w_qp, batch=4)
+    # downshifting the exact class lands on the infeasible one: the
+    # lazily memoized selection degrades instead of raising mid-stream
+    entry = eng._entry_for("exact", 1)
+    assert entry.name == eng._exact.name
+    assert eng.counters.get("qos.degraded.infeasible.exact") == 1.0
+    eng._entry_for("exact", 1)  # memoized: the counter fires once
+    assert eng.counters.get("qos.degraded.infeasible.exact") == 1.0
+
+
+def test_engine_degrades_on_compile_error(index, tiny):
+    _, _, xs, _, _ = tiny
+    eng = make_engine(index, tiny)
+    real = eng.cache.forward
+
+    def flaky(entry, fn, params, x, x_qp, w_qp):
+        if entry.name != eng._exact.name:
+            raise RuntimeError("variant compile exploded")
+        return real(entry, fn, params, x, x_qp, w_qp)
+
+    eng.cache.forward = flaky
+    done = eng.run(burst(xs, 4, "balanced"))
+    assert len(done) == 4
+    assert all(r.served_as == eng.policy.names[0] for r in done)
+    assert all(r.entry_name == eng._exact.name for r in done)
+    assert eng.counters.get("qos.degraded.compile_error.balanced") == 1.0
 
 
 def test_engine_serves_all_and_counts(index, tiny):
