@@ -170,11 +170,39 @@ def _checkpoint_overhead(w: int, lanes: int, gens: int,
             "overhead_frac": save_ms / block_ms if block_ms > 0 else 0.0}
 
 
+def _island_parity(cfg: ev.EvolveConfig, levels, repeats: int,
+                   objective: str, wce_cap: float | None,
+                   n_workers: int) -> dict:
+    """Run the same sweep through the island fleet and assert parity.
+
+    The distributed front must be genome-exact vs the in-process batched
+    front at equal seeds (DESIGN.md §15) -- this is the flag CI and
+    operators use to check a fleet config before trusting it with a long
+    sweep.  Returns wall time + the coordinator's lease accounting.
+    """
+    from repro.dist.islands import IslandConfig, SweepSpec, island_sweep
+    spec = SweepSpec(w=cfg.w, signed=cfg.signed, lam=cfg.lam, h=cfg.h,
+                     generations=cfg.generations,
+                     gens_per_jit_block=cfg.gens_per_jit_block,
+                     seed=cfg.seed, levels=tuple(levels), repeats=repeats,
+                     metric=objective, wce_cap=wce_cap,
+                     eval_backend=cfg.eval_backend, fused=cfg.fused)
+    root = tempfile.mkdtemp(prefix="bench_islands_")
+    t0 = time.time()
+    front, stats = island_sweep(spec, IslandConfig(root=root),
+                                n_workers=n_workers)
+    wall = time.time() - t0
+    return {"front": front, "wall_s": wall, "workers": n_workers,
+            "releases": stats["releases"],
+            "stale_results": stats["stale_results"],
+            "worker_rcs": stats["worker_rcs"]}
+
+
 def run(smoke: bool = False, strict: bool = False,
         objective: str = "wmed", wce_cap: float | None = None,
         json_path: str | None = None,
         checkpoint_dir: str | None = None, resume: bool = False,
-        fail_at: int | None = None):
+        fail_at: int | None = None, islands: int | None = None):
     if smoke:
         levels, repeats, gens, block = ev.PAPER_LEVELS[:4], 1, 20, 20
         steady_lanes, steady_gens = 4, 20
@@ -217,6 +245,15 @@ def run(smoke: bool = False, strict: bool = False,
         repeats=repeats)
     _assert_front_parity(fused_sweep, unfused, "fused vs unfused")
 
+    # ---- optional fleet parity: the island runtime must reproduce the
+    # in-process batched front genome-exactly (DESIGN.md §15) ----
+    isl = None
+    if islands is not None:
+        isl = _island_parity(cfg, levels, repeats, objective, wce_cap,
+                             islands)
+        _assert_front_parity(batched, isl["front"],
+                             f"batched vs islands({islands})")
+
     # ---- steady-state block throughput (compile excluded) ----
     ms_fused = _steady_ms_per_lane_gen(
         dataclasses.replace(cfg, fused=True), obj, steady_lanes,
@@ -253,6 +290,10 @@ def run(smoke: bool = False, strict: bool = False,
          f"objective={objective};levels={len(levels)};repeats={repeats};"
          f"fused_vs_unfused={ms_unfused / ms_fused:.2f}x;"
          f"devices={jax.local_device_count()}")
+    if isl is not None:
+        emit("bench_batched_sweep/islands", isl["wall_s"] * 1e6,
+             f"workers={isl['workers']};releases={isl['releases']};"
+             f"parity=ok;lane_gens_per_s={total_gens / isl['wall_s']:.1f}")
     metric = batched[0].metric
     for lvl, err, ar in _front_summary(batched):
         emit(f"bench_batched_sweep/front_{lvl}", 0.0,
@@ -281,6 +322,13 @@ def run(smoke: bool = False, strict: bool = False,
             "checkpoint": ckpt,
             "fault": fault,
             "parity": {"serial_vs_batched": "ok", "fused_vs_unfused": "ok"},
+            "islands": (None if isl is None else
+                        {"workers": isl["workers"],
+                         "wall_s": isl["wall_s"],
+                         "releases": isl["releases"],
+                         "stale_results": isl["stale_results"],
+                         "worker_rcs": isl["worker_rcs"],
+                         "parity": "ok"}),
             "front": [{"level": lvl, metric: err, "area": ar}
                       for lvl, err, ar in _front_summary(batched)],
         }
@@ -324,8 +372,13 @@ if __name__ == "__main__":
                     help="inject a simulated node failure at this "
                          "generation; the retry-with-restore loop must "
                          "recover to the same front (parity asserted)")
+    ap.add_argument("--islands", type=int, default=None, metavar="N",
+                    help="also run the sweep through the island fleet "
+                         "(coordinator + N worker processes, "
+                         "repro.dist.islands) and assert the distributed "
+                         "front is genome-exact vs the batched one")
     args = ap.parse_args()
     run(smoke=args.smoke, strict=args.strict, objective=args.objective,
         wce_cap=args.wce_cap, json_path=args.json,
         checkpoint_dir=args.checkpoint_dir, resume=args.resume,
-        fail_at=args.fail_at)
+        fail_at=args.fail_at, islands=args.islands)

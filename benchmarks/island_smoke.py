@@ -1,0 +1,149 @@
+"""Island-fleet smoke: SIGKILL a worker mid-sweep, finish genome-exact.
+
+``resume_smoke`` proves one *process* dies and resumes bit-identically;
+this driver proves the fleet-level property the island runtime exists
+for (DESIGN.md §15): a coordinator + 2 evaluation workers shard the
+sweep's lanes as leases, one worker is killed with real ``SIGKILL``
+mid-sweep (seeded ``WorkerChaos``, no handlers, nothing flushed), the
+coordinator notices the dead heartbeat, re-leases the victim's lanes to
+the survivor -- each resuming from its last committed snapshot -- and
+the merged Pareto front **and** the written component library are
+genome-exact vs an uninterrupted single-process ``pareto_sweep_batched``
+at equal seeds.
+
+Protocol:
+
+1. run the reference sweep uninterrupted, in-process, and write its
+   library through the normal ``library_writer`` hook;
+2. ``island_sweep``: coordinator inline, 2 spawned worker processes,
+   worker ``w1`` armed with ``WorkerChaos(kill_after_blocks=K)``;
+3. assert ``w1`` died by SIGKILL (rc -9) and at least one lane was
+   re-leased (the coordinator's ``releases`` counter);
+4. assert the merged front is genome-exact vs the reference (nodes,
+   output genes, error/area scalars, per-lane seeds);
+5. assert the island library's entries are byte-identical to the
+   reference library's (same names, same LUTs, same electricals).
+
+CI runs this as the ``island-smoke`` job and uploads the merged library
+as an artifact::
+
+    PYTHONPATH=src:. python benchmarks/island_smoke.py \
+        [--root DIR] [--kill-after-blocks K] [--lease-s S]
+"""
+
+import argparse
+import os
+import signal
+import tempfile
+
+# One host device is enough here (each worker runs 1-lane programs); pin
+# the shape before jax initializes so reference and workers agree.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count=1".strip())
+
+import numpy as np                                            # noqa: E402
+
+from repro.core import evolve as ev                           # noqa: E402
+from repro.dist.islands import (IslandConfig, SweepSpec,      # noqa: E402
+                                WorkerChaos, island_sweep)
+from repro.library import schema as schema_mod                # noqa: E402
+from repro.library.writer import LibraryWriter                # noqa: E402
+
+# Same scale as resume_smoke -- 3 blocks per lane so a kill mid-sweep
+# leaves real work to re-lease -- but with repeats=2 (4 lanes) so both
+# workers hold work when one dies.
+W, GENS, BLOCK, SEED = 4, 60, 20, 7
+LEVELS = (0.01, 0.03)
+REPEATS = 2
+
+
+def _spec() -> SweepSpec:
+    return SweepSpec(w=W, signed=False, generations=GENS,
+                     gens_per_jit_block=BLOCK, seed=SEED,
+                     levels=LEVELS, repeats=REPEATS)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None, metavar="DIR",
+                    help="coordination directory (default: a fresh "
+                         "tempdir; CI passes one so the library artifact "
+                         "can be uploaded)")
+    ap.add_argument("--kill-after-blocks", type=int, default=2,
+                    help="SIGKILL worker w1 after it completes this many "
+                         "blocks across its lanes (default 2)")
+    ap.add_argument("--lease-s", type=float, default=10.0,
+                    help="heartbeat TTL; must exceed one block's wall "
+                         "time compile included (default 10)")
+    ap.add_argument("--deadline-s", type=float, default=480.0)
+    args = ap.parse_args()
+
+    root = args.root or tempfile.mkdtemp(prefix="island_smoke_")
+    os.makedirs(root, exist_ok=True)
+    spec = _spec()
+    n_lanes = spec.n_lanes
+    n_blocks = GENS // BLOCK
+
+    print(f"island_smoke: reference sweep ({n_lanes} lanes x {n_blocks} "
+          f"blocks, w={W}), single process")
+    ref_lib = os.path.join(root, "reference_library.npz")
+    ref_writer = LibraryWriter(ref_lib, tag="islands")
+    ref = ev.pareto_sweep_batched(spec.batched_config(), spec.pmf_x(),
+                                  levels=LEVELS, repeats=REPEATS,
+                                  library_writer=ref_writer)
+
+    print(f"island_smoke: fleet sweep, coordinator + 2 workers, SIGKILL "
+          f"w1 after {args.kill_after_blocks} blocks")
+    cfg = IslandConfig(root=os.path.join(root, "fleet"),
+                       lease_s=args.lease_s, deadline_s=args.deadline_s)
+    lib = os.path.join(root, "island_library.npz")
+    front, stats = island_sweep(
+        spec, cfg, n_workers=2,
+        chaos={"w1": WorkerChaos(kill_after_blocks=args.kill_after_blocks)},
+        library_path=lib, verbose=True)
+
+    rc = stats["worker_rcs"]["w1"]
+    assert rc == -signal.SIGKILL, \
+        f"w1 exited rc={rc}, expected SIGKILL ({-signal.SIGKILL})"
+    assert stats["worker_rcs"]["w0"] == 0, \
+        f"survivor w0 exited rc={stats['worker_rcs']['w0']}"
+    assert stats["releases"] >= 1, \
+        f"no lane was re-leased (stats: {stats}) -- the kill landed " \
+        "after w1 finished all its work; lower --kill-after-blocks"
+    assert "w1" in stats["dead_workers"], stats
+
+    assert len(front) == len(ref), (len(front), len(ref))
+    for got, want in zip(front, ref):
+        assert np.array_equal(np.asarray(got.genome.nodes),
+                              np.asarray(want.genome.nodes)), \
+            f"level {want.level}: merged front genome differs"
+        assert np.array_equal(np.asarray(got.genome.outs),
+                              np.asarray(want.genome.outs)), \
+            f"level {want.level}: merged front output genes differ"
+        assert got.error == want.error, (got.error, want.error)
+        assert got.area == want.area, (got.area, want.area)
+        assert got.seed == want.seed, (got.seed, want.seed)
+
+    ref_entries = schema_mod.load_entries(ref_lib)
+    isl_entries = schema_mod.load_entries(lib)
+    by_name = {e.name: e for e in isl_entries}
+    assert sorted(by_name) == sorted(e.name for e in ref_entries), \
+        (sorted(by_name), sorted(e.name for e in ref_entries))
+    for want in ref_entries:
+        got = by_name[want.name]
+        assert np.array_equal(got.nodes, want.nodes), want.name
+        assert np.array_equal(got.outs, want.outs), want.name
+        assert np.array_equal(got.lut, want.lut), want.name
+        assert got.area_um2 == want.area_um2, want.name
+        assert got.delay_ps == want.delay_ps, want.name
+
+    print(f"island_smoke: PASS -- w1 SIGKILLed, {stats['releases']} lane "
+          f"re-lease(s), front + library genome-exact vs uninterrupted "
+          f"run (library: {lib})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

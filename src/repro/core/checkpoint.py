@@ -187,6 +187,23 @@ def load_sweep(root: str, digest: str,
     return int(block), state
 
 
+def pin_block(root: str, block: int) -> None:
+    """Pin-by-lease (DESIGN.md §15): protect ``block``'s snapshot from
+    ``keep_last`` pruning by *any* writer in this directory.  The island
+    coordinator pins the resume block when it re-leases a lane, so a
+    stalled original worker's GC cannot delete the snapshot the new
+    leaseholder is about to load."""
+    train_ckpt.pin_step(root, block)
+
+
+def unpin_block(root: str) -> None:
+    train_ckpt.unpin(root)
+
+
+def pinned_block(root: str) -> Optional[int]:
+    return train_ckpt.read_pin(root)
+
+
 def reset_dir(root: str) -> None:
     """Clear prior sweep snapshots so a fresh (non-resume) run cannot be
     confused with whatever ran in the directory before it."""
@@ -196,7 +213,8 @@ def reset_dir(root: str) -> None:
         full = os.path.join(root, d)
         if d.startswith("step_") or d.startswith(".tmp_step_"):
             shutil.rmtree(full, ignore_errors=True)
-        elif d == "LATEST" or d == ".LATEST_tmp":
+        elif (d in ("LATEST", ".LATEST_tmp", train_ckpt.PIN_FILE)
+              or d.startswith(f".{train_ckpt.PIN_FILE}_tmp")):
             try:
                 os.remove(full)
             except OSError:

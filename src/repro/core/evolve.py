@@ -62,7 +62,7 @@ import dataclasses
 import functools
 import time
 import warnings
-from typing import Callable, List, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -522,7 +522,9 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
                    injector: FailureInjector | None = None,
                    monitor: StepMonitor | None = None,
                    max_retries: int = 3,
-                   backoff_s: float = 0.0) -> BatchedEvolveResult:
+                   backoff_s: float = 0.0,
+                   on_block: Optional[Callable[[dict], Optional[dict]]]
+                   = None) -> BatchedEvolveResult:
     """Run ``len(cfg.levels) * cfg.repeats`` independent evolutions at once.
 
     ``seed_genome`` is either a single genome (replicated to every lane) or
@@ -550,6 +552,20 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
     backoff starting at ``backoff_s``.  Real preemptions (SIGKILL) follow
     the same path through a process restart with ``resume=True``.
     Resilience accounting lands in ``BatchedEvolveResult.fault``.
+
+    ``on_block`` is the distributed runtime's seam (DESIGN.md §15): it is
+    called after every completed block (post-checkpoint) with ``{"block",
+    "n_blocks", "parents", "parent_f"}`` -- the island worker uses it for
+    heartbeats, lease-revocation checks, and elite migration.  Treat the
+    arguments as read-only snapshots; returning ``None`` leaves the run
+    untouched (the genome-exactness guarantee holds), while returning
+    ``{"parents": ..., "parent_f": ...}`` replaces the lane state before
+    the next block (island-model migration -- this deliberately forks the
+    trajectory away from the uninterrupted single-process run).  Setting
+    a lane's ``parent_f`` to NaN makes the next block re-score it
+    in-program, so a migrated-in genome needs no eager fitness pass.
+    Exceptions other than ``SimulatedFailure`` propagate (a revoked lease
+    aborts the run; it is not retried).
     """
     w = cfg.w
     obj = _resolve_objective(cfg, objective)
@@ -678,6 +694,15 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
             b += 1
             if ck is not None and ck.due(b, n_blocks):
                 ck.save(b, snapshot())
+            if on_block is not None:
+                upd = on_block({"block": b, "n_blocks": n_blocks,
+                                "parents": parents, "parent_f": parent_f})
+                if upd:
+                    if "parents" in upd:
+                        parents = jax.tree.map(jnp.asarray, upd["parents"])
+                    if "parent_f" in upd:
+                        parent_f = jnp.asarray(upd["parent_f"],
+                                               dtype=jnp.float32)
             if verbose and ((b - 1) % 4 == 0 or b == n_blocks):
                 e_np, a_np = np.asarray(e_last), np.asarray(a_last)
                 print(f"  gen {b * gpb:6d} x{L} lanes "
@@ -740,6 +765,51 @@ def _seed_genome(cfg: EvolveConfig) -> Genome:
     return cgp_mod.genome_from_netlist(seed_nl)
 
 
+def seed_genome(cfg: EvolveConfig) -> Genome:
+    """Public alias for the exact-multiplier seed (used by the island
+    workers, which construct per-lane runs outside the sweep drivers)."""
+    return _seed_genome(cfg)
+
+
+def reduce_front(lane_results: Sequence[EvolveResult],
+                 levels: Sequence[float], repeats: int,
+                 pareto_filter: bool = False,
+                 verbose: bool = False) -> List[EvolveResult]:
+    """Per-level best reduction over lane-major results (the sweep merge).
+
+    ``lane_results`` is the full ``len(levels) * repeats`` list in the
+    canonical lane order (lane ``li * repeats + r``); the reduction picks
+    each level's minimum-area lane (ties resolved to the earliest repeat,
+    exactly as the serial driver always has) and optionally applies the
+    monotone ``pareto_filter`` carry.  Shared by ``pareto_sweep_batched``
+    and the island coordinator's partial-sweep merge (DESIGN.md §15):
+    because every lane is deterministic given its (level, seed) spec, a
+    front assembled from per-lane results -- whichever workers produced
+    them, in whatever order, after however many re-leases -- is
+    genome-exact vs the uninterrupted single-process sweep.
+    """
+    levels = tuple(float(l) for l in levels)
+    R = max(1, int(repeats))
+    if len(lane_results) != len(levels) * R:
+        raise ValueError(f"reduce_front: got {len(lane_results)} lane "
+                         f"results for {len(levels)} levels x {R} repeats")
+    if pareto_filter and any(b < a for a, b in zip(levels, levels[1:])):
+        raise ValueError("pareto_filter requires levels sorted ascending: "
+                         "the best-so-far carry assumes earlier levels are "
+                         f"tighter (got {levels})")
+    results: List[EvolveResult] = []
+    for li, level in enumerate(levels):
+        lanes = [lane_results[li * R + r] for r in range(R)]
+        best = min(lanes, key=lambda r: r.area)
+        if pareto_filter and results and results[-1].area < best.area:
+            best = results[-1]
+        results.append(best)
+        if verbose:
+            print(f"level={level:8.5f} -> {best.metric}={best.error:.5f} "
+                  f"area={best.area:8.2f}")
+    return results
+
+
 def pareto_sweep(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                  levels: Sequence[float] = PAPER_LEVELS,
                  repeats: int = 1, verbose: bool = False,
@@ -782,7 +852,9 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                          injector: FailureInjector | None = None,
                          monitor: StepMonitor | None = None,
                          max_retries: int = 3,
-                         backoff_s: float = 0.0
+                         backoff_s: float = 0.0,
+                         on_block: Optional[Callable[[dict],
+                                                     Optional[dict]]] = None
                          ) -> List[EvolveResult]:
     """Lane-batched Pareto sweep: all (level, repeat) lanes in one program.
 
@@ -825,18 +897,12 @@ def pareto_sweep_batched(cfg: EvolveConfig, pmf_x: np.ndarray | None,
                            checkpoint_keep_last=checkpoint_keep_last,
                            resume=resume, injector=injector,
                            monitor=monitor, max_retries=max_retries,
-                           backoff_s=backoff_s)
+                           backoff_s=backoff_s,
+                           on_block=on_block)
     R = max(1, int(repeats))
-    results = []
-    for li, level in enumerate(levels):
-        lanes = [batch.lane(li * R + r) for r in range(R)]
-        best = min(lanes, key=lambda r: r.area)
-        if pareto_filter and results and results[-1].area < best.area:
-            best = results[-1]
-        results.append(best)
-        if verbose:
-            print(f"level={level:8.5f} -> {best.metric}={best.error:.5f} "
-                  f"area={best.area:8.2f} (batch {batch.wall_s:.1f}s)")
+    results = reduce_front([batch.lane(i) for i in range(len(levels) * R)],
+                           levels, R, pareto_filter=pareto_filter,
+                           verbose=verbose)
     if library_writer is not None:
         library_writer.add_sweep(results, cfg=bcfg,
                                  objective=_resolve_objective(cfg, objective),

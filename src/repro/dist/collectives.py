@@ -8,15 +8,72 @@ fewer DCN bytes than f32 -- the s8 all-gather is asserted in
 tests/test_distributed.py), dequantizes locally and averages.  The
 quantization residual is returned as the next step's error-feedback state,
 so the compression bias cancels over steps instead of accumulating.
+
+**Bounded-timeout guard** (DESIGN.md §15): on a real multi-host mesh a
+collective whose peer died blocks forever -- the default XLA behaviour is
+an indefinite hang, which a fault-tolerant fleet cannot afford.  Every
+pod helper here accepts ``timeout_s``; when set, the collective runs
+under ``run_with_deadline`` and a lost or stalled participant surfaces
+as a typed ``CollectiveTimeoutError`` instead of a hang, so the caller
+(the island coordinator, the training retry loop) can re-lease the dead
+peer's work.  The guard is a watchdog, not a cancellation: the stuck
+dispatch may still complete in the background, which is safe because
+every consumer treats a timed-out collective's result as abandoned.
 """
 
 from __future__ import annotations
+
+import threading
+from typing import Callable, TypeVar
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import active_mesh
+
+T = TypeVar("T")
+
+
+class CollectiveTimeoutError(TimeoutError):
+    """A collective participant failed to contribute within its deadline.
+
+    Raised by the pod helpers (and reused by ``dist/islands`` for its
+    gather deadline) so a lost peer is a typed, catchable event -- the
+    fleet re-leases the peer's lanes instead of hanging forever on a
+    dead all-gather.
+    """
+
+
+def run_with_deadline(fn: Callable[[], T], timeout_s: float,
+                      what: str = "collective") -> T:
+    """Run ``fn()`` under a watchdog; raise ``CollectiveTimeoutError``
+    if it does not complete within ``timeout_s`` seconds.
+
+    The body runs on a daemon thread and is *not* cancelled on timeout
+    (XLA dispatches cannot be interrupted); the caller must treat the
+    result as abandoned.  Exceptions from ``fn`` propagate unchanged.
+    """
+    box: dict = {}
+
+    def _target():
+        try:
+            box["value"] = fn()
+        except BaseException as e:  # noqa: BLE001 -- re-raised on the caller
+            box["error"] = e
+
+    th = threading.Thread(target=_target, daemon=True,
+                          name=f"deadline:{what}")
+    th.start()
+    th.join(timeout_s)
+    if th.is_alive():
+        raise CollectiveTimeoutError(
+            f"{what} did not complete within {timeout_s}s -- a "
+            "participant is lost or stalled; abandon the result and "
+            "re-lease its work")
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
 
 
 def _replicated(x: jax.Array) -> jax.Array:
@@ -43,17 +100,28 @@ def _pod_mean_leaf(g: jax.Array, ef: jax.Array):
     return mean, new_ef
 
 
-def compressed_pod_mean(grads, ef):
+def compressed_pod_mean(grads, ef, *, timeout_s: float | None = None):
     """Mean per-pod grads across the leading pod dim, int8-compressed.
 
     ``grads``/``ef`` are matching pytrees whose leaves carry a leading
     ``n_pod`` dim (sharded over the 'pod' mesh axis in deployment).
     Returns ``(mean_grads, new_ef)`` -- the mean without the leading dim,
     the EF with it.
+
+    ``timeout_s`` bounds the whole gather: a lost peer raises
+    ``CollectiveTimeoutError`` instead of hanging the training step
+    forever (the caller's retry loop then treats the step as failed).
+    ``None`` keeps the historical unbounded behaviour -- required inside
+    ``jax.jit``, where the helper only traces and cannot block.
     """
-    flat, treedef = jax.tree.flatten(grads)
-    flat_ef = treedef.flatten_up_to(ef)
-    outs = [_pod_mean_leaf(g, e) for g, e in zip(flat, flat_ef)]
-    means = treedef.unflatten([m for m, _ in outs])
-    new_ef = treedef.unflatten([e for _, e in outs])
-    return means, new_ef
+    def _body():
+        flat, treedef = jax.tree.flatten(grads)
+        flat_ef = treedef.flatten_up_to(ef)
+        outs = [_pod_mean_leaf(g, e) for g, e in zip(flat, flat_ef)]
+        means = treedef.unflatten([m for m, _ in outs])
+        new_ef = treedef.unflatten([e for _, e in outs])
+        return means, new_ef
+
+    if timeout_s is None:
+        return _body()
+    return run_with_deadline(_body, timeout_s, what="compressed_pod_mean")

@@ -1,0 +1,891 @@
+"""Fault-tolerant island-model evolution: coordinator + worker fleet.
+
+The paper's GP search is the compute bottleneck, and the fleet-scale
+roadmap runs many (level, repeat) lanes at once across hosts.  This
+module is the distributed runtime over the PR-6 resilience substrate
+(DESIGN.md §15): a **coordinator** shards the sweep's lanes across N
+**evaluation workers** as *leased* work units, tracks worker heartbeats,
+and re-leases a dead or stalled worker's lanes to survivors -- each lane
+resuming from its last ``core/checkpoint`` snapshot.  Because every lane
+is a deterministic function of its (level, seed) spec and the engine's
+checkpoint/resume is bit-identical, the final Pareto front and library
+entries are **genome-exact** vs an uninterrupted single-process
+``pareto_sweep_batched`` at equal seeds, regardless of which workers
+died when (``benchmarks/island_smoke.py`` SIGKILLs a worker mid-sweep
+and asserts exactly that).
+
+Transport is a shared coordination directory (multi-process on one host,
+the CPU CI container's reality); every mutation is an atomic
+write-temp-then-rename, so readers never observe torn state.  The state
+machine maps 1:1 onto a multi-host deployment: the directory becomes a
+coordinator RPC service, the heartbeat files become liveness pings, and
+nothing in the lease/merge logic changes.
+
+Layout under ``IslandConfig.root``::
+
+    spec.json                 # SweepSpec: what the whole fleet computes
+    island.json               # IslandConfig: lease TTL, heartbeat period
+    hearts/<worker>.json      # worker liveness (wall time + counter)
+    leases/lane_<i>.json      # lane -> (worker, epoch, resume_block)
+    results/lane_<i>.e<e>.npz # per-(lane, lease-epoch) final result
+    ckpt/lane_<i>/            # the lane's PR-6 checkpoints (+ PIN file)
+    elites/lane_<i>.npz       # island-model migration mailbox (opt-in)
+    archive.json              # coordinator's merged per-level summary
+    stats.json / DONE         # fleet accounting / shutdown sentinel
+
+**Lease/heartbeat state machine.**  A lane is UNLEASED, LEASED(worker,
+epoch) or DONE.  Only the coordinator writes leases, so there is no
+claim race.  A worker heartbeats from its evolution block hook; a worker
+whose heartbeat is older than ``lease_s`` is presumed dead (a *stalled*
+worker stops heartbeating too -- stalls and crashes are handled
+identically, per the straggler model of arXiv 2003.02491), its lanes
+re-lease to the least-loaded survivor with ``epoch + 1`` and
+``resume_block`` = the lane's latest committed snapshot, which the
+coordinator **pins** (``core.checkpoint.pin_block``) so no writer's
+``keep_last`` GC can delete it before the new holder loads it.
+
+**Monotone-archive reconciliation.**  A presumed-dead worker may only
+have been stalled; when it rejoins and completes, it writes a result
+under its *stale* epoch.  Lane determinism makes this harmless: the
+coordinator accepts the first result per lane and verifies any later
+epoch's result is identical (``stale_results`` counts them;
+``stale_mismatches`` would flag nondeterminism).  The per-level archive
+merge is idempotent and monotone -- replaying any subset of results in
+any order yields the same front.
+
+**Island-model migration** (``migration_every > 0``, off by default).
+Each lane is an island; every N blocks a worker publishes its current
+parent to the elite mailbox and adopts the best *feasible* elite of
+another island at the same level when it beats its own parent fitness
+(the adopted genome re-scores in-program via the NaN-fitness protocol).
+Migration deliberately forks the search trajectory, so it trades the
+genome-exactness guarantee for search quality -- the smoke and the
+exactness tests run with it off.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import checkpoint as evo_ckpt
+from repro.core import distributions as dist
+from repro.core import evolve as ev
+from repro.core import objective as obj_mod
+from repro.core.cgp import Genome
+from repro.dist.collectives import CollectiveTimeoutError
+from repro.train.fault import FailureInjector, SimulatedFailure
+
+
+class IslandError(RuntimeError):
+    """Base class for island-runtime failures."""
+
+
+class LeaseRevoked(IslandError):
+    """The coordinator re-leased this worker's lane (the worker was
+    presumed dead); the worker abandons the lane without writing a
+    result.  Not a retryable engine failure -- it aborts the lane run."""
+
+
+class WorkerKilled(IslandError):
+    """In-process stand-in for SIGKILL (``WorkerChaos.raise_instead``):
+    deterministic fleet tests 'kill' a worker by raising this and simply
+    never stepping it again."""
+
+
+class DeadSweepError(IslandError):
+    """Every worker exited (or none ever appeared) with lanes still
+    unfinished -- there is nobody left to lease work to."""
+
+
+# --------------------------------------------------------------- file utils
+
+def _write_json(path: str, obj: dict) -> None:
+    """Atomic JSON write: readers see the old or the new file, never a
+    torn one (same tmp + ``os.replace`` discipline as the checkpoints)."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
+
+
+def _read_json(path: str) -> Optional[dict]:
+    """Missing file -> None.  Atomic writes make partial JSON unreachable
+    through the normal protocol; a decode error is treated as missing so
+    a reader never crashes on external tampering."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _save_npz(path: str, **arrays) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+
+
+# ------------------------------------------------------------------- specs
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """The serializable description of one fleet sweep.
+
+    Everything a worker needs to run any lane bit-identically to the
+    corresponding lane of a single-process ``pareto_sweep_batched``: the
+    engine config fields, the level ladder, the objective (metric +
+    constraint bounds) and the design distribution (by name -- the PMFs
+    are deterministic constructors).  Lane ``i`` evolves toward
+    ``levels[i // repeats]`` with seed ``seed + 1000 * (i // repeats) +
+    (i % repeats)`` -- the exact mapping every sweep driver in the repo
+    has always used, which is what makes the distributed front mergeable
+    genome-exactly.
+    """
+
+    w: int = 4
+    signed: bool = False
+    lam: int = 4
+    h: int = 5
+    generations: int = 60
+    gens_per_jit_block: int = 20
+    seed: int = 0
+    levels: tuple = (0.01, 0.03)
+    repeats: int = 1
+    metric: str = "wmed"
+    bias_frac: Optional[float] = None
+    wce_cap: Optional[float] = None
+    pmf: str = "half_normal"       # "half_normal" | "uniform" | "none"
+    eval_backend: str = "jnp"
+    fused: Optional[bool] = None
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.levels) * max(1, int(self.repeats))
+
+    def lane_level(self, lane: int) -> float:
+        return float(self.levels[lane // max(1, int(self.repeats))])
+
+    def lane_seed(self, lane: int) -> int:
+        r = max(1, int(self.repeats))
+        return int(self.seed) + 1000 * (lane // r) + (lane % r)
+
+    def objective(self) -> obj_mod.Objective:
+        return obj_mod.Objective(
+            metric=self.metric,
+            constraints=obj_mod.Constraints(bias_frac=self.bias_frac,
+                                            wce_cap=self.wce_cap))
+
+    def pmf_x(self) -> Optional[np.ndarray]:
+        if self.pmf == "half_normal":
+            return dist.half_normal_pmf(self.w)
+        if self.pmf == "uniform":
+            return dist.uniform_pmf(self.w)
+        if self.pmf == "none":
+            return None
+        raise ValueError(f"unknown pmf spec {self.pmf!r}; expected "
+                         "'half_normal', 'uniform' or 'none'")
+
+    def _cfg_kwargs(self) -> dict:
+        return dict(w=self.w, signed=self.signed, lam=self.lam, h=self.h,
+                    generations=self.generations,
+                    gens_per_jit_block=self.gens_per_jit_block,
+                    objective=self.objective(),
+                    eval_backend=self.eval_backend, fused=self.fused)
+
+    def lane_config(self, lane: int) -> ev.BatchedEvolveConfig:
+        """The 1-lane config whose single lane is bit-identical to lane
+        ``lane`` of the full batched sweep (per-lane RNG parity,
+        DESIGN.md §9)."""
+        return ev.BatchedEvolveConfig(seed=self.lane_seed(lane),
+                                      levels=(self.lane_level(lane),),
+                                      repeats=1, **self._cfg_kwargs())
+
+    def batched_config(self) -> ev.BatchedEvolveConfig:
+        """The uninterrupted single-process reference configuration."""
+        return ev.BatchedEvolveConfig(seed=self.seed, levels=self.levels,
+                                      repeats=self.repeats,
+                                      **self._cfg_kwargs())
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["levels"] = list(self.levels)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SweepSpec":
+        d = dict(d)
+        d["levels"] = tuple(float(l) for l in d["levels"])
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandConfig:
+    """Fleet topology + failure-detection knobs.
+
+    ``lease_s`` is the liveness TTL: a worker whose last heartbeat is
+    older than this is presumed dead and its lanes re-lease.  Workers
+    heartbeat from the evolution block hook, so the invariant the
+    operator owns is ``lease_s > max block wall time (compile
+    included)`` -- a healthy worker must always heartbeat inside its
+    TTL.  ``deadline_s`` bounds the whole sweep; expiry raises
+    ``CollectiveTimeoutError`` (a lost-peer condition, same type the pod
+    collectives use).
+    """
+
+    root: str
+    lease_s: float = 15.0
+    heartbeat_s: float = 0.5
+    poll_s: float = 0.05
+    deadline_s: float = 600.0
+    migration_every: int = 0     # blocks between elite exchanges (0 = off)
+    checkpoint_every: int = 1
+    keep_last: int = 3
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "IslandConfig":
+        return cls(**d)
+
+
+def _lane_tag(lane: int) -> str:
+    return f"lane_{lane:04d}"
+
+
+def _paths(root: str) -> dict:
+    return {"spec": os.path.join(root, "spec.json"),
+            "island": os.path.join(root, "island.json"),
+            "hearts": os.path.join(root, "hearts"),
+            "leases": os.path.join(root, "leases"),
+            "results": os.path.join(root, "results"),
+            "ckpt": os.path.join(root, "ckpt"),
+            "elites": os.path.join(root, "elites"),
+            "archive": os.path.join(root, "archive.json"),
+            "stats": os.path.join(root, "stats.json"),
+            "done": os.path.join(root, "DONE")}
+
+
+def lane_checkpoint_dir(root: str, lane: int) -> str:
+    return os.path.join(root, "ckpt", _lane_tag(lane))
+
+
+# ------------------------------------------------------------- lane results
+
+def _save_lane_result(root: str, lane: int, epoch: int, worker: str,
+                      res: ev.EvolveResult) -> str:
+    meta = {"lane": lane, "epoch": epoch, "worker": worker,
+            "metric": res.metric, "level": res.level, "seed": res.seed,
+            "generations": res.generations, "wall_s": res.wall_s,
+            "fault": res.fault}
+    path = os.path.join(_paths(root)["results"],
+                        f"{_lane_tag(lane)}.e{epoch}.npz")
+    _save_npz(path,
+              nodes=np.asarray(res.genome.nodes, np.int32),
+              outs=np.asarray(res.genome.outs, np.int32),
+              error=np.float32(res.error), area=np.float32(res.area),
+              history=np.asarray(res.history, np.float32),
+              meta=np.frombuffer(json.dumps(meta).encode(), np.uint8))
+    return path
+
+
+def _load_lane_result(path: str) -> Tuple[dict, ev.EvolveResult]:
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["meta"]).decode())
+        res = ev.EvolveResult(
+            genome=Genome(np.asarray(z["nodes"]), np.asarray(z["outs"])),
+            error=float(z["error"]), area=float(z["area"]),
+            level=float(meta["level"]),
+            generations=int(meta["generations"]),
+            history=np.asarray(z["history"]),
+            wall_s=float(meta["wall_s"]), metric=meta["metric"],
+            seed=int(meta["seed"]), fault=dict(meta.get("fault") or {}))
+    return meta, res
+
+
+# ------------------------------------------------------------------- chaos
+
+@dataclasses.dataclass
+class WorkerChaos:
+    """Seeded kill/stall chaos at worker granularity (DESIGN.md §15).
+
+    Built on ``train/fault.FailureInjector``'s seeded draw machinery:
+    ``kill_after_blocks``/``stall_after_blocks`` are deterministic
+    targets counted over the worker's *total* completed blocks (across
+    lanes), ``p_kill``/``p_stall`` are per-block probabilities drawn
+    from ``random.Random(seed)``.  A kill is a real
+    ``SIGKILL``-to-self -- no cleanup, no flush, exactly a preempted
+    host -- unless ``raise_instead`` is set, in which case the
+    deterministic in-process tests get a catchable ``WorkerKilled``.
+    Stalls sleep ``stall_s`` inside the block hook, which also stops the
+    heartbeat: the coordinator cannot tell a stall from a crash, and
+    must not.
+    """
+
+    kill_after_blocks: Optional[int] = None
+    stall_after_blocks: Optional[int] = None
+    stall_s: float = 0.0
+    p_kill: float = 0.0
+    p_stall: float = 0.0
+    seed: int = 0
+    raise_instead: bool = False
+    sleep_fn: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        self._inj = FailureInjector(
+            fail_at_steps=(() if self.kill_after_blocks is None
+                           else (int(self.kill_after_blocks),)),
+            stall_at_steps=(() if self.stall_after_blocks is None
+                            else (int(self.stall_after_blocks),)),
+            stall_s=self.stall_s, p_fail=self.p_kill,
+            p_stall=self.p_stall, seed=self.seed, sleep_fn=self.sleep_fn)
+
+    def on_block(self, total_blocks: int) -> None:
+        try:
+            self._inj.check(total_blocks)
+        except SimulatedFailure as e:
+            if self.raise_instead:
+                raise WorkerKilled(str(e)) from e
+            os.kill(os.getpid(), signal.SIGKILL)   # no cleanup, no flush
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("sleep_fn", None)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WorkerChaos":
+        d = dict(d)
+        d.pop("sleep_fn", None)
+        return cls(**d)
+
+
+# -------------------------------------------------------------- coordinator
+
+class Coordinator:
+    """Owner of the lease table, the liveness view and the result archive.
+
+    Single-writer by construction: only the coordinator mutates
+    ``leases/`` and ``archive.json``, so lane ownership never races.
+    ``step()`` advances the state machine one tick (ingest results ->
+    expire dead workers' leases -> grant) and is side-effect-idempotent,
+    which is what the deterministic fleet tests drive directly; ``run``
+    is the wall-clock loop around it.
+    """
+
+    def __init__(self, cfg: IslandConfig, spec: SweepSpec, *,
+                 now_fn: Callable[[], float] = time.time):
+        self.cfg = cfg
+        self.spec = spec
+        self.now_fn = now_fn
+        self.paths = _paths(cfg.root)
+        for d in ("hearts", "leases", "results", "ckpt", "elites"):
+            os.makedirs(self.paths[d], exist_ok=True)
+        _write_json(self.paths["spec"], spec.to_json())
+        _write_json(self.paths["island"], cfg.to_json())
+        self.results: Dict[int, ev.EvolveResult] = {}
+        self.result_meta: Dict[int, dict] = {}
+        self.leases: Dict[int, dict] = {}
+        self.stats = {"granted": 0, "releases": 0, "stale_results": 0,
+                      "stale_mismatches": 0, "dead_workers": [],
+                      "workers_seen": []}
+
+    # -- liveness ----------------------------------------------------------
+
+    def live_workers(self) -> Dict[str, dict]:
+        """Workers whose last heartbeat is within the lease TTL."""
+        now = self.now_fn()
+        live = {}
+        hearts = self.paths["hearts"]
+        for fn in sorted(os.listdir(hearts)):
+            h = _read_json(os.path.join(hearts, fn))
+            if h is None:
+                continue
+            name = h.get("worker", fn[:-len(".json")])
+            if name not in self.stats["workers_seen"]:
+                self.stats["workers_seen"].append(name)
+            if now - float(h.get("t", -1e18)) <= self.cfg.lease_s:
+                live[name] = h
+        return live
+
+    # -- results + reconciliation -----------------------------------------
+
+    def _ingest_results(self) -> None:
+        rdir = self.paths["results"]
+        for fn in sorted(os.listdir(rdir)):
+            if not fn.endswith(".npz") or ".tmp." in fn:
+                continue
+            lane = int(fn.split(".")[0].split("_")[1])
+            meta, res = _load_lane_result(os.path.join(rdir, fn))
+            if lane not in self.results:
+                self.results[lane] = res
+                self.result_meta[lane] = meta
+                self.leases.pop(lane, None)
+                self._remove_lease_file(lane)
+                continue
+            if meta["epoch"] == self.result_meta[lane]["epoch"]:
+                continue   # the accepted file itself
+            # a presumed-dead worker rejoined with a stale-epoch result:
+            # lane determinism says it must be identical to the accepted
+            # one -- verify, count, and keep the first (monotone merge)
+            acc = self.results[lane]
+            same = (np.array_equal(np.asarray(acc.genome.nodes),
+                                   np.asarray(res.genome.nodes))
+                    and np.array_equal(np.asarray(acc.genome.outs),
+                                       np.asarray(res.genome.outs))
+                    and acc.error == res.error and acc.area == res.area)
+            self.stats["stale_results"] += 1
+            if not same:
+                self.stats["stale_mismatches"] += 1
+        self._write_archive()
+
+    def _write_archive(self) -> None:
+        """Per-level summary of the merged archive (observability + the
+        migration pull source is ``elites/``, not this file)."""
+        R = max(1, int(self.spec.repeats))
+        by_level: Dict[float, dict] = {}
+        for lane, res in self.results.items():
+            lvl = self.spec.lane_level(lane)
+            cur = by_level.get(lvl)
+            if cur is None or res.area < cur["area"]:
+                by_level[lvl] = {"lane": lane, "error": float(res.error),
+                                 "area": float(res.area)}
+        _write_json(self.paths["archive"], {
+            "done": len(self.results), "n_lanes": self.spec.n_lanes,
+            "repeats": R,
+            "front": {str(k): v for k, v in sorted(by_level.items())}})
+
+    # -- leases ------------------------------------------------------------
+
+    def _lease_path(self, lane: int) -> str:
+        return os.path.join(self.paths["leases"], f"{_lane_tag(lane)}.json")
+
+    def _remove_lease_file(self, lane: int) -> None:
+        try:
+            os.remove(self._lease_path(lane))
+        except OSError:
+            pass
+
+    def _grant(self, lane: int, worker: str, epoch: int,
+               load: Dict[str, int]) -> None:
+        ckdir = lane_checkpoint_dir(self.cfg.root, lane)
+        resume_block = evo_ckpt.latest_block(ckdir) or 0
+        if resume_block > 0:
+            # pin-by-lease: no writer's keep_last GC (not even the
+            # stalled previous holder's) may delete the snapshot the new
+            # holder is about to resume from
+            evo_ckpt.pin_block(ckdir, resume_block)
+        lease = {"lane": lane, "worker": worker, "epoch": epoch,
+                 "granted_t": self.now_fn(), "resume_block": resume_block}
+        _write_json(self._lease_path(lane), lease)
+        self.leases[lane] = lease
+        load[worker] = load.get(worker, 0) + 1
+        self.stats["granted"] += 1
+
+    def step(self) -> bool:
+        """One state-machine tick; returns True when every lane is done."""
+        self._ingest_results()
+        if len(self.results) == self.spec.n_lanes:
+            return True
+        live = self.live_workers()
+        load: Dict[str, int] = {w: 0 for w in live}
+        for lane, lease in self.leases.items():
+            if lane not in self.results and lease["worker"] in load:
+                load[lease["worker"]] += 1
+        for lane in range(self.spec.n_lanes):
+            if lane in self.results:
+                continue
+            lease = self.leases.get(lane)
+            if lease is not None and lease["worker"] in live:
+                continue                       # healthy holder, leave it
+            if not live:
+                continue                       # nobody to lease to
+            target = min(sorted(load), key=lambda w: load[w])
+            if lease is None:
+                self._grant(lane, target, epoch=0, load=load)
+            else:
+                # holder presumed dead (crashed OR stalled -- the
+                # coordinator cannot and must not distinguish): re-lease
+                # to a survivor, resuming from the last snapshot
+                dead = lease["worker"]
+                if dead not in self.stats["dead_workers"]:
+                    self.stats["dead_workers"].append(dead)
+                self.stats["releases"] += 1
+                self._grant(lane, target, epoch=lease["epoch"] + 1,
+                            load=load)
+        return False
+
+    # -- merge + driver ----------------------------------------------------
+
+    def front(self, pareto_filter: bool = False) -> List[ev.EvolveResult]:
+        """The partial-sweep merge: per-lane results -> per-level front.
+
+        Requires every lane; uses the same ``reduce_front`` reduction as
+        ``pareto_sweep_batched``, so the merged front is genome-exact vs
+        the uninterrupted single-process sweep.
+        """
+        missing = [l for l in range(self.spec.n_lanes)
+                   if l not in self.results]
+        if missing:
+            raise IslandError(f"front requested with lanes {missing} "
+                              "unfinished")
+        lanes = [self.results[i] for i in range(self.spec.n_lanes)]
+        return ev.reduce_front(lanes, self.spec.levels, self.spec.repeats,
+                               pareto_filter=pareto_filter)
+
+    def write_stats(self) -> dict:
+        out = dict(self.stats)
+        out["done"] = len(self.results)
+        out["n_lanes"] = self.spec.n_lanes
+        _write_json(self.paths["stats"], out)
+        return out
+
+    def write_library(self, path: str, *, append: bool = False,
+                      pareto_filter: bool = False, tag: str = "islands"):
+        """Persist the merged front exactly as ``pareto_sweep_batched``'s
+        ``library_writer`` hook would have (same cfg/objective/PMF ->
+        byte-identical entries)."""
+        from repro.library.writer import LibraryWriter
+        results = self.front(pareto_filter=pareto_filter)
+        with LibraryWriter(path, append=append, tag=tag) as w:
+            w.add_sweep(results, cfg=self.spec.batched_config(),
+                        objective=self.spec.objective(),
+                        pmf_x=self.spec.pmf_x())
+        return path
+
+    def run(self, procs: Optional[Sequence[subprocess.Popen]] = None,
+            verbose: bool = False) -> List[ev.EvolveResult]:
+        """Wall-clock loop: tick until done, deadline, or a dead fleet.
+
+        ``procs`` (the spawned worker processes, when the coordinator
+        also launched them) enables early dead-fleet detection: if every
+        worker has exited with lanes unfinished there is nothing to wait
+        for.  On completion the ``DONE`` sentinel tells workers to exit;
+        it is written even on failure so the fleet never outlives its
+        sweep.
+        """
+        t0 = self.now_fn()
+        try:
+            while True:
+                if self.step():
+                    break
+                if self.now_fn() - t0 > self.cfg.deadline_s:
+                    pending = [l for l in range(self.spec.n_lanes)
+                               if l not in self.results]
+                    raise CollectiveTimeoutError(
+                        f"island sweep missed its {self.cfg.deadline_s}s "
+                        f"deadline with lanes {pending} unfinished (live "
+                        f"workers: {sorted(self.live_workers())})")
+                if procs is not None and procs and \
+                        all(p.poll() is not None for p in procs):
+                    # every worker exited; one final tick ingests any
+                    # result that landed between our poll and their exit
+                    if self.step():
+                        break
+                    raise DeadSweepError(
+                        f"all {len(procs)} workers exited with "
+                        f"{self.spec.n_lanes - len(self.results)} lanes "
+                        "unfinished (rcs: "
+                        f"{[p.poll() for p in procs]})")
+                time.sleep(self.cfg.poll_s)
+        finally:
+            with open(self.paths["done"], "w") as f:
+                f.write("done")
+            self.write_stats()
+        if verbose:
+            print(f"coordinator: {self.spec.n_lanes} lanes done, "
+                  f"releases={self.stats['releases']}, "
+                  f"stale={self.stats['stale_results']}")
+        return self.front()
+
+
+# ------------------------------------------------------------------ worker
+
+class Worker:
+    """One evaluation worker: heartbeats, runs leased lanes, writes
+    per-epoch results.
+
+    The worker only ever *reads* leases (the coordinator owns them); its
+    whole protocol surface is the heartbeat file, the lane result files
+    and -- under migration -- the elite mailbox.  Lane execution is a
+    plain 1-lane ``evolve_batched`` with ``resume=True`` over the lane's
+    shared checkpoint directory, so a re-leased lane continues
+    bit-identically from wherever its previous holder durably got to.
+    """
+
+    def __init__(self, root: str, name: str, *,
+                 chaos: Optional[WorkerChaos] = None,
+                 now_fn: Callable[[], float] = time.time,
+                 abandon_on_revoke: bool = True):
+        self.root = root
+        self.name = name
+        self.chaos = chaos
+        self.now_fn = now_fn
+        self.abandon_on_revoke = abandon_on_revoke
+        self.paths = _paths(root)
+        spec_d = _read_json(self.paths["spec"])
+        if spec_d is None:
+            raise IslandError(f"no spec.json under {root} -- start the "
+                              "coordinator first")
+        self.spec = SweepSpec.from_json(spec_d)
+        icfg = _read_json(self.paths["island"])
+        self.cfg = (IslandConfig.from_json(icfg) if icfg is not None
+                    else IslandConfig(root=root))
+        self.blocks_done = 0      # across lanes; chaos counts these
+        self.lanes_done: List[int] = []
+        self.abandoned: List[int] = []
+        self.migrations = 0
+        os.makedirs(self.paths["hearts"], exist_ok=True)
+
+    # -- protocol I/O ------------------------------------------------------
+
+    def heartbeat(self) -> None:
+        _write_json(os.path.join(self.paths["hearts"],
+                                 f"{self.name}.json"),
+                    {"worker": self.name, "t": self.now_fn(),
+                     "n": self.blocks_done})
+
+    def _current_lease(self, lane: int) -> Optional[dict]:
+        return _read_json(os.path.join(self.paths["leases"],
+                                       f"{_lane_tag(lane)}.json"))
+
+    def _lane_has_result(self, lane: int) -> bool:
+        rdir = self.paths["results"]
+        tag = _lane_tag(lane)
+        return any(fn.startswith(tag + ".e") and fn.endswith(".npz")
+                   and ".tmp." not in fn
+                   for fn in os.listdir(rdir))
+
+    def my_pending_lease(self) -> Optional[dict]:
+        ldir = self.paths["leases"]
+        if not os.path.isdir(ldir):
+            return None
+        for fn in sorted(os.listdir(ldir)):
+            lease = _read_json(os.path.join(ldir, fn))
+            if (lease is not None and lease.get("worker") == self.name
+                    and not self._lane_has_result(lease["lane"])):
+                return lease
+        return None
+
+    # -- migration ---------------------------------------------------------
+
+    def _elite_path(self, lane: int) -> str:
+        return os.path.join(self.paths["elites"], f"{_lane_tag(lane)}.npz")
+
+    def _push_elite(self, lane: int, parents: Genome,
+                    parent_f: np.ndarray) -> None:
+        _save_npz(self._elite_path(lane),
+                  nodes=np.asarray(parents.nodes)[0].astype(np.int32),
+                  outs=np.asarray(parents.outs)[0].astype(np.int32),
+                  f=np.float32(np.asarray(parent_f)[0]),
+                  # float64: the pull compares levels for *equality* (an
+                  # island only accepts migrants evolving toward its own
+                  # target), so the spec's python float must round-trip
+                  level=np.float64(self.spec.lane_level(lane)))
+
+    def _pull_elite(self, lane: int,
+                    my_f: float) -> Optional[Tuple[Genome, float]]:
+        """Best feasible elite of another island at this level that beats
+        ``my_f``; None when no such migrant exists."""
+        level = self.spec.lane_level(lane)
+        best: Optional[Tuple[Genome, float]] = None
+        edir = self.paths["elites"]
+        for fn in sorted(os.listdir(edir)):
+            if not fn.endswith(".npz") or ".tmp." in fn:
+                continue
+            if fn == f"{_lane_tag(lane)}.npz":
+                continue              # own island
+            try:
+                with np.load(os.path.join(edir, fn)) as z:
+                    if float(z["level"]) != level:
+                        continue
+                    f = float(z["f"])
+                    if np.isfinite(f) and f < my_f and \
+                            (best is None or f < best[1]):
+                        best = (Genome(np.asarray(z["nodes"]),
+                                       np.asarray(z["outs"])), f)
+            except (OSError, ValueError, KeyError):
+                continue              # torn/foreign file: skip, not fatal
+        return best
+
+    # -- lane execution ----------------------------------------------------
+
+    def _block_hook(self, lane: int, lease: dict) -> Callable:
+        epoch = lease["epoch"]
+        mig_every = self.cfg.migration_every
+
+        def on_block(info: dict) -> Optional[dict]:
+            self.blocks_done += 1
+            if self.chaos is not None:
+                self.chaos.on_block(self.blocks_done)   # may kill/stall
+            self.heartbeat()
+            cur = self._current_lease(lane)
+            revoked = (cur is None or cur.get("worker") != self.name
+                       or cur.get("epoch") != epoch)
+            if revoked and self.abandon_on_revoke:
+                raise LeaseRevoked(
+                    f"{self.name}: lane {lane} re-leased to "
+                    f"{None if cur is None else cur.get('worker')!r} "
+                    f"(epoch {None if cur is None else cur.get('epoch')} "
+                    f"vs held {epoch}) -- abandoning")
+            if mig_every > 0 and info["block"] % mig_every == 0 \
+                    and info["block"] < info["n_blocks"]:
+                parents, parent_f = info["parents"], info["parent_f"]
+                my_f = float(np.asarray(parent_f)[0])
+                self._push_elite(lane, parents, np.asarray(parent_f))
+                got = self._pull_elite(lane, my_f)
+                if got is not None:
+                    migrant, _ = got
+                    self.migrations += 1
+                    return {"parents": Genome(
+                                np.asarray(migrant.nodes)[None],
+                                np.asarray(migrant.outs)[None]),
+                            "parent_f": np.full((1,), np.nan, np.float32)}
+            return None
+
+        return on_block
+
+    def run_lane(self, lease: dict) -> ev.EvolveResult:
+        lane = int(lease["lane"])
+        cfg1 = self.spec.lane_config(lane)
+        ckdir = lane_checkpoint_dir(self.root, lane)
+        batch = ev.evolve_batched(
+            cfg1, ev.seed_genome(cfg1), self.spec.pmf_x(),
+            checkpoint_dir=ckdir, resume=True,
+            checkpoint_every=self.cfg.checkpoint_every,
+            checkpoint_keep_last=self.cfg.keep_last,
+            on_block=self._block_hook(lane, lease))
+        res = batch.lane(0)
+        _save_lane_result(self.root, lane, int(lease["epoch"]),
+                          self.name, res)
+        self.lanes_done.append(lane)
+        return res
+
+    def step(self) -> bool:
+        """Heartbeat + run at most one leased lane; True if work was done.
+
+        A ``LeaseRevoked`` mid-lane abandons the lane silently -- the
+        coordinator already gave it away, and the durable checkpoints
+        this worker committed are exactly what the new holder resumes
+        from.
+        """
+        self.heartbeat()
+        lease = self.my_pending_lease()
+        if lease is None:
+            return False
+        try:
+            self.run_lane(lease)
+        except LeaseRevoked:
+            self.abandoned.append(int(lease["lane"]))
+        self.heartbeat()
+        return True
+
+    def run(self, verbose: bool = False) -> None:
+        """Poll for leases until the coordinator's DONE sentinel (or the
+        sweep deadline, so an orphaned worker cannot linger forever)."""
+        t0 = self.now_fn()
+        while not os.path.exists(self.paths["done"]):
+            if self.now_fn() - t0 > self.cfg.deadline_s:
+                break
+            if not self.step():
+                time.sleep(self.cfg.poll_s)
+        if verbose:
+            print(f"worker {self.name}: lanes={self.lanes_done} "
+                  f"abandoned={self.abandoned} blocks={self.blocks_done} "
+                  f"migrations={self.migrations}")
+
+
+# ---------------------------------------------------------------- driver
+
+def spawn_worker(root: str, name: str, *,
+                 chaos: Optional[WorkerChaos] = None,
+                 env: Optional[dict] = None) -> subprocess.Popen:
+    """Launch one worker as a real OS process (``python -m
+    repro.dist.islands --worker``), inheriting this interpreter."""
+    cmd = [sys.executable, "-m", "repro.dist.islands",
+           "--root", root, "--worker", name]
+    if chaos is not None:
+        cmd += ["--chaos", json.dumps(chaos.to_json())]
+    e = dict(os.environ if env is None else env)
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    e["PYTHONPATH"] = src + os.pathsep + e.get("PYTHONPATH", "")
+    return subprocess.Popen(cmd, env=e)
+
+
+def island_sweep(spec: SweepSpec, cfg: IslandConfig, *,
+                 n_workers: int = 2,
+                 chaos: Optional[Dict[str, WorkerChaos]] = None,
+                 library_path: Optional[str] = None,
+                 pareto_filter: bool = False,
+                 verbose: bool = False
+                 ) -> Tuple[List[ev.EvolveResult], dict]:
+    """One-call fleet sweep: coordinator inline + N spawned workers.
+
+    Returns ``(front, stats)`` where ``front`` is genome-exact vs
+    ``pareto_sweep_batched(spec.batched_config(), ...)`` whenever
+    migration is off, whatever chaos killed along the way (as long as at
+    least one worker survives).  ``chaos`` maps worker names to their
+    ``WorkerChaos``; ``library_path`` additionally persists the merged
+    front through the multi-writer-safe ``LibraryWriter``.
+    """
+    coord = Coordinator(cfg, spec)
+    procs = []
+    try:
+        for i in range(n_workers):
+            name = f"w{i}"
+            procs.append(spawn_worker(
+                cfg.root, name,
+                chaos=None if chaos is None else chaos.get(name)))
+        front = coord.run(procs=procs, verbose=verbose)
+    finally:
+        deadline = time.time() + 30.0
+        for p in procs:
+            try:
+                p.wait(timeout=max(0.1, deadline - time.time()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
+    stats = coord.write_stats()
+    stats["worker_rcs"] = {f"w{i}": p.poll() for i, p in enumerate(procs)}
+    if library_path is not None:
+        coord.write_library(library_path, pareto_filter=pareto_filter)
+        stats["library"] = library_path
+    return front, stats
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="island-model evolution fleet (worker entrypoint)")
+    ap.add_argument("--root", required=True,
+                    help="shared coordination directory")
+    ap.add_argument("--worker", required=True, metavar="NAME",
+                    help="run one evaluation worker under this name")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="WorkerChaos fields as JSON (seeded kill/stall)")
+    ap.add_argument("--keep-stale-lease", action="store_true",
+                    help="do not abandon a lane when its lease is "
+                         "revoked (exercises stale-result "
+                         "reconciliation)")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    chaos = (WorkerChaos.from_json(json.loads(args.chaos))
+             if args.chaos else None)
+    w = Worker(args.root, args.worker, chaos=chaos,
+               abandon_on_revoke=not args.keep_stale_lease)
+    w.run(verbose=args.verbose)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

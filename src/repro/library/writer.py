@@ -20,10 +20,19 @@ or as a context manager (flush on exit).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import glob as glob_mod
+import os
+import uuid
 from typing import List, Sequence
 
 import numpy as np
+
+try:                              # advisory file locks (Linux/macOS)
+    import fcntl
+except ImportError:               # pragma: no cover -- non-posix fallback
+    fcntl = None
 
 from repro.core import cgp as cgp_mod
 from repro.core import distributions as dist
@@ -81,15 +90,28 @@ class LibraryWriter:
     Crash safety (DESIGN.md §14): ``flush`` goes through the atomic
     ``schema.save_entries`` (temp file + ``os.replace``), and append-mode
     flushes are additionally *journaled*: the session's new entries are
-    committed to a ``<path>.journal.npz`` sidecar before the main library
-    is rewritten, and the journal is removed only after the rewrite lands.
-    A process that dies anywhere in between leaves either the old library
-    plus a recoverable journal, or the new library -- never a truncated
-    file and never lost entries.  The next append-mode open replays any
-    leftover journal (entries not already in the main file, by name) and
-    compacts it away on its own flush.  ``__exit__`` flushes only on a
-    clean exit, so a sweep that raised mid-run cannot overwrite a good
-    library with its partial state.
+    committed to a per-writer ``<path>.journal.<token>.npz`` sidecar
+    before the main library is rewritten, and the journal is removed only
+    after the rewrite lands.  A process that dies anywhere in between
+    leaves either the old library plus a recoverable journal, or the new
+    library -- never a truncated file and never lost entries.  The next
+    append-mode open replays *every* leftover journal (entries not
+    already in the main file, by name) and compacts the replayed ones
+    away on its own flush.  ``__exit__`` flushes only on a clean exit, so
+    a sweep that raised mid-run cannot overwrite a good library with its
+    partial state.
+
+    Multi-writer append safety (DESIGN.md §15): several processes (the
+    island workers, or a stalled worker racing its lane's new
+    leaseholder) may append to one library path concurrently.  Journals
+    are per-writer (pid + random token), so no two writers ever share a
+    sidecar, and the read-merge-rewrite critical section of ``flush``
+    runs under an advisory ``<path>.lock`` ``flock``: each flush re-reads
+    the committed library and unions it (by entry name) with its own
+    entries before rewriting, so concurrent appenders serialize and
+    nobody's entries are lost.  A writer SIGKILLed inside the critical
+    section releases the lock with the process and leaves its journal for
+    the next open to replay.
     """
 
     JOURNAL_SUFFIX = ".journal.npz"
@@ -100,22 +122,55 @@ class LibraryWriter:
         self.append = bool(append)
         self.entries: List[ComponentEntry] = []
         self.recovered = 0   # journal entries replayed by this open
+        self._token = f"{os.getpid()}-{uuid.uuid4().hex[:8]}"
+        self._replayed: List[str] = []   # journal files this open absorbed
         if append:
-            import os
-            if os.path.exists(self.path):
-                self.entries = list(schema_mod.load_entries(self.path))
-            jpath = self._journal_path()
-            if os.path.exists(jpath):
+            with self._locked():
+                if os.path.exists(self.path):
+                    self.entries = list(schema_mod.load_entries(self.path))
                 have = {e.name for e in self.entries}
-                for e in schema_mod.load_entries(jpath):
-                    if e.name not in have:
-                        self.entries.append(e)
-                        self.recovered += 1
+                # journals are only ever observable under the lock when
+                # their writer crashed mid-flush: live writers hold the
+                # lock across journal-write -> main-rewrite -> compaction.
+                # Absorb them all (even ones whose entries already landed
+                # in main) so this writer's flush can compact them away.
+                for jpath in self._journal_files():
+                    for e in schema_mod.load_entries(jpath):
+                        if e.name not in have:
+                            self.entries.append(e)
+                            have.add(e.name)
+                            self.recovered += 1
+                    self._replayed.append(jpath)
         # entries[:_n_seed] came from disk; the journal covers the rest
         self._n_seed = len(self.entries)
 
     def _journal_path(self) -> str:
-        return self.path + self.JOURNAL_SUFFIX
+        """This writer's private journal sidecar (never shared)."""
+        return f"{self.path}.journal.{self._token}.npz"
+
+    def _journal_files(self) -> List[str]:
+        """Every journal sidecar for this library path, legacy included."""
+        found = sorted(glob_mod.glob(self.path + ".journal.*.npz"))
+        legacy = self.path + self.JOURNAL_SUFFIX
+        if os.path.exists(legacy):
+            found.insert(0, legacy)
+        return [p for p in found if p != self._journal_path()]
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """Advisory exclusive lock over the library's read-merge-rewrite
+        critical sections (no-op where flock is unavailable)."""
+        if fcntl is None:
+            yield
+            return
+        lock_path = self.path + ".lock"
+        fd = os.open(lock_path, os.O_CREAT | os.O_RDWR, 0o644)
+        try:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+            yield
+        finally:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+            os.close(fd)
 
     def __enter__(self) -> "LibraryWriter":
         return self
@@ -200,19 +255,36 @@ class LibraryWriter:
         """Write the accumulated entries; returns the library path.
 
         Append mode journals first: the session's new entries (plus any
-        replayed from a prior crash) hit the sidecar atomically before the
-        main rewrite, and the journal is dropped only once the rewrite is
-        committed.
+        replayed from a prior crash) hit this writer's private sidecar
+        atomically before the main rewrite, and the journal is dropped
+        only once the rewrite is committed.  The whole critical section
+        runs under the library lock and re-reads the committed file, so
+        concurrent appenders serialize into a lost-update-free union (by
+        entry name; first writer wins a name, and identically named
+        entries are identical by construction -- names encode
+        metric/level/seed).
         """
-        import os
+        if not self.append:
+            schema_mod.save_entries(self.path, self.entries)
+            return self.path
 
         jpath = self._journal_path()
-        if self.append:
+        with self._locked():
             new = self.entries[self._n_seed - self.recovered:] \
                 if self.recovered else self.entries[self._n_seed:]
             if new:
                 schema_mod.save_entries(jpath, new)
-        schema_mod.save_entries(self.path, self.entries)
-        if os.path.exists(jpath):
-            os.remove(jpath)
+            # merge with whatever landed on disk since this writer opened
+            # (another appender's flush): union by name, committed first
+            merged = list(self.entries)
+            have = {e.name for e in merged}
+            if os.path.exists(self.path):
+                disk = schema_mod.load_entries(self.path)
+                extra = [e for e in disk if e.name not in have]
+                merged = merged + extra
+            schema_mod.save_entries(self.path, merged)
+            for p in [jpath] + self._replayed:
+                if os.path.exists(p):
+                    os.remove(p)
+            self._replayed = []
         return self.path

@@ -60,10 +60,18 @@ def save(root: str, step: int, tree: Any, keep_last: int = 3,
     manifest (``meta["extra"]``) -- callers use it for run metadata that
     must travel with the arrays (e.g. the evolution sweep's config digest,
     ``core/checkpoint.py``).
+
+    Safe under *concurrent writers of identical state* (DESIGN.md §15): a
+    stalled worker that was presumed dead may race the lane's new
+    leaseholder into the same directory.  The temp directory is
+    pid-unique, the final rename is atomic, and -- because a re-leased
+    lane replays a deterministic trajectory -- both writers produce
+    byte-identical snapshots, so either commit order leaves a valid
+    checkpoint.
     """
     os.makedirs(root, exist_ok=True)
     name = f"step_{step:08d}"
-    tmp = os.path.join(root, f".tmp_{name}")
+    tmp = os.path.join(root, f".tmp_{name}.{os.getpid()}")
     final = os.path.join(root, name)
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -100,9 +108,50 @@ def save(root: str, step: int, tree: Any, keep_last: int = 3,
     return final
 
 
+PIN_FILE = "PIN"
+
+
+def pin_step(root: str, step: int) -> None:
+    """Pin one step against ``keep_last`` pruning (atomic write).
+
+    Pin-by-lease (DESIGN.md §15): when the island coordinator re-leases a
+    dead worker's lane it records the snapshot the new holder will resume
+    from; *any* writer's GC in that directory -- including the stalled
+    original worker, which knows nothing about the re-lease -- must keep
+    that step until the pin moves or is cleared.  Without the pin, a
+    stalled worker saving one more block with a small ``keep_last`` can
+    delete the snapshot the survivor is mid-way through loading.
+    """
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f".{PIN_FILE}_tmp.{os.getpid()}")
+    with open(tmp, "w") as f:
+        f.write(str(int(step)))
+    os.replace(tmp, os.path.join(root, PIN_FILE))
+
+
+def read_pin(root: str) -> Optional[int]:
+    """The pinned step, or None (missing/unreadable pin = no pin)."""
+    try:
+        with open(os.path.join(root, PIN_FILE)) as f:
+            return int(f.read().strip())
+    except (OSError, ValueError):
+        return None
+
+
+def unpin(root: str) -> None:
+    try:
+        os.remove(os.path.join(root, PIN_FILE))
+    except OSError:
+        pass
+
+
 def _gc(root: str, keep_last: int):
+    pin = read_pin(root)
+    pinned = None if pin is None else f"step_{pin:08d}"
     steps = sorted(d for d in os.listdir(root) if d.startswith("step_"))
     for d in steps[:-keep_last]:
+        if d == pinned:
+            continue
         shutil.rmtree(os.path.join(root, d), ignore_errors=True)
 
 

@@ -4,6 +4,18 @@
   the driver's retry loop restores the last checkpoint and resumes;
   tests assert the final parameters are bitwise identical to an
   uninterrupted run (deterministic data pipeline + checkpointed RNG).
+  Beyond the deterministic ``fail_at_steps`` list it carries two chaos
+  modes the island-model fleet tests use (DESIGN.md §15):
+
+  - **seeded rate-based failures** -- ``p_fail`` is the per-check (or
+    per-span) probability of a crash, drawn from a private
+    ``random.Random(seed)`` stream, so a chaos run is fully reproducible:
+    the k-th ``check``/``check_span`` call always sees the k-th draw.
+  - **stalls** -- ``stall_at_steps``/``p_stall`` put the caller to sleep
+    for ``stall_s`` seconds instead of raising, modeling stragglers and
+    hung collectives (a stalled worker stops heartbeating and gets its
+    lanes re-leased).  ``sleep_fn`` is injectable so unit tests observe
+    stalls without real wall time.
 
 * ``StepMonitor`` implements the deadline policy used against stragglers:
   per-step wall-time EWMA; a step exceeding ``deadline_factor`` x EWMA is
@@ -15,6 +27,7 @@
 
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -27,12 +40,45 @@ class SimulatedFailure(RuntimeError):
 @dataclass
 class FailureInjector:
     fail_at_steps: tuple = ()
+    # seeded probabilistic chaos (DESIGN.md §15): one draw per check call
+    p_fail: float = 0.0            # probability a check raises
+    p_stall: float = 0.0           # probability a check stalls instead
+    stall_at_steps: tuple = ()     # deterministic stall targets
+    stall_s: float = 0.0           # how long a stall sleeps
+    seed: Optional[int] = None     # seeds the rate-based draws
+    sleep_fn: Callable[[float], None] = time.sleep
     _fired: set = field(default_factory=set)
+    _stalled: set = field(default_factory=set)
+    stalls: List[int] = field(default_factory=list)   # steps stalled at
+    rate_failures: int = 0         # p_fail draws that fired
+    rate_stalls: int = 0           # p_stall draws that fired
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def _rate_draws(self, step: int):
+        """One (stall, fail) decision per check call, in a fixed draw
+        order so equal seeds replay the identical chaos schedule."""
+        if self.p_stall > 0.0 and self._rng.random() < self.p_stall:
+            self.rate_stalls += 1
+            self.stalls.append(step)
+            self.sleep_fn(self.stall_s)
+        if self.p_fail > 0.0 and self._rng.random() < self.p_fail:
+            self.rate_failures += 1
+            raise SimulatedFailure(
+                f"injected rate-based failure at step {step} "
+                f"(p_fail={self.p_fail}, seed={self.seed})")
 
     def check(self, step: int):
+        for s in self.stall_at_steps:
+            if s == step and s not in self._stalled:
+                self._stalled.add(s)
+                self.stalls.append(s)
+                self.sleep_fn(self.stall_s)
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+        self._rate_draws(step)
 
     def check_span(self, start: int, stop: int):
         """Fire if any un-fired target lies in ``[start, stop)``.
@@ -41,14 +87,29 @@ class FailureInjector:
         sweep runs ``gens_per_jit_block`` generations per dispatch) cannot
         observe every step number; they check the whole span a block is
         about to cover, so a target generation anywhere inside it still
-        kills the block -- once, like ``check``.
+        kills the block -- once, like ``check``.  Rate-based chaos draws
+        once per span (a span is one decision point, not ``stop - start``
+        of them).
         """
+        for s in self.stall_at_steps:
+            if start <= s < stop and s not in self._stalled:
+                self._stalled.add(s)
+                self.stalls.append(s)
+                self.sleep_fn(self.stall_s)
         for s in self.fail_at_steps:
             if start <= s < stop and s not in self._fired:
                 self._fired.add(s)
                 raise SimulatedFailure(
                     f"injected node failure at step {s} "
                     f"(span [{start}, {stop}))")
+        self._rate_draws(start)
+
+    def stall(self, seconds: Optional[float] = None, step: int = -1):
+        """Explicit straggler injection: sleep ``seconds`` (default
+        ``stall_s``) and record it.  Chaos harnesses call this directly
+        at worker granularity (``dist/islands.WorkerChaos``)."""
+        self.stalls.append(step)
+        self.sleep_fn(self.stall_s if seconds is None else seconds)
 
 
 @dataclass

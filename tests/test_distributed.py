@@ -123,6 +123,58 @@ def test_elastic_restart_different_mesh():
     assert "OK" in out
 
 
+def test_run_with_deadline_passes_results_and_errors():
+    """Fast bodies return their value; body exceptions propagate typed."""
+    from repro.dist.collectives import (CollectiveTimeoutError,
+                                        run_with_deadline)
+    assert run_with_deadline(lambda: 42, timeout_s=5.0) == 42
+    with pytest.raises(ValueError, match="from the body"):
+        run_with_deadline(lambda: (_ for _ in ()).throw(
+            ValueError("from the body")), timeout_s=5.0)
+    assert issubclass(CollectiveTimeoutError, TimeoutError)
+
+
+def test_pod_mean_lost_peer_raises_typed_timeout(monkeypatch):
+    """A collective whose participant never contributes must surface as a
+    typed CollectiveTimeoutError, not an indefinite hang (the mocked slow
+    participant stalls far past the deadline)."""
+    import threading as th
+    import jax.numpy as jnp
+    from repro.dist import collectives as coll
+
+    started = th.Event()
+
+    def slow_leaf(g, ef):
+        started.set()
+        th.Event().wait(30.0)         # a peer that never shows up
+        return g, ef
+
+    monkeypatch.setattr(coll, "_pod_mean_leaf", slow_leaf)
+    g = {"w": jnp.ones((2, 4))}
+    ef = {"w": jnp.zeros((2, 4))}
+    with pytest.raises(coll.CollectiveTimeoutError, match="lost or stalled"):
+        coll.compressed_pod_mean(g, ef, timeout_s=0.2)
+    assert started.is_set()           # the body really ran and was abandoned
+
+
+def test_pod_mean_timeout_none_stays_unbounded(monkeypatch):
+    """timeout_s=None keeps the historical direct call -- required inside
+    jit, where the helper only traces and must not spawn watchdogs."""
+    from repro.dist import collectives as coll
+    import jax.numpy as jnp
+
+    def no_watchdog(fn, timeout_s, what="collective"):
+        raise AssertionError("unbounded path must not use the watchdog")
+
+    monkeypatch.setattr(coll, "run_with_deadline", no_watchdog)
+    g = {"w": jnp.ones((2, 4))}
+    ef = {"w": jnp.zeros((2, 4))}
+    mean, ef2 = coll.compressed_pod_mean(g, ef)
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(mean["w"]), np.ones((4,)),
+                               rtol=1e-2)
+
+
 def test_dryrun_smoke_tiny_mesh():
     """The dry-run driver machinery works on a small mesh in-process."""
     out = _run("""

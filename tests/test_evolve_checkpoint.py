@@ -228,3 +228,50 @@ def test_foreign_checkpoint_is_typed(tmp_path):
 def test_load_sweep_missing_dir_is_typed(tmp_path):
     with pytest.raises(evo_ckpt.SweepCheckpointError):
         evo_ckpt.load_sweep(str(tmp_path / "nope"), "digest")
+
+
+# ------------------------------------------- pin-by-lease GC (DESIGN.md §15)
+
+def _fake_sweep_state(lanes=2):
+    return {"nodes": np.zeros((lanes, 8, 3), np.int32),
+            "outs": np.zeros((lanes, 4), np.int32),
+            "parent_f": np.zeros(lanes, np.float32),
+            "keys": np.zeros((lanes, 2), np.uint32),
+            "hist": np.zeros((3, lanes, 2), np.float32),
+            "error": np.zeros(lanes, np.float32),
+            "area": np.zeros(lanes, np.float32)}
+
+
+def test_gc_never_prunes_the_pinned_resume_block(tmp_path):
+    """Regression: a re-leased lane's resume snapshot must survive any
+    writer's keep_last pruning -- the stalled original worker saving one
+    more block with keep_last=1 used to delete the very snapshot the new
+    leaseholder was about to load."""
+    d = str(tmp_path / "ck")
+    state = _fake_sweep_state()
+    evo_ckpt.save_sweep(d, 1, state, "dig", keep_last=1)
+    # coordinator re-leases the lane, pinning block 1 for the new holder
+    evo_ckpt.pin_block(d, 1)
+    assert evo_ckpt.pinned_block(d) == 1
+    # the presumed-dead worker keeps saving with keep_last=1
+    evo_ckpt.save_sweep(d, 2, state, "dig", keep_last=1)
+    evo_ckpt.save_sweep(d, 3, state, "dig", keep_last=1)
+    steps = sorted(f for f in os.listdir(d) if f.startswith("step_"))
+    assert steps == ["step_00000001", "step_00000003"]  # pinned + latest
+    block, loaded = evo_ckpt.load_sweep(d, "dig", block=1)
+    assert block == 1 and set(loaded) == set(state)
+    # pin released -> the old snapshot is prunable again
+    evo_ckpt.unpin_block(d)
+    assert evo_ckpt.pinned_block(d) is None
+    evo_ckpt.save_sweep(d, 4, state, "dig", keep_last=1)
+    steps = sorted(f for f in os.listdir(d) if f.startswith("step_"))
+    assert steps == ["step_00000004"]
+
+
+def test_reset_dir_clears_pins(tmp_path):
+    d = str(tmp_path / "ck")
+    evo_ckpt.save_sweep(d, 1, _fake_sweep_state(), "dig")
+    evo_ckpt.pin_block(d, 1)
+    evo_ckpt.reset_dir(d)
+    assert evo_ckpt.latest_block(d) is None
+    assert evo_ckpt.pinned_block(d) is None

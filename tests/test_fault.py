@@ -94,3 +94,77 @@ def test_injector_span_fires_once_per_target():
     with pytest.raises(SimulatedFailure):
         inj.check_span(41, 61)  # 45 in [41, 61)
     inj.check_span(41, 61)      # already fired: retry passes through
+
+
+# ------------------------------------------- seeded chaos (DESIGN.md §15)
+
+def _chaos_trace(seed, n=200, p_fail=0.1):
+    """Which of n checks raise under a seeded rate-based injector."""
+    inj = FailureInjector(p_fail=p_fail, seed=seed)
+    fired = []
+    for s in range(n):
+        try:
+            inj.check(s)
+        except SimulatedFailure:
+            fired.append(s)
+    return fired, inj
+
+
+def test_rate_failures_are_seed_deterministic():
+    """Equal seeds replay the identical chaos schedule; different seeds
+    produce a different one (the draws come from a private stream)."""
+    a, inj_a = _chaos_trace(seed=3)
+    b, inj_b = _chaos_trace(seed=3)
+    assert a == b and len(a) > 0
+    assert inj_a.rate_failures == len(a) == inj_b.rate_failures
+    c, _ = _chaos_trace(seed=4)
+    assert c != a
+
+
+def test_rate_draws_once_per_span():
+    """check_span consumes exactly one draw set per call, so block-granular
+    drivers see the same schedule density as step-granular ones."""
+    per_step = FailureInjector(p_fail=0.5, seed=0)
+    per_span = FailureInjector(p_fail=0.5, seed=0)
+    step_fires = span_fires = 0
+    for k in range(50):
+        try:
+            per_step.check(k)
+        except SimulatedFailure:
+            step_fires += 1
+        try:
+            per_span.check_span(k * 20, (k + 1) * 20)
+        except SimulatedFailure:
+            span_fires += 1
+    assert step_fires == span_fires == per_span.rate_failures
+
+
+def test_stall_records_without_wall_time():
+    """Stalls sleep through the injectable sleep_fn and are recorded --
+    unit tests observe straggler behaviour with zero real wall time."""
+    slept = []
+    inj = FailureInjector(stall_at_steps=(5,), stall_s=7.5,
+                          sleep_fn=slept.append)
+    for s in range(10):
+        inj.check(s)
+    assert slept == [7.5] and inj.stalls == [5]
+    inj.check(5)                       # deterministic stalls fire once
+    assert slept == [7.5]
+    inj.stall(2.0, step=9)             # explicit straggler injection
+    assert slept == [7.5, 2.0] and inj.stalls == [5, 9]
+    inj.stall()                        # defaults to stall_s
+    assert slept[-1] == 7.5
+
+
+def test_rate_stalls_are_seeded_and_recorded():
+    slept = []
+    inj = FailureInjector(p_stall=0.3, stall_s=1.0, seed=11,
+                          sleep_fn=slept.append)
+    for s in range(100):
+        inj.check(s)
+    assert inj.rate_stalls == len(slept) == len(inj.stalls) > 0
+    inj2 = FailureInjector(p_stall=0.3, stall_s=1.0, seed=11,
+                           sleep_fn=lambda _: None)
+    for s in range(100):
+        inj2.check(s)
+    assert inj2.stalls == inj.stalls

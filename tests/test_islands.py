@@ -1,0 +1,346 @@
+"""Island-model fleet runtime (DESIGN.md §15).
+
+Deterministic, in-process coverage of ``repro.dist.islands``: the
+coordinator and workers are steppable objects with an injectable clock,
+kills are ``WorkerChaos(raise_instead=True)`` exceptions, and stalls are
+simply workers that stop being stepped -- so every lease-expiry /
+re-lease / reconciliation path runs without real subprocesses or wall
+time.  The real-SIGKILL end-to-end version of the same story is
+``benchmarks/island_smoke.py`` (the ``island-smoke`` CI job).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import checkpoint as evo_ckpt
+from repro.core import evolve as ev
+from repro.dist.islands import (Coordinator, IslandConfig, SweepSpec,
+                                Worker, WorkerChaos, WorkerKilled,
+                                IslandError, lane_checkpoint_dir)
+from repro.train.fault import SimulatedFailure
+
+# 2 blocks per lane at a width the CPU sweeps in ~a second -- small, but
+# a kill after block 1 still leaves real work to re-lease and resume.
+W, GENS, BLOCK = 3, 12, 6
+
+
+def _spec(levels=(0.03,), repeats=2, seed=0):
+    return SweepSpec(w=W, generations=GENS, gens_per_jit_block=BLOCK,
+                     seed=seed, levels=levels, repeats=repeats)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _fleet(tmp_path, spec, **cfg_kw):
+    cfg = IslandConfig(root=str(tmp_path / "fleet"), lease_s=5.0,
+                       deadline_s=300.0, **cfg_kw)
+    clock = FakeClock()
+    coord = Coordinator(cfg, spec, now_fn=clock)
+    return cfg, clock, coord
+
+
+def _reference(spec):
+    return ev.pareto_sweep_batched(spec.batched_config(), spec.pmf_x(),
+                                   levels=spec.levels,
+                                   repeats=spec.repeats)
+
+
+def _assert_genome_exact(front, ref):
+    assert len(front) == len(ref)
+    for got, want in zip(front, ref):
+        assert np.array_equal(np.asarray(got.genome.nodes),
+                              np.asarray(want.genome.nodes))
+        assert np.array_equal(np.asarray(got.genome.outs),
+                              np.asarray(want.genome.outs))
+        assert got.error == want.error and got.area == want.area
+        assert got.seed == want.seed
+
+
+# ----------------------------------------------------------- spec mapping
+
+def test_spec_round_trips_and_maps_lanes_canonically():
+    spec = SweepSpec(w=4, levels=(0.01, 0.03), repeats=2, seed=7,
+                     metric="wce", wce_cap=0.5, pmf="uniform")
+    back = SweepSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.n_lanes == 4
+    # the canonical lane ladder: level-major, seed + 1000*li + r
+    assert [back.lane_level(i) for i in range(4)] == [0.01, 0.01,
+                                                     0.03, 0.03]
+    assert [back.lane_seed(i) for i in range(4)] == [7, 8, 1007, 1008]
+    cfg2 = back.lane_config(2)
+    assert cfg2.levels == (0.03,) and cfg2.repeats == 1
+    assert cfg2.seed == 1007 and cfg2.w == 4
+    assert back.objective().constraints.wce_cap == 0.5
+    assert back.batched_config().levels == (0.01, 0.03)
+
+
+def test_spec_rejects_unknown_pmf():
+    with pytest.raises(ValueError, match="pmf"):
+        SweepSpec(pmf="gaussianish").pmf_x()
+
+
+# ------------------------------------------------------- chaos machinery
+
+def test_worker_chaos_is_seeded_and_raises_in_process():
+    chaos = WorkerChaos(kill_after_blocks=3, raise_instead=True)
+    chaos.on_block(1)
+    chaos.on_block(2)
+    with pytest.raises(WorkerKilled):
+        chaos.on_block(3)
+
+    # rate-based kills replay identically at equal seeds
+    def trace(seed):
+        c = WorkerChaos(p_kill=0.2, seed=seed, raise_instead=True)
+        fired = []
+        for b in range(1, 60):
+            try:
+                c.on_block(b)
+            except WorkerKilled:
+                fired.append(b)
+        return fired
+
+    assert trace(5) == trace(5) and len(trace(5)) > 0
+    assert trace(5) != trace(6)
+
+
+def test_worker_chaos_stall_uses_injected_sleep():
+    slept = []
+    chaos = WorkerChaos(stall_after_blocks=2, stall_s=9.0,
+                        sleep_fn=slept.append)
+    chaos.on_block(1)
+    chaos.on_block(2)
+    assert slept == [9.0]
+    # round-trips through the CLI's JSON encoding without the sleep_fn
+    back = WorkerChaos.from_json(chaos.to_json())
+    assert back.stall_after_blocks == 2 and back.stall_s == 9.0
+
+
+# ------------------------------------------------------- lease lifecycle
+
+def test_lease_lifecycle_expiry_releases_and_pins(tmp_path):
+    spec = _spec()
+    cfg, clock, coord = _fleet(tmp_path, spec)
+    wa = Worker(cfg.root, "wa", now_fn=clock)
+    wb = Worker(cfg.root, "wb", now_fn=clock)
+    wa.heartbeat(); wb.heartbeat()
+
+    assert coord.step() is False
+    # both lanes leased, spread across the live workers, epoch 0
+    assert sorted(coord.leases) == [0, 1]
+    holders = {l["worker"] for l in coord.leases.values()}
+    assert holders == {"wa", "wb"}
+    assert all(l["epoch"] == 0 for l in coord.leases.values())
+    assert coord.stats["granted"] == 2
+
+    # a healthy holder keeps its lease across ticks
+    clock.t = 2.0
+    wa.heartbeat(); wb.heartbeat()
+    coord.step()
+    assert coord.stats["releases"] == 0
+
+    # wb durably committed block 1 of lane 1, then went silent
+    lane1 = next(l for l in coord.leases.values() if l["worker"] == "wb")
+    ckdir = lane_checkpoint_dir(cfg.root, lane1["lane"])
+    state = {"nodes": np.zeros((1, 8, 3), np.int32),
+             "outs": np.zeros((1, 4), np.int32),
+             "parent_f": np.zeros(1, np.float32),
+             "keys": np.zeros((1, 2), np.uint32),
+             "hist": np.zeros((2, 1, 2), np.float32),
+             "error": np.zeros(1, np.float32),
+             "area": np.zeros(1, np.float32)}
+    evo_ckpt.save_sweep(ckdir, 1, state, "dig")
+    clock.t = 10.0                      # > lease_s past wb's heartbeat
+    wa.heartbeat()
+    coord.step()
+    lease = coord.leases[lane1["lane"]]
+    assert lease["worker"] == "wa" and lease["epoch"] == 1
+    assert lease["resume_block"] == 1
+    # pin-by-lease: the resume snapshot is pinned for the new holder
+    assert evo_ckpt.pinned_block(ckdir) == 1
+    assert coord.stats["releases"] == 1
+    assert coord.stats["dead_workers"] == ["wb"]
+
+
+def test_front_requires_every_lane(tmp_path):
+    spec = _spec()
+    _, _, coord = _fleet(tmp_path, spec)
+    with pytest.raises(IslandError, match="unfinished"):
+        coord.front()
+
+
+# --------------------------------------------- e2e: kill, re-lease, resume
+
+def test_killed_worker_relesed_front_genome_exact(tmp_path):
+    """The tentpole invariant, in-process: a worker dies mid-sweep after
+    durably checkpointing, the survivor resumes its lanes, and the merged
+    front is genome-exact vs the uninterrupted single-process sweep."""
+    spec = _spec(levels=(0.01, 0.03), repeats=1)
+    cfg, clock, coord = _fleet(tmp_path, spec)
+    w0 = Worker(cfg.root, "w0", now_fn=clock)
+    w1 = Worker(cfg.root, "w1", now_fn=clock,
+                chaos=WorkerChaos(kill_after_blocks=1, raise_instead=True))
+    w0.heartbeat(); w1.heartbeat()
+    assert coord.step() is False
+
+    with pytest.raises(WorkerKilled):
+        w1.step()                       # dies after committing block 1
+    victim_lane = w1.my_pending_lease()["lane"]
+    assert evo_ckpt.latest_block(
+        lane_checkpoint_dir(cfg.root, victim_lane)) == 1
+
+    assert w0.step() is True            # w0 finishes its own lane
+    clock.t = 10.0                      # w1's heartbeat expires
+    w0.heartbeat()
+    assert coord.step() is False
+    assert coord.stats["releases"] == 1
+    assert coord.leases[victim_lane]["worker"] == "w0"
+    assert coord.leases[victim_lane]["resume_block"] == 1
+
+    assert w0.step() is True            # resumes the victim's lane
+    assert coord.step() is True
+    _assert_genome_exact(coord.front(), _reference(spec))
+    stats = coord.write_stats()
+    assert stats["stale_results"] == 0 and stats["stale_mismatches"] == 0
+
+
+# ------------------------------------- stale rejoin + monotone reconciliation
+
+def test_stalled_worker_rejoins_with_identical_stale_result(tmp_path):
+    """A worker presumed dead was only stalled: it finishes its revoked
+    lane under the stale epoch.  Determinism makes the late result
+    byte-identical; the coordinator's first-accepted-wins merge counts it
+    and the front is unchanged."""
+    spec = _spec()                      # 1 level x 2 repeats
+    cfg, clock, coord = _fleet(tmp_path, spec)
+    w0 = Worker(cfg.root, "w0", now_fn=clock)
+    w1 = Worker(cfg.root, "w1", now_fn=clock, abandon_on_revoke=False)
+    w0.heartbeat(); w1.heartbeat()
+    coord.step()
+    stale_lease = w1.my_pending_lease()
+    assert stale_lease["worker"] == "w1"
+
+    # w1 stalls (never steps); its lease expires and w0 takes over
+    assert w0.step() is True
+    clock.t = 10.0
+    w0.heartbeat()
+    coord.step()
+    assert coord.stats["releases"] == 1
+    assert w0.step() is True
+    assert coord.step() is True
+    front_before = coord.front()
+
+    # w1 wakes and completes the lane under its revoked epoch-0 lease
+    res = w1.run_lane(stale_lease)
+    assert res is not None
+    assert coord.step() is True         # re-ingest: reconciliation
+    stats = coord.write_stats()
+    assert stats["stale_results"] == 1
+    assert stats["stale_mismatches"] == 0
+    _assert_genome_exact(coord.front(), front_before)
+    _assert_genome_exact(coord.front(), _reference(spec))
+
+
+def test_revoked_lease_is_abandoned_by_default(tmp_path):
+    """abandon_on_revoke=True (the deployment default): the block hook
+    notices the lane moved to another holder and the worker abandons
+    mid-lane instead of burning compute on a lane someone else owns."""
+    from repro.dist.islands import LeaseRevoked
+    spec = _spec(levels=(0.03,), repeats=1)
+    cfg, clock, coord = _fleet(tmp_path, spec)
+    w1 = Worker(cfg.root, "w1", now_fn=clock)
+    w1.heartbeat()
+    coord.step()
+    stale = w1.my_pending_lease()       # w1 starts the lane holding this
+    # revoke behind w1's back: the coordinator re-granted the lane
+    import json
+    moved = dict(stale)
+    moved["worker"], moved["epoch"] = "w9", stale["epoch"] + 1
+    with open(os.path.join(cfg.root, "leases", "lane_0000.json"),
+              "w") as f:
+        json.dump(moved, f)
+    # the hook's first revocation check aborts the lane, typed
+    with pytest.raises(LeaseRevoked, match="re-leased"):
+        w1.run_lane(stale)
+    assert w1.lanes_done == []
+    assert os.listdir(os.path.join(cfg.root, "results")) == []
+    # step() swallows the abandonment (the new holder owns the lane now)
+    w1.run_lane = lambda lease: (_ for _ in ()).throw(
+        LeaseRevoked("mid-lane"))
+    w1.abandon_on_revoke = True
+    # make the lease visible to w1 again so step() picks it up
+    with open(os.path.join(cfg.root, "leases", "lane_0000.json"),
+              "w") as f:
+        json.dump(stale, f)
+    assert w1.step() is True
+    assert w1.abandoned == [0]
+
+
+# ------------------------------------------------------------- migration
+
+def test_elite_mailbox_pull_is_level_local_and_feasible(tmp_path):
+    spec = _spec(levels=(0.01, 0.03), repeats=2)   # lanes 0,1 @ .01; 2,3 @ .03
+    cfg, clock, _ = _fleet(tmp_path, spec, migration_every=1)
+    w = Worker(cfg.root, "w0", now_fn=clock)
+    g = ev.seed_genome(spec.lane_config(0))
+    stacked = ev.Genome(np.asarray(g.nodes)[None], np.asarray(g.outs)[None])
+
+    w._push_elite(1, stacked, np.asarray([0.5], np.float32))
+    w._push_elite(2, stacked, np.asarray([0.1], np.float32))
+    # lane 0 pulls only same-level islands (lane 1), only when better
+    got = w._pull_elite(0, my_f=1.0)
+    assert got is not None and got[1] == 0.5
+    assert w._pull_elite(0, my_f=0.4) is None      # nothing beats 0.4
+    # infeasible (non-finite) elites never migrate
+    w._push_elite(1, stacked, np.asarray([np.inf], np.float32))
+    assert w._pull_elite(0, my_f=1.0) is None
+
+
+def test_migration_adopts_via_nan_rescore_hook(tmp_path):
+    spec = _spec()                      # repeats=2: two islands, one level
+    cfg, clock, coord = _fleet(tmp_path, spec, migration_every=1)
+    w = Worker(cfg.root, "w0", now_fn=clock)
+    w.heartbeat(); coord.step()
+    lease = w.my_pending_lease()
+    hook = w._block_hook(lease["lane"], lease)
+
+    other = 1 - lease["lane"]
+    g = ev.seed_genome(spec.lane_config(other))
+    stacked = ev.Genome(np.asarray(g.nodes)[None], np.asarray(g.outs)[None])
+    w._push_elite(other, stacked, np.asarray([0.001], np.float32))
+
+    info = {"block": 1, "n_blocks": 2,
+            "parents": stacked,
+            "parent_f": np.asarray([0.9], np.float32)}
+    upd = hook(info)
+    assert upd is not None and w.migrations == 1
+    # the migrant re-scores in-program: NaN fitness forces re-evaluation
+    assert np.isnan(upd["parent_f"]).all()
+    assert upd["parents"].nodes.shape == stacked.nodes.shape
+    # after the final block no adoption happens (it would desync the
+    # returned genomes from their scored error/area)
+    info["block"] = 2
+    assert hook(info) is None
+
+
+def test_migration_off_by_default(tmp_path):
+    spec = _spec()
+    cfg, clock, coord = _fleet(tmp_path, spec)
+    assert cfg.migration_every == 0
+    w = Worker(cfg.root, "w0", now_fn=clock)
+    w.heartbeat(); coord.step()
+    lease = w.my_pending_lease()
+    hook = w._block_hook(lease["lane"], lease)
+    g = ev.seed_genome(spec.lane_config(0))
+    stacked = ev.Genome(np.asarray(g.nodes)[None], np.asarray(g.outs)[None])
+    assert hook({"block": 1, "n_blocks": 2, "parents": stacked,
+                 "parent_f": np.asarray([0.9], np.float32)}) is None
+    assert os.listdir(os.path.join(cfg.root, "elites")) == []

@@ -93,6 +93,77 @@ def test_append_flush_writes_journal_then_compacts(lib, ladder,
     assert len(sm.load_entries(lib)) == 2
 
 
+def _append_one_entry(path: str, k: int) -> None:
+    """Child-process body: append the ladder's k-th synthetic entry."""
+    from repro.library.synth import synthetic_ladder
+    from repro.library.writer import LibraryWriter
+    entry = synthetic_ladder(w=4, signed=False, ks=(k,))[0]
+    with LibraryWriter(path, append=True) as w:
+        w.add(entry)
+
+
+def test_concurrent_append_from_two_processes(lib, ladder):
+    """Two real processes appending to one library path concurrently
+    (DESIGN.md §15): the flock-serialized read-merge-rewrite union must
+    keep the seed entry and both appends -- no lost update, whatever the
+    interleaving -- and compact every journal away."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")     # fresh interpreters: jax-safe
+    procs = [ctx.Process(target=_append_one_entry, args=(lib, k))
+             for k in (2, 4)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(120)
+        assert p.exitcode == 0
+    names = {e.name for e in sm.load_entries(lib)}
+    assert names == {ladder[0].name, ladder[1].name, ladder[2].name}
+    leftovers = [f for f in os.listdir(os.path.dirname(lib))
+                 if ".journal." in f]
+    assert leftovers == []
+
+
+def test_interleaved_partial_write_journals_replay(lib, ladder):
+    """Two writers crash mid-flush with *interleaved* partial state: both
+    per-writer journals survive side by side, and one later open replays
+    every leftover journal and compacts them all."""
+    wa = LibraryWriter(lib, append=True)
+    wa.add(ladder[1])
+    wb = LibraryWriter(lib, append=True)
+    wb.add(ladder[2])
+    # emulate both crashing after their journal landed but before the
+    # main rewrite -- the per-writer tokens keep the sidecars distinct
+    sm.save_entries(wa._journal_path(), wa.entries[wa._n_seed:])
+    sm.save_entries(wb._journal_path(), wb.entries[wb._n_seed:])
+    assert wa._journal_path() != wb._journal_path()
+    ja, jb = wa._journal_path(), wb._journal_path()
+    del wa, wb
+
+    w = LibraryWriter(lib, append=True)
+    assert w.recovered == 2
+    assert {e.name for e in w.entries} == {ladder[0].name, ladder[1].name,
+                                           ladder[2].name}
+    w.flush()
+    assert not os.path.exists(ja) and not os.path.exists(jb)
+    assert len(sm.load_entries(lib)) == 3
+    assert LibraryWriter(lib, append=True).recovered == 0
+
+
+def test_flush_unions_with_concurrent_commit(lib, ladder):
+    """A flush whose library gained entries since this writer opened must
+    union with the on-disk state, not clobber it (the lost-update case
+    the lock + re-read exists for)."""
+    w = LibraryWriter(lib, append=True)
+    w.add(ladder[1])
+    # another writer commits while w is still accumulating
+    other = LibraryWriter(lib, append=True)
+    other.add(ladder[2])
+    other.flush()
+    w.flush()
+    names = {e.name for e in sm.load_entries(lib)}
+    assert names == {ladder[0].name, ladder[1].name, ladder[2].name}
+
+
 def test_exit_flushes_only_on_clean_exit(lib, ladder):
     with pytest.raises(ValueError):
         with LibraryWriter(lib, append=False) as w:
