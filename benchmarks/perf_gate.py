@@ -12,7 +12,13 @@ Gated metrics -- chosen for stability, not coverage:
     the least noisy absolute numbers the benchmark produces;
   - ``speedup_fused_vs_unfused`` (higher is better): a machine-relative
     ratio, so it survives runner-hardware drift that shifts both
-    absolute numbers together.
+    absolute numbers together;
+  - ``steady_ms_per_lane_generation.adaptive_exact`` (lower) /
+    ``adaptive.speedup_adaptive_vs_full`` / ``adaptive.
+    screen_reject_rate`` (higher): the multi-fidelity pipeline's
+    throughput and its screen's pruning power (DESIGN.md §16), plus the
+    absolute ``escalation_overhead_frac <= 5%`` bound on the adaptive
+    plumbing with screening disabled.
 
 Deliberately NOT gated: end-to-end wall times (compile-dominated in
 smoke mode) and ``speedup_batched_vs_serial`` (mostly measures compile
@@ -50,16 +56,32 @@ GATES = (
      lambda r: r["steady_ms_per_lane_generation"]["unfused"], False),
     ("speedup_fused_vs_unfused",
      lambda r: r["speedup_fused_vs_unfused"], True),
+    # adaptive multi-fidelity path (DESIGN.md §16): steady throughput at
+    # fidelity="exact", its speedup over the single-fidelity path, and
+    # the steady-state screen rejection rate (a collapse here means the
+    # screen subset stopped pruning and the speedup is gone)
+    ("steady_adaptive_exact_ms",
+     lambda r: r["steady_ms_per_lane_generation"]["adaptive_exact"], False),
+    ("speedup_adaptive_vs_full",
+     lambda r: r["adaptive"]["speedup_adaptive_vs_full"], True),
+    ("screen_reject_rate",
+     lambda r: r["adaptive"]["screen_reject_rate"], True),
 )
 
 # Absolute bounds on the current report alone (no baseline needed):
 # (label, extractor, max_value).  The checkpoint-overhead bound is the
 # preemption-tolerance acceptance criterion -- one snapshot per jit block
 # must cost <= 5% of the block itself (env REPRO_CKPT_OVERHEAD_MAX).
+# The escalation-overhead bound holds the adaptive plumbing (screen +
+# index compaction + chunked dispatch) to <= 5% of the plain unfused
+# path when screening is disabled (env REPRO_ESC_OVERHEAD_MAX).
 ABS_GATES = (
     ("ckpt_overhead_frac",
      lambda r: r["checkpoint"]["overhead_frac"],
      float(os.environ.get("REPRO_CKPT_OVERHEAD_MAX", "0.05"))),
+    ("escalation_overhead_frac",
+     lambda r: r["adaptive"]["escalation_overhead_frac"],
+     float(os.environ.get("REPRO_ESC_OVERHEAD_MAX", "0.05"))),
 )
 
 

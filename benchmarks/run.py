@@ -18,12 +18,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig3,fig4,fig5,fig6,"
-                         "table1,fig7,micro,qos)")
+                         "table1,fig7,micro,qos,adaptive)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_qos_serve, fig3_pareto, fig4_heatmaps,
-                            fig5_gaussian, fig6_pdp, fig7_accuracy_power,
-                            kernels_micro, table1_nn)
+    from benchmarks import (bench_batched_sweep, bench_qos_serve,
+                            fig3_pareto, fig4_heatmaps, fig5_gaussian,
+                            fig6_pdp, fig7_accuracy_power, kernels_micro,
+                            table1_nn)
     suites = {
         "micro": kernels_micro.run,
         "fig3": fig3_pareto.run,
@@ -33,6 +34,9 @@ def main() -> None:
         "fig7": fig7_accuracy_power.run,
         "table1": table1_nn.run,
         "qos": bench_qos_serve.run,
+        # adaptive multi-fidelity evaluation (DESIGN.md §16): exact-mode
+        # front parity + screen/escalate steady throughput and ledger
+        "adaptive": bench_batched_sweep.run_adaptive,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")

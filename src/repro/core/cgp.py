@@ -289,6 +289,85 @@ def active_mask(genome: Genome, *, n_i: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("n_i",))
+def output_reach(genome: Genome, *, n_i: int) -> jax.Array:
+    """Per-gate bitmask of the primary outputs each gate feeds.
+
+    Returns (c,) uint32 where bit ``o`` of entry ``k`` is set iff gate
+    ``k`` lies in output ``o``'s input cone (walking only connections the
+    gate function actually reads, like ``active_mask``).  ``reach != 0``
+    is exactly the active mask; the per-output resolution is what the
+    adaptive-fidelity engine needs to tell *which* output planes a
+    mutation can touch (DESIGN.md §16).  Requires ``n_o <= 32``.
+    """
+    c = genome.nodes.shape[0]
+    n_o = genome.outs.shape[0]
+    reach = jnp.zeros((n_i + c,), dtype=jnp.uint32)
+    # distinct outputs contribute distinct bits, so scatter-add == OR even
+    # when several outputs share one source
+    reach = reach.at[genome.outs].add(
+        jnp.uint32(1) << jnp.arange(n_o, dtype=jnp.uint32))
+
+    def body(i, reach):
+        k = c - 1 - i
+        g = genome.nodes[k]
+        m = reach[n_i + k]
+        ua = jnp.where(cc.USES_A[g[2]], m, jnp.uint32(0))
+        ub = jnp.where(cc.USES_B[g[2]], m, jnp.uint32(0))
+        reach = reach.at[g[0]].set(reach[g[0]] | ua)
+        return reach.at[g[1]].set(reach[g[1]] | ub)
+
+    reach = jax.lax.fori_loop(0, c, body, reach)
+    return reach[n_i:]
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def changed_outputs(parent: Genome, child: Genome, *, n_i: int) -> jax.Array:
+    """(n_o,) bool: outputs whose evaluated planes may differ parent->child.
+
+    A **False** entry is a guarantee: that output's input cone in the
+    child contains only gates whose genes equal the parent's (and its
+    output gene is unchanged), so the cone -- and therefore the packed
+    output plane, the per-vector value contribution, and every derived
+    statistic -- is bit-identical to the parent's.  True entries are
+    conservative (the cone contains a changed gene; the plane *may* still
+    be equal).  All-False plus equal output genes means the mutation was
+    functionally neutral: fitness, error and area equal the parent's with
+    zero vectors evaluated -- the full-skip case of the active-subgraph
+    incremental re-evaluation (DESIGN.md §16).
+    """
+    n_o = child.outs.shape[0]
+    reach = output_reach(child, n_i=n_i)                    # (c,) uint32
+    gate_changed = jnp.any(child.nodes != parent.nodes, axis=1)  # (c,)
+    bits = ((reach[:, None] >> jnp.arange(n_o, dtype=jnp.uint32))
+            & jnp.uint32(1)) > 0                            # (c, n_o)
+    hit = jnp.any(gate_changed[:, None] & bits, axis=0)     # (n_o,)
+    return hit | (child.outs != parent.outs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
+def changed_outputs_and_area(parent: Genome, child: Genome, *,
+                             n_i: int) -> tuple:
+    """``(changed_outputs(parent, child), area(child))`` from one walk.
+
+    ``output_reach``'s nonzero entries are exactly ``active_mask``, so
+    one backward cone traversal yields both the per-output change flags
+    and the child's active-gate area -- the adaptive screen stage
+    (DESIGN.md §16) calls this per offspring instead of paying a second
+    sequential ``active_mask`` walk.  The area is bit-identical to
+    ``area(child)``: same boolean mask, same masked sum over the same
+    (c,) axis.
+    """
+    n_o = child.outs.shape[0]
+    reach = output_reach(child, n_i=n_i)                    # (c,) uint32
+    gate_changed = jnp.any(child.nodes != parent.nodes, axis=1)  # (c,)
+    bits = ((reach[:, None] >> jnp.arange(n_o, dtype=jnp.uint32))
+            & jnp.uint32(1)) > 0                            # (c, n_o)
+    hit = jnp.any(gate_changed[:, None] & bits, axis=0)     # (n_o,)
+    a = jnp.sum(jnp.where(reach != 0, cc.AREA[child.nodes[:, 2]], 0.0))
+    return hit | (child.outs != parent.outs), a
+
+
+@functools.partial(jax.jit, static_argnames=("n_i",))
 def area(genome: Genome, *, n_i: int) -> jax.Array:
     """Active-gate area [um^2] (the paper's fitness payload, Eq. 1)."""
     act = active_mask(genome, n_i=n_i)

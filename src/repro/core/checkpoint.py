@@ -90,6 +90,14 @@ def config_digest(*, cfg_fields: dict, metric: str,
     context arrays (``exact``/``weights``/``mask``) are hashed by value:
     they pin the distribution and domain sample bytes the fitness actually
     saw, which subsumes pmf/vec_weights/sample-seed provenance.
+
+    The adaptive-fidelity knobs (``fidelity`` / ``screen_words`` /
+    ``screen_margin`` / ``esc_chunk``, DESIGN.md §16) ride in through
+    ``cfg_fields`` like any other EvolveConfig field, and the screen
+    subset itself is a pure function of (domain, weights) -- both hashed
+    here -- so a resume or island re-lease under a different fidelity
+    setup is refused while an identical setup reproduces the identical
+    subset with no extra persisted state.
     """
     h = hashlib.sha256()
     h.update(f"v{SWEEP_CKPT_VERSION};".encode())

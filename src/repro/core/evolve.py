@@ -90,6 +90,27 @@ PAPER_LEVELS = (0.00005, 0.0001, 0.0005, 0.001, 0.002, 0.005, 0.01,
 # Genome evaluation backends of the fitness inner loop.
 EVAL_BACKENDS = ("jnp", "pallas")
 
+# Evaluation fidelity ladder of the batched engine (DESIGN.md §16):
+#   "full"   -- every offspring scored on the full domain (the historical
+#               single-fidelity path, bit-identical to pre-§16 engines).
+#   "exact"  -- screen-then-escalate with a *sound* screen: offspring are
+#               first scored on a small high-mass subset of the domain
+#               (a lower bound, ErrorMetric.monotone_stats) and only
+#               candidates the bound cannot disprove are escalated to the
+#               full domain.  The accepted-parent trajectory is
+#               genome-exact vs "full" at equal seeds.
+#   "margin" -- the screen extrapolates the subset score by its weight
+#               coverage and rejects anything beyond ``screen_margin`` of
+#               the lane level: faster, but heuristically -- trajectories
+#               may diverge from "full".
+FIDELITIES = ("full", "exact", "margin")
+
+# Relative slack on the screen's rejection threshold absorbing f32
+# accumulation noise between the subset and full-domain reductions, so a
+# sound lower bound can never over-reject a candidate the full pipeline
+# would have accepted (DESIGN.md §16 exactness contract).
+SCREEN_SOUND_EPS = 1e-2
+
 # Env override for the per-backend fused-pipeline auto-selection
 # (``EvolveConfig.fused=None``): 1/true forces fused, 0/false unfused.
 EVAL_FUSED_ENV = "REPRO_EVAL_FUSED"
@@ -145,12 +166,35 @@ class EvolveConfig:
     # leaves bias_frac unset; prefer
     # ``Objective(constraints=Constraints(bias_frac=...))``.
     bias_frac: float | None = None
+    # Adaptive multi-fidelity evaluation (DESIGN.md §16).  ``fidelity``
+    # selects the ladder rung (see FIDELITIES); ``screen_words`` is the
+    # screen subset size in 32-vector packed words (highest-weight-mass
+    # words win, ``objective.screen_subset``); ``screen_margin`` is the
+    # "margin" mode's relative slack on the lane level after coverage
+    # extrapolation; ``esc_chunk`` is the static escalation batch size
+    # (None = max(lam, 8)).  All four enter the sweep config digest via
+    # ``_base_config`` so checkpoint resume / island re-lease under a
+    # different fidelity setup is refused, never silently diverged.
+    fidelity: str = "full"
+    screen_words: int = 256
+    screen_margin: float = 0.25
+    esc_chunk: int | None = None
 
     def __post_init__(self):
         if self.eval_backend not in EVAL_BACKENDS:
             raise ValueError(
                 f"unknown eval_backend {self.eval_backend!r}; expected one "
                 f"of {', '.join(repr(b) for b in EVAL_BACKENDS)}")
+        if self.fidelity not in FIDELITIES:
+            raise ValueError(
+                f"unknown fidelity {self.fidelity!r}; expected one of "
+                f"{', '.join(repr(f) for f in FIDELITIES)}")
+        if self.screen_words < 1:
+            raise ValueError("screen_words must be >= 1 packed word")
+        if self.screen_margin < 0:
+            raise ValueError("screen_margin must be >= 0")
+        if self.esc_chunk is not None and self.esc_chunk < 1:
+            raise ValueError("esc_chunk must be None or >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +224,9 @@ class EvolveResult:
     # resilience accounting of the run that produced this lane (shared
     # across lanes of one batched sweep); empty for serial runs
     fault: dict = dataclasses.field(default_factory=dict)
+    # adaptive-fidelity eval-cost ledger (DESIGN.md §16); empty at
+    # fidelity="full".  Counters under "per_lane" are this lane's own.
+    ledger: dict = dataclasses.field(default_factory=dict)
 
     @property
     def wmed(self) -> float:
@@ -207,6 +254,10 @@ class BatchedEvolveResult:
     # StepMonitor's observed/decisions/straggler counts when one is wired
     # in -- benchmarks surface this block in BENCH_evolve.json.
     fault: dict = dataclasses.field(default_factory=dict)
+    # adaptive-fidelity eval-cost ledger (DESIGN.md §16): per-stage
+    # vector counts, screen/escalation rates, and per-lane counters
+    # ("per_lane" lists, lane-major).  Empty at fidelity="full".
+    ledger: dict = dataclasses.field(default_factory=dict)
 
     @property
     def wmed(self) -> np.ndarray:
@@ -222,12 +273,16 @@ class BatchedEvolveResult:
 
     def lane(self, i: int) -> EvolveResult:
         """Extract one lane as a serial-shaped EvolveResult."""
+        led = dict(self.ledger)
+        if "per_lane" in led:
+            led["per_lane"] = {k: v[i] for k, v in led["per_lane"].items()}
         return EvolveResult(
             genome=jax.tree.map(lambda x: x[i], self.genomes),
             error=float(self.error[i]), area=float(self.area[i]),
             level=float(self.levels[i]), generations=self.generations,
             history=self.history[:, i, :], wall_s=self.wall_s,
-            metric=self.metric, seed=int(self.seeds[i]), fault=self.fault)
+            metric=self.metric, seed=int(self.seeds[i]), fault=self.fault,
+            ledger=led)
 
 
 def _base_config(cfg: EvolveConfig) -> dict:
@@ -255,6 +310,13 @@ def _resolve_objective(cfg: EvolveConfig,
             f"fused=True but metric {metric.name!r} declares no "
             "sufficient-statistics form; register it with stats/from_stats "
             "or use fused=None/False (unfused fallback)")
+    if cfg.fidelity != "full" and not (metric.supports_stats
+                                       and metric.monotone_stats):
+        raise ValueError(
+            f"fidelity={cfg.fidelity!r} requires a metric whose subset "
+            f"score lower-bounds its full-domain score, but "
+            f"{metric.name!r} declares no monotone sufficient-statistics "
+            "form (ErrorMetric.monotone_stats); use fidelity='full'")
     if cfg.bias_frac is not None and obj.constraints.bias_frac is None:
         obj = dataclasses.replace(
             obj, constraints=dataclasses.replace(obj.constraints,
@@ -387,7 +449,8 @@ def _fused_fitness(m, exact, pmax, n_i, signed, eval_backend, mask,
 def make_batched_step(cfg: EvolveConfig, exact, in_planes,
                       *, weights_batched: bool = False,
                       objective: Objective | str | None = None,
-                      mask=None) -> Callable:
+                      mask=None,
+                      screen: obj_mod.ScreenCtx | None = None) -> Callable:
     """Build the jitted lane-batched G-generation evolution block.
 
     Returns ``(block, fit)`` where ``block(parents, parent_f, keys,
@@ -411,6 +474,17 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
     shards its lanes across the largest device count dividing L and runs
     under ``pmap`` -- lanes are fully independent, so per-lane results are
     bit-identical to the single-device program (DESIGN.md §11).
+
+    **Adaptive fidelity** (``cfg.fidelity != "full"``, DESIGN.md §16):
+    pass ``screen`` (an ``objective.screen_subset`` of the eval domain)
+    and the block swaps its generation step for the screen-then-escalate
+    pipeline: neutral offspring (``cgp.changed_outputs`` all-False) reuse
+    the parent's fitness outright, the rest are scored on the subset and
+    only candidates the resulting bound (or, in "margin" mode, estimate)
+    cannot disprove are escalated to a full-domain ``fit``.  The block
+    then returns a per-lane int32 ``(L, 4)`` ledger of
+    (neutral, screen_rejected, area_doomed, escalated) counts as its 8th
+    output (zeros at fidelity="full", where the pipeline is unchanged).
     """
     n_i = 2 * cfg.w
     pmax = jnp.float32(wmed_mod.p_max(cfg.w))
@@ -419,6 +493,11 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
     fit = _fitness_fn(exact, pmax, n_i, cfg.signed, obj, cfg.eval_backend,
                       mask=mask, fused=cfg.fused)
     w_axis = 0 if weights_batched else None
+    if cfg.fidelity != "full" and screen is None:
+        raise ValueError(
+            f"fidelity={cfg.fidelity!r} needs a screen subset: pass "
+            "screen=objective.screen_subset(ctx, weights, "
+            "cfg.screen_words) (evolve_batched does this automatically)")
 
     def lane_generation(parent, parent_f, key, weights, cons):
         keys = jax.random.split(key, cfg.lam)
@@ -436,8 +515,8 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
             lambda g, wt, cn: fit(g, in_planes, wt, cn),
             in_axes=(0, w_axis, 0))(parents, weights, cons)
 
-    def block_fn(parents: Genome, parent_f, keys, weights,
-                 cons: obj_mod.LaneConstraints):
+    def full_block_fn(parents: Genome, parent_f, keys, weights,
+                      cons: obj_mod.LaneConstraints):
         # NaN parent_f marks the first block: score the seed in-program
         # (the exact seed satisfies any constraint set; its fitness is its
         # area) so the driver never pays an eager, uncompiled fitness pass.
@@ -462,7 +541,177 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
         (parents, parent_f), (es, areas) = jax.lax.scan(
             generation, (parents, parent_f), subkeys)
         _, e_fin, a_fin = score(parents, weights, cons)
-        return parents, parent_f, next_keys, es[-1], areas[-1], e_fin, a_fin
+        ledger = jnp.zeros((parent_f.shape[0], 4), jnp.int32)
+        return (parents, parent_f, next_keys, es[-1], areas[-1],
+                e_fin, a_fin, ledger)
+
+    esc_chunk = int(cfg.esc_chunk) if cfg.esc_chunk else max(cfg.lam, 8)
+
+    def _adaptive_pieces():
+        """Closures of the screen-then-escalate generation (DESIGN.md §16)."""
+        m = obj_mod.get_metric(obj.metric)
+        use_wce = obj.constraints.wce_cap is not None
+        names = set(m.stats)
+        if use_wce:
+            names.add(cgp_mod.STAT_MAXABS)
+        stat_names = cgp_mod.canonical_stats(names)
+        # the screen always evaluates through the jnp streaming-stats
+        # path: it only produces bounds (decisions compare them against
+        # the lane level with SCREEN_SOUND_EPS slack), so it need not
+        # match the configured backend/fused pipeline bit-for-bit
+        s_planes, s_exact = screen.in_planes, screen.exact
+        s_weights, s_mask = screen.weights, screen.mask
+        s_nvalid = screen.n_valid
+        sw_axis = 0 if (weights_batched and s_weights.ndim == 2) else None
+        rho = jnp.float32(max(screen.coverage, 1e-9))
+        eps = jnp.float32(SCREEN_SOUND_EPS)
+        margin = jnp.float32(cfg.screen_margin)
+        lam = cfg.lam
+
+        def screen_one(g, swt):
+            st = cgp_mod.eval_genome_stats(
+                g, s_planes, s_exact, swt, s_mask,
+                n_i=n_i, stat_names=stat_names, signed=cfg.signed)
+            e_lb = m.from_stats(st, pmax, s_nvalid)
+            w_lb = (st[cgp_mod.STAT_MAXABS] / pmax if use_wce
+                    else jnp.float32(0.0))
+            return e_lb, w_lb
+
+        def escalate(off_flat, esc, f, e, weights, cons):
+            """Full-fidelity ``fit`` over the escalated subset only.
+
+            Escalated indices are compacted (``nonzero`` with a static
+            size) and consumed in static ``esc_chunk``-wide batches by a
+            ``while_loop``, so a generation with no survivors costs
+            nothing and one with few pays for the padded last chunk
+            only; results scatter back over the +inf placeholders."""
+            N = esc.shape[0]
+            idx = jnp.nonzero(esc, size=N, fill_value=0)[0]
+            n_esc = jnp.sum(esc.astype(jnp.int32))
+            E = min(esc_chunk, N)
+
+            def cond(st):
+                return st[0] * E < n_esc
+
+            def body(st):
+                j, f, e = st
+                pos = j * E + jnp.arange(E)
+                valid = pos < n_esc
+                ti = idx[jnp.clip(pos, 0, N - 1)]
+                ln = ti // lam
+                g = jax.tree.map(lambda x: x[ti], off_flat)
+                cn = jax.tree.map(lambda x: x[ln], cons)
+                if weights_batched:
+                    fi, ei, _ = jax.vmap(
+                        lambda gg, wt, c: fit(gg, in_planes, wt, c)
+                    )(g, weights[ln], cn)
+                else:
+                    fi, ei, _ = jax.vmap(
+                        lambda gg, c: fit(gg, in_planes, weights, c)
+                    )(g, cn)
+                tgt = jnp.where(valid, ti, N)  # N = out of bounds, dropped
+                f = f.at[tgt].set(fi, mode="drop")
+                e = e.at[tgt].set(ei, mode="drop")
+                return j + 1, f, e
+
+            _, f, e = jax.lax.while_loop(cond, body, (jnp.int32(0), f, e))
+            return f, e
+
+        def generation(carry, gen_keys, weights, cons):
+            ps, pf, pe, led = carry
+            # identical mutation stream to the full-fidelity path:
+            # per-lane split(key, lam), vmapped mutate
+            keys2 = jax.vmap(lambda k: jax.random.split(k, lam))(gen_keys)
+            offspring = jax.vmap(lambda p, ks: jax.vmap(
+                lambda k: cgp_mod.mutate(p, k, allowed, n_i=n_i, h=cfg.h)
+            )(ks))(ps, keys2)
+            # neutral offspring: no output cone touched -> planes, error
+            # and area are the parent's, bit-exact, no evaluation at all.
+            # One reach walk per offspring yields both the change flags
+            # and the (bit-identical) active-gate area
+            changed, a_all = jax.vmap(lambda p, cs: jax.vmap(
+                lambda c: cgp_mod.changed_outputs_and_area(p, c, n_i=n_i)
+            )(cs))(ps, offspring)
+            neutral = ~jnp.any(changed, axis=-1)            # (L, lam)
+            e_lb, w_lb = jax.vmap(
+                lambda gs, swt: jax.vmap(lambda g: screen_one(g, swt))(gs),
+                in_axes=(0, sw_axis))(offspring, s_weights)
+            lvl = cons.level[:, None]
+            if cfg.fidelity == "exact":
+                # sound rule: the subset score lower-bounds the full one
+                # (monotone_stats), so a bound already past the level
+                # proves full-pipeline fitness is exactly +inf
+                rej = e_lb > lvl * (1.0 + eps)
+            else:
+                # "margin": extrapolate by the subset's weight coverage
+                # and keep only candidates within screen_margin of the
+                # level -- aggressive, no exactness guarantee
+                rej = (e_lb / rho) > lvl * (1.0 + margin)
+            if use_wce:
+                rej = rej | (w_lb > cons.wce_cap[:, None] * (1.0 + eps))
+            rej = rej & ~neutral
+            # area-doom: a feasible candidate with a > pf can never be
+            # adopted (f = a > pf) and an infeasible one is +inf anyway,
+            # so skip its full evaluation; +inf placeholders only touch
+            # candidates whose true fitness exceeds pf, leaving argmin
+            # and adoption identical (doom can't fire at pf = +inf)
+            doom = ~neutral & ~rej & (a_all > pf[:, None])
+            esc = ~(neutral | rej | doom)
+            f = jnp.where(neutral, pf[:, None],
+                          jnp.float32(jnp.inf))
+            e = jnp.where(neutral, pe[:, None],
+                          jnp.where(rej, e_lb, jnp.float32(jnp.inf)))
+            L = pf.shape[0]
+            N = L * lam
+            off_flat = jax.tree.map(
+                lambda x: x.reshape((N,) + x.shape[2:]), offspring)
+            f, e = escalate(off_flat, esc.reshape(N),
+                            f.reshape(N), e.reshape(N), weights, cons)
+            f = f.reshape(L, lam)
+            e = e.reshape(L, lam)
+            new_ps, new_pf, best = jax.vmap(sel_mod.replace_parent)(
+                ps, pf, offspring, f)
+            e_b = jnp.take_along_axis(e, best[:, None], axis=1)[:, 0]
+            a_b = jnp.take_along_axis(a_all, best[:, None], axis=1)[:, 0]
+            f_b = jnp.take_along_axis(f, best[:, None], axis=1)[:, 0]
+            # carried parent error: adopted parents are either escalated
+            # (exact e) or neutral (parent's e), so pe stays exact along
+            # the accepted trajectory
+            new_pe = jnp.where(f_b <= pf, e_b, pe)
+            led = led + jnp.stack(
+                [jnp.sum(neutral, axis=1), jnp.sum(rej, axis=1),
+                 jnp.sum(doom, axis=1), jnp.sum(esc, axis=1)],
+                axis=1).astype(jnp.int32)
+            return (new_ps, new_pf, new_pe, led), (e_b, a_b)
+
+        return generation
+
+    def adaptive_block_fn(parents: Genome, parent_f, keys, weights,
+                          cons: obj_mod.LaneConstraints):
+        generation = _adaptive_pieces()
+        f0, e0, a0 = score(parents, weights, cons)
+        parent_f = jnp.where(jnp.isnan(parent_f), f0, parent_f)
+        # parent error rides the scan carry (neutral offspring reuse it);
+        # seeding it from the start-of-block rescore keeps the checkpoint
+        # layout unchanged -- it is a pure function of the restored parents
+        parent_e = e0
+        led0 = jnp.zeros((parent_f.shape[0], 4), jnp.int32)
+
+        def gen_step(carry, gen_keys):
+            return generation(carry, gen_keys, weights, cons)
+
+        split = jax.vmap(jax.random.split)(keys)       # (L, 2, key)
+        next_keys, subs = split[:, 0], split[:, 1]
+        subkeys = jax.vmap(
+            lambda k: jax.random.split(k, cfg.gens_per_jit_block))(subs)
+        subkeys = jnp.swapaxes(subkeys, 0, 1)  # (G, L, key)
+        (parents, parent_f, _, ledger), (es, areas) = jax.lax.scan(
+            gen_step, (parents, parent_f, parent_e, led0), subkeys)
+        _, e_fin, a_fin = score(parents, weights, cons)
+        return (parents, parent_f, next_keys, es[-1], areas[-1],
+                e_fin, a_fin, ledger)
+
+    block_fn = full_block_fn if cfg.fidelity == "full" else adaptive_block_fn
 
     # parents / parent_f / keys are pure loop-carried state: each block
     # call consumes the previous call's outputs, so their input buffers
@@ -499,7 +748,85 @@ def make_batched_step(cfg: EvolveConfig, exact, in_planes,
             jax.tree.map(shard, cons))
         return tuple(jax.tree.map(unshard, o) for o in out)
 
+    block.adaptive_info = None if screen is None else {
+        "fidelity": cfg.fidelity,
+        "screen_words": int(screen.n_words),
+        "screen_vectors": 32 * int(screen.n_words),
+        "coverage": float(screen.coverage),
+        "esc_chunk": esc_chunk,
+        "screen_margin": float(cfg.screen_margin),
+    }
     return block, fit
+
+
+def _build_ledger(cfg: EvolveConfig, info: dict | None, led_blocks: list,
+                  n_full_vectors: int, n_lanes: int, gpb: int,
+                  wall_s: float) -> dict:
+    """Fold the per-block device ledgers into the JSON-safe eval-cost
+    ledger of ``BatchedEvolveResult.ledger`` (DESIGN.md §16).
+
+    ``vectors_evaluated`` counts actual test-vector evaluations per stage
+    (escalation chunk padding excluded; the start/end-of-block rescores
+    are the "rescore" stage); ``full_equiv`` is what single-fidelity
+    evaluation of the same offspring stream would have cost.
+    ``stage_ms_est`` attributes the measured wall time by those vector
+    counts -- an estimate, since all stages fuse inside one jit program.
+    After a checkpoint resume the ledger covers only the blocks this
+    process ran (it is accounting, not loop state).
+    """
+    if info is None or not led_blocks:
+        return {}
+    led = np.zeros((n_lanes, 4), np.int64)
+    for lb in led_blocks:
+        led += np.asarray(jax.device_get(lb), np.int64)
+    blocks = len(led_blocks)
+    offspring = int(cfg.lam) * gpb * blocks * n_lanes
+    neutral, rej, doom, esc = (int(x) for x in led.sum(axis=0))
+    V = int(n_full_vectors)
+    Vs = int(info["screen_vectors"])
+    vec_screen = offspring * Vs          # every offspring is screened
+    vec_esc = esc * V
+    vec_rescore = 2 * n_lanes * V * blocks
+    total = max(1, vec_screen + vec_esc + vec_rescore)
+    full_equiv = offspring * V + vec_rescore
+    screened = max(1, offspring - neutral)
+    ms = wall_s * 1e3
+    return {
+        "fidelity": info["fidelity"],
+        "screen_words": info["screen_words"],
+        "coverage": info["coverage"],
+        "esc_chunk": info["esc_chunk"],
+        "screen_margin": info["screen_margin"],
+        "blocks": blocks,
+        "generations_counted": gpb * blocks,
+        "offspring": offspring,
+        "neutral": neutral,
+        "screen_rejected": rej,
+        "area_doomed": doom,
+        "escalations": esc,
+        "screen_reject_rate": rej / screened,
+        "escalation_rate": esc / max(1, offspring),
+        "vectors_evaluated": {
+            "screen": vec_screen,
+            "escalate": vec_esc,
+            "rescore": vec_rescore,
+            "total": total,
+            "full_equiv": full_equiv,
+            "savings_frac": 1.0 - total / max(1, full_equiv),
+        },
+        "stage_ms_est": {
+            "screen": ms * vec_screen / total,
+            "escalate": ms * vec_esc / total,
+            "rescore": ms * vec_rescore / total,
+            "note": "modeled attribution of wall time by vector counts",
+        },
+        "per_lane": {
+            "neutral": led[:, 0].tolist(),
+            "screen_rejected": led[:, 1].tolist(),
+            "area_doomed": led[:, 2].tolist(),
+            "escalated": led[:, 3].tolist(),
+        },
+    }
 
 
 def _lane_shards(n_lanes: int) -> int:
@@ -586,9 +913,12 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
     if weights_batched and weights.shape[0] != L:
         raise ValueError(f"per-lane weights: got {weights.shape[0]} rows "
                          f"for {L} lanes")
+    screen = (obj_mod.screen_subset(ctx, weights, cfg.screen_words)
+              if cfg.fidelity != "full" else None)
     block, fit = make_batched_step(cfg, ctx.exact, ctx.in_planes,
                                    weights_batched=weights_batched,
-                                   objective=obj, mask=ctx.mask)
+                                   objective=obj, mask=ctx.mask,
+                                   screen=screen)
     cons = obj.constraints.lane_params(lane_levels)
 
     n_blocks = max(1, cfg.generations // cfg.gens_per_jit_block)
@@ -658,8 +988,12 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
     # per-block history of *this process* stays on-device; it is stacked
     # and fetched in one transfer at the end (and at checkpoint saves) so
     # the driver never forces a host sync per block (verbose mode still
-    # syncs explicitly to print progress)
+    # syncs explicitly to print progress).  led_blocks mirrors it for the
+    # adaptive eval-cost ledger; the ledger is accounting only (not loop
+    # state), so it is not checkpointed -- after a resume it covers the
+    # blocks this process ran.
     hist_e, hist_a = [], []
+    led_blocks: list = []
 
     def hist_so_far():
         if not hist_e:
@@ -684,13 +1018,14 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
                 # generations are 1-numbered; block b covers this span
                 injector.check_span(b * gpb + 1, (b + 1) * gpb + 1)
             t_blk = time.time()
-            parents, parent_f, keys, e_last, a_last, e_fin, a_fin = block(
-                parents, parent_f, keys, weights, cons)
+            (parents, parent_f, keys, e_last, a_last, e_fin, a_fin,
+             led_blk) = block(parents, parent_f, keys, weights, cons)
             if monitor is not None:
                 jax.block_until_ready(a_fin)
                 monitor.observe(b, time.time() - t_blk)
             hist_e.append(e_last)
             hist_a.append(a_last)
+            led_blocks.append(led_blk)
             b += 1
             if ck is not None and ck.due(b, n_blocks):
                 ck.save(b, snapshot())
@@ -717,6 +1052,7 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
             if backoff_s > 0:
                 time.sleep(min(backoff_s * 2 ** (retries - 1), 30.0))
             hist_e, hist_a = [], []
+            led_blocks = []
             restored = ck.resume_state() if ck is not None else None
             if restored is None:
                 # nothing durable yet: replay from the seed population
@@ -733,12 +1069,15 @@ def evolve_batched(cfg: BatchedEvolveConfig, seed_genome: Genome,
     fault["checkpoint_saves"] = ck.saves if ck is not None else 0
     if monitor is not None:
         fault["monitor"] = monitor.stats()
+    wall_s = time.time() - t0
+    ledger = _build_ledger(cfg, block.adaptive_info, led_blocks,
+                           int(ctx.exact.shape[0]), L, gpb, wall_s)
     return BatchedEvolveResult(
         genomes=jax.tree.map(np.asarray, parents),
         error=np.asarray(e_fin), area=np.asarray(a_fin),
         levels=lane_levels, seeds=lane_seeds,
         generations=cfg.generations, history=history,
-        wall_s=time.time() - t0, metric=metric.name, fault=fault)
+        wall_s=wall_s, metric=metric.name, fault=fault, ledger=ledger)
 
 
 def evolve(cfg: EvolveConfig, seed_genome: Genome,

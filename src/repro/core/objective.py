@@ -88,6 +88,16 @@ class ErrorMetric:
     description: str = ""
     stats: tuple = ()
     from_stats: Callable[..., jax.Array] | None = None
+    # Screening soundness flag (the adaptive-fidelity engine, DESIGN.md
+    # §16): True declares that every accumulator in ``stats`` only grows
+    # as vectors are added (nonnegative contributions / running max) AND
+    # ``from_stats`` is monotone nondecreasing in each of them -- so the
+    # metric evaluated over any *subset* of the domain is a sound lower
+    # bound on its full-domain value.  That bound is what lets the screen
+    # stage reject candidates exactly (a subset score already above the
+    # lane's level proves the full score is too).  Metrics with signed /
+    # cancelling accumulators must leave this False.
+    monotone_stats: bool = False
 
     @property
     def supports_stats(self) -> bool:
@@ -100,7 +110,8 @@ _REGISTRY: dict[str, ErrorMetric] = {}
 
 def register_metric(name: str, *, uses_weights: bool = True,
                     description: str = "", stats: tuple = (),
-                    from_stats: Callable | None = None) -> Callable:
+                    from_stats: Callable | None = None,
+                    monotone_stats: bool = False) -> Callable:
     """Decorator registering ``fn(approx, exact, weights, pmax, mask=None)``.
 
     The engine always passes ``mask`` (the domain's validity vector, None
@@ -108,18 +119,24 @@ def register_metric(name: str, *, uses_weights: bool = True,
     must accept it even if they ignore it.  ``stats``/``from_stats``
     optionally declare the metric's sufficient-statistics form (see
     ErrorMetric); metrics without one fall back to the unfused evaluation
-    path.
+    path.  ``monotone_stats`` additionally declares the subset-lower-bound
+    property the adaptive-fidelity screen stage relies on (see
+    ErrorMetric.monotone_stats); it requires a stats form.
     """
     if bool(stats) != (from_stats is not None):
         raise ValueError(f"metric {name!r}: stats and from_stats must be "
                          "declared together (or both omitted)")
+    if monotone_stats and not stats:
+        raise ValueError(f"metric {name!r}: monotone_stats requires a "
+                         "sufficient-statistics form (stats/from_stats)")
 
     def deco(fn):
         _REGISTRY[name] = ErrorMetric(name=name, fn=fn,
                                       uses_weights=uses_weights,
                                       description=description,
                                       stats=cgp_mod.canonical_stats(stats),
-                                      from_stats=from_stats)
+                                      from_stats=from_stats,
+                                      monotone_stats=monotone_stats)
         return fn
 
     return deco
@@ -150,7 +167,7 @@ def _mask_uniform(n: int, mask: jax.Array | None) -> jax.Array:
 
 
 @register_metric("wmed", description="weighted mean error distance (Eq. 1)",
-                 stats=(cgp_mod.STAT_WABS,),
+                 stats=(cgp_mod.STAT_WABS,), monotone_stats=True,
                  from_stats=lambda s, pmax, n_valid:
                      s[cgp_mod.STAT_WABS] / pmax)
 def _wmed(approx, exact, weights, pmax, mask=None):
@@ -159,7 +176,7 @@ def _wmed(approx, exact, weights, pmax, mask=None):
 
 @register_metric("med", uses_weights=False,
                  description="mean error distance (uniform over the domain)",
-                 stats=(cgp_mod.STAT_UABS,),
+                 stats=(cgp_mod.STAT_UABS,), monotone_stats=True,
                  from_stats=lambda s, pmax, n_valid:
                      s[cgp_mod.STAT_UABS] / n_valid / pmax)
 def _med(approx, exact, weights, pmax, mask=None):
@@ -169,7 +186,7 @@ def _med(approx, exact, weights, pmax, mask=None):
 
 @register_metric("wce", uses_weights=False,
                  description="normalized worst-case error over the domain",
-                 stats=(cgp_mod.STAT_MAXABS,),
+                 stats=(cgp_mod.STAT_MAXABS,), monotone_stats=True,
                  from_stats=lambda s, pmax, n_valid:
                      s[cgp_mod.STAT_MAXABS] / pmax)
 def _wce(approx, exact, weights, pmax, mask=None):
@@ -180,7 +197,7 @@ def _wce(approx, exact, weights, pmax, mask=None):
 
 
 @register_metric("er", description="weighted error rate P_D[M~(v) != M(v)]",
-                 stats=(cgp_mod.STAT_WNE,),
+                 stats=(cgp_mod.STAT_WNE,), monotone_stats=True,
                  from_stats=lambda s, pmax, n_valid: s[cgp_mod.STAT_WNE])
 def _er(approx, exact, weights, pmax, mask=None):
     return jnp.dot(weights.astype(jnp.float32),
@@ -188,7 +205,7 @@ def _er(approx, exact, weights, pmax, mask=None):
 
 
 @register_metric("mre", description="weighted mean relative error",
-                 stats=(cgp_mod.STAT_WREL,),
+                 stats=(cgp_mod.STAT_WREL,), monotone_stats=True,
                  from_stats=lambda s, pmax, n_valid: s[cgp_mod.STAT_WREL])
 def _mre(approx, exact, weights, pmax, mask=None):
     err = jnp.abs(approx.astype(jnp.float32) - exact.astype(jnp.float32))
@@ -406,3 +423,66 @@ def score_genome_stats(genome, ctx: EvalCtx, metric: str | ErrorMetric,
         genome, ctx.in_planes, ctx.exact, ctx.weights, ctx.mask,
         n_i=n_i, stat_names=m.stats, signed=signed, chunk=chunk)
     return m.from_stats(stats, ctx.pmax, ctx.n_valid())
+
+
+# ------------------------------------------------- adaptive-fidelity screen
+
+class ScreenCtx(NamedTuple):
+    """A seeded subset of an EvalCtx for the screen stage (DESIGN.md §16).
+
+    Built once per sweep by ``screen_subset`` from the *same* packed
+    planes / exact products / weights as the full context, gathered at
+    whole 32-vector packed-word granularity so the streaming stats
+    reduction applies unchanged.  ``n_valid`` is deliberately the FULL
+    domain's real-vector count, not the subset's: dividing a subset's
+    nonnegative accumulator by the full count keeps mean-style metrics
+    (``med``) a sound lower bound on their full-domain value, which is
+    the exactness contract the screen stage relies on.
+    """
+
+    in_planes: jax.Array   # (n_i, S) uint32 -- subset packed bit-planes
+    exact: jax.Array       # (32*S,) int32
+    weights: jax.Array     # (32*S,) or (L, 32*S) float32 -- NOT renormalized
+    pmax: jax.Array        # float32, same normalization as the full domain
+    mask: jax.Array | None  # (32*S,) validity, None = all real
+    n_valid: float         # FULL-domain real-vector count (see above)
+    n_words: int           # S, packed words kept
+    coverage: float        # fraction of total weight mass the subset holds
+
+
+def screen_subset(ctx: EvalCtx, weights, n_words: int) -> ScreenCtx:
+    """Select the ``n_words`` highest-weight-mass packed words of a domain.
+
+    ``weights`` is the lane weight matrix actually used by the sweep --
+    (V,) shared or (L, V) per-lane -- and drives which words are kept
+    (mass is summed over lanes), so the subset is deterministic given
+    (domain, weights): both are already covered by the sweep config
+    digest, making checkpoint resume / island re-lease reproduce the
+    identical subset with no new persisted state.  Weights are gathered,
+    not renormalized: screen scores must stay lower bounds of the
+    full-domain scores (ErrorMetric.monotone_stats).
+    """
+    W = int(ctx.in_planes.shape[1])
+    S = max(1, min(int(n_words), W))
+    w_np = np.asarray(weights, np.float64)
+    mass = w_np.sum(axis=0) if w_np.ndim == 2 else w_np
+    word_mass = mass.reshape(W, 32).sum(axis=1)
+    # stable sort => deterministic tie-break by word index
+    keep = np.sort(np.argsort(-word_mass, kind="stable")[:S])
+    vec_idx = (keep[:, None] * 32 + np.arange(32)).reshape(-1)
+    total = float(mass.sum())
+    coverage = float(word_mass[keep].sum() / total) if total > 0 else 0.0
+    keep_j = jnp.asarray(keep.astype(np.int32))
+    vec_j = jnp.asarray(vec_idx.astype(np.int32))
+    sub_w = jnp.take(jnp.asarray(weights), vec_j, axis=-1)
+    mask = None if ctx.mask is None else jnp.take(ctx.mask, vec_j, axis=0)
+    return ScreenCtx(
+        in_planes=jnp.take(ctx.in_planes, keep_j, axis=1),
+        exact=jnp.take(ctx.exact, vec_j, axis=0),
+        weights=sub_w,
+        pmax=ctx.pmax,
+        mask=mask,
+        n_valid=ctx.n_valid(),
+        n_words=S,
+        coverage=coverage,
+    )

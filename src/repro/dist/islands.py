@@ -167,6 +167,13 @@ class SweepSpec:
     pmf: str = "half_normal"       # "half_normal" | "uniform" | "none"
     eval_backend: str = "jnp"
     fused: Optional[bool] = None
+    # adaptive-fidelity knobs (DESIGN.md §16); part of the spec so every
+    # worker -- and every re-lease -- runs the same evaluation pipeline
+    # (the sweep config digest covers them, refusing mismatched resumes)
+    fidelity: str = "full"
+    screen_words: int = 256
+    screen_margin: float = 0.25
+    esc_chunk: Optional[int] = None
 
     @property
     def n_lanes(self) -> int:
@@ -200,7 +207,10 @@ class SweepSpec:
                     generations=self.generations,
                     gens_per_jit_block=self.gens_per_jit_block,
                     objective=self.objective(),
-                    eval_backend=self.eval_backend, fused=self.fused)
+                    eval_backend=self.eval_backend, fused=self.fused,
+                    fidelity=self.fidelity, screen_words=self.screen_words,
+                    screen_margin=self.screen_margin,
+                    esc_chunk=self.esc_chunk)
 
     def lane_config(self, lane: int) -> ev.BatchedEvolveConfig:
         """The 1-lane config whose single lane is bit-identical to lane
@@ -287,7 +297,7 @@ def _save_lane_result(root: str, lane: int, epoch: int, worker: str,
     meta = {"lane": lane, "epoch": epoch, "worker": worker,
             "metric": res.metric, "level": res.level, "seed": res.seed,
             "generations": res.generations, "wall_s": res.wall_s,
-            "fault": res.fault}
+            "fault": res.fault, "ledger": res.ledger}
     path = os.path.join(_paths(root)["results"],
                         f"{_lane_tag(lane)}.e{epoch}.npz")
     _save_npz(path,
@@ -309,7 +319,8 @@ def _load_lane_result(path: str) -> Tuple[dict, ev.EvolveResult]:
             generations=int(meta["generations"]),
             history=np.asarray(z["history"]),
             wall_s=float(meta["wall_s"]), metric=meta["metric"],
-            seed=int(meta["seed"]), fault=dict(meta.get("fault") or {}))
+            seed=int(meta["seed"]), fault=dict(meta.get("fault") or {}),
+            ledger=dict(meta.get("ledger") or {}))
     return meta, res
 
 

@@ -34,4 +34,5 @@ tests/test_fitness_fused.py.  The container runs interpret mode
 overrides).
 """
 
-from repro.kernels.cgp_eval.ops import cgp_eval, cgp_fitness  # noqa: F401
+from repro.kernels.cgp_eval.ops import (cgp_eval,  # noqa: F401
+                                        cgp_fitness, cgp_screen_stats)

@@ -96,3 +96,28 @@ def cgp_fitness(nodes, outs, in_planes, exact, weights, mask=None, *,
         n_i=n_i, bw=bw, signed=signed,
         interpret=default_interpret() if interpret is None else interpret)
     return dict(zip(cgp_mod.STAT_ORDER, row[0]))
+
+
+def cgp_screen_stats(nodes, outs, in_planes, exact, weights, mask=None, *,
+                     word_idx, n_i: int, signed: bool = False,
+                     bw: int = 512, interpret: bool | None = None) -> dict:
+    """Masked-subset fitness statistics (the adaptive screen, DESIGN.md §16).
+
+    Gathers the ``word_idx`` packed-word columns of the eval context (and
+    the matching 32 vectors per word from ``exact``/``weights``/``mask``)
+    and reduces only those through ``cgp_fitness`` -- the kernel-backend
+    counterpart of screening via ``cgp.eval_genome_stats`` over an
+    ``objective.screen_subset``.  The accumulator semantics are identical
+    (monotone partial sums / running max over the kept vectors), so the
+    result feeds the same sound lower-bound rule, up to float-reduction
+    order.  ``word_idx`` is static-shaped: one compile per subset size.
+    """
+    wi = jnp.asarray(word_idx, jnp.int32)
+    vec = (wi[:, None] * 32
+           + jnp.arange(32, dtype=jnp.int32)[None, :]).reshape(-1)
+    sub_mask = None if mask is None else jnp.take(mask, vec, axis=0)
+    return cgp_fitness(nodes, outs,
+                       jnp.take(in_planes, wi, axis=1),
+                       jnp.take(exact, vec, axis=0),
+                       jnp.take(weights, vec, axis=-1), sub_mask,
+                       n_i=n_i, signed=signed, bw=bw, interpret=interpret)

@@ -90,3 +90,90 @@ def test_power_positive_and_distribution_sensitive():
     assert p_uni > 0 and p_hn > 0
     # half-normal concentrates near zero operands -> lower switching power
     assert p_hn < p_uni
+
+
+# ---------------------- output reach / changed-outputs (DESIGN.md §16)
+
+def _mutant_pairs(n=8, n_i=8, c=40, n_o=6):
+    allowed = jnp.asarray(cc.STANDARD_FNS)
+    for seed in range(n):
+        g = cgp.random_genome(jax.random.PRNGKey(seed), n_i=n_i, c=c,
+                              n_o=n_o, allowed_fns=np.asarray(allowed))
+        g2 = cgp.mutate(g, jax.random.PRNGKey(1000 + seed), allowed,
+                        n_i=n_i, h=5)
+        yield g, g2
+
+
+def _cone_gates(nodes, outs, n_i):
+    """Python oracle: per-output set of gate indices in its input cone,
+    walking only the connections each gate function actually reads."""
+    uses_a = np.asarray(cc.USES_A)
+    uses_b = np.asarray(cc.USES_B)
+    cones = []
+    for o in outs:
+        seen = set()
+        stack = [int(o)]
+        while stack:
+            idx = stack.pop()
+            if idx < n_i or (idx - n_i) in seen:
+                continue
+            k = idx - n_i
+            seen.add(k)
+            a, b, fn = nodes[k]
+            if uses_a[fn]:
+                stack.append(int(a))
+            if uses_b[fn]:
+                stack.append(int(b))
+        cones.append(seen)
+    return cones
+
+
+def test_output_reach_matches_active_mask_and_cones():
+    for g, g2 in _mutant_pairs():
+        for genome in (g, g2):
+            reach = np.asarray(cgp.output_reach(genome, n_i=8))
+            act = np.asarray(cgp.active_mask(genome, n_i=8))
+            assert np.array_equal(reach != 0, act)
+            cones = _cone_gates(np.asarray(genome.nodes),
+                                np.asarray(genome.outs), 8)
+            for o, cone in enumerate(cones):
+                got = set(np.nonzero((reach >> o) & 1)[0].tolist())
+                assert got == cone
+
+
+def test_changed_outputs_matches_python_cone_oracle():
+    for g, g2 in _mutant_pairs(n=12):
+        got = np.asarray(cgp.changed_outputs(g, g2, n_i=8))
+        nodes_p, nodes_c = np.asarray(g.nodes), np.asarray(g2.nodes)
+        outs_p, outs_c = np.asarray(g.outs), np.asarray(g2.outs)
+        gate_changed = (nodes_p != nodes_c).any(axis=1)
+        cones = _cone_gates(nodes_c, outs_c, 8)
+        want = np.array([outs_p[o] != outs_c[o]
+                         or any(gate_changed[k] for k in cones[o])
+                         for o in range(len(outs_c))])
+        assert np.array_equal(got, want)
+
+
+def test_unchanged_outputs_planes_bit_identical():
+    """The guarantee a False entry makes: that output's packed plane is
+    bit-equal parent->child (the adaptive engine's neutral-skip relies
+    on it)."""
+    planes_in = jnp.asarray(nl.pack_exhaustive_inputs(4))
+    saw_unchanged = False
+    for g, g2 in _mutant_pairs(n=12):
+        changed = np.asarray(cgp.changed_outputs(g, g2, n_i=8))
+        p1 = np.asarray(cgp.eval_genome(g, planes_in, n_i=8))
+        p2 = np.asarray(cgp.eval_genome(g2, planes_in, n_i=8))
+        for o in range(changed.shape[0]):
+            if not changed[o]:
+                saw_unchanged = True
+                assert np.array_equal(p1[o], p2[o])
+    assert saw_unchanged  # h=5 of ~126 genes: most outputs stay untouched
+
+
+def test_changed_outputs_and_area_matches_separate_calls():
+    for g, g2 in _mutant_pairs(n=6):
+        ch, a = cgp.changed_outputs_and_area(g, g2, n_i=8)
+        assert np.array_equal(np.asarray(ch),
+                              np.asarray(cgp.changed_outputs(g, g2, n_i=8)))
+        assert float(a) == float(cgp.area(g2, n_i=8))

@@ -1,0 +1,246 @@
+"""Adaptive multi-fidelity evaluation (DESIGN.md §16).
+
+The load-bearing property: ``fidelity="exact"`` is a *semantic no-op* --
+the screen stage only ever rejects candidates whose subset score already
+**proves** (via the metric's monotone sufficient statistics) that the
+full-fidelity fitness is +inf, neutral offspring provably evaluate to the
+parent, and everything else escalates to the exact same ``fit`` closure
+the single-fidelity engine runs.  So the accepted-parent trajectory --
+final genomes, rescored error, area -- must be bit-identical to
+``fidelity="full"`` at equal seeds, across fused/unfused pipelines,
+capped/constrained objectives, exhaustive and sampled domains.  The
+per-block history of *no-adoption* generations is the one documented
+exception (a rejected best-offspring row may carry its screen bound or
++inf instead of a full score), so parity here compares everything but
+history.
+
+Also covered: the eval-cost ledger's accounting identities, "margin"
+mode's feasibility (aggressive, no exactness claim -- but the front it
+reports is still fully rescored), checkpoint resume + digest refusal
+under fidelity config changes, and eager validation of bad configs and
+non-monotone metrics.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cgp
+from repro.core import checkpoint as evo_ckpt
+from repro.core import distributions as dist
+from repro.core import evolve as ev
+from repro.core import netlist as nl
+from repro.core import objective as obj
+
+W, GENS, BLOCK = 4, 60, 30   # 2 jit blocks; w=4 keeps exhaustive eval tiny
+LEVELS = (0.01, 0.03)
+
+
+def _cfg(seed=7, **kw):
+    kw.setdefault("w", W)
+    kw.setdefault("generations", GENS)
+    kw.setdefault("gens_per_jit_block", BLOCK)
+    kw.setdefault("levels", LEVELS)
+    kw.setdefault("repeats", 1)
+    return ev.BatchedEvolveConfig(seed=seed, **kw)
+
+
+def _run(cfg, **kw):
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(cfg.w))
+    return ev.evolve_batched(cfg, g0, dist.half_normal_pmf(cfg.w), **kw)
+
+
+def _assert_trajectory_parity(full, adaptive):
+    """Genome-exact accepted-parent trajectory (history exempt, see
+    module docstring)."""
+    assert np.array_equal(full.genomes.nodes, adaptive.genomes.nodes)
+    assert np.array_equal(full.genomes.outs, adaptive.genomes.outs)
+    assert np.array_equal(full.error, adaptive.error)
+    assert np.array_equal(full.area, adaptive.area)
+
+
+def _pair(cfg_full, **adaptive_kw):
+    adaptive_kw.setdefault("fidelity", "exact")
+    adaptive_kw.setdefault("screen_words", 2)
+    return _run(cfg_full), _run(dataclasses.replace(cfg_full, **adaptive_kw))
+
+
+# ------------------------------------------------------ exactness parity
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_exact_parity_fused_and_unfused(fused):
+    full, adaptive = _pair(_cfg(fused=fused))
+    _assert_trajectory_parity(full, adaptive)
+    assert adaptive.ledger["fidelity"] == "exact"
+    assert full.ledger == {}
+
+
+def test_exact_parity_wce_capped():
+    o = obj.Objective(constraints=obj.Constraints(wce_cap=0.3))
+    full, adaptive = _pair(_cfg(objective=o))
+    _assert_trajectory_parity(full, adaptive)
+
+
+def test_exact_parity_bias_constrained():
+    """Signed bias has no sound screen bound -- escalation must decide it
+    without breaking parity."""
+    o = obj.Objective(constraints=obj.Constraints(bias_frac=0.25))
+    full, adaptive = _pair(_cfg(objective=o))
+    _assert_trajectory_parity(full, adaptive)
+
+
+@pytest.mark.parametrize("metric", ["med", "er"])
+def test_exact_parity_other_registry_metrics(metric):
+    full, adaptive = _pair(_cfg(objective=metric, levels=(0.05, 0.2)))
+    _assert_trajectory_parity(full, adaptive)
+
+
+def test_exact_parity_minimal_screen_subset():
+    """screen_words=1 (the weakest possible bound) is still exact."""
+    full, adaptive = _pair(_cfg(), screen_words=1)
+    _assert_trajectory_parity(full, adaptive)
+
+
+def test_exact_parity_w8_exhaustive():
+    cfg = _cfg(w=8, generations=20, gens_per_jit_block=20, levels=(0.005,))
+    full, adaptive = _pair(cfg, screen_words=64)
+    _assert_trajectory_parity(full, adaptive)
+
+
+def test_exact_parity_sampled_domain_w10():
+    o = obj.Objective(domain=obj.SampledDomain(n_samples=512, seed=0))
+    cfg = _cfg(w=10, generations=20, gens_per_jit_block=20,
+               levels=(0.02,), objective=o)
+    full, adaptive = _pair(cfg, screen_words=4)
+    _assert_trajectory_parity(full, adaptive)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 16))
+def test_exact_parity_property_over_seeds(seed):
+    cfg = _cfg(seed=seed, generations=30, levels=(0.02,))
+    full, adaptive = _pair(cfg)
+    _assert_trajectory_parity(full, adaptive)
+
+
+# ----------------------------------------------------------- margin mode
+
+def test_margin_mode_front_feasible():
+    """"margin" trades exactness for pruning, but every reported front
+    point is still a fully rescored parent -- feasibility must hold."""
+    res = _run(_cfg(fidelity="margin", screen_words=2, screen_margin=0.25))
+    assert (res.error <= np.asarray(LEVELS) + 1e-6).all()
+    g0 = cgp.genome_from_netlist(nl.array_multiplier(W))
+    assert (res.area <= float(cgp.area(g0, n_i=2 * W)) + 1e-6).all()
+    assert res.ledger["fidelity"] == "margin"
+
+
+# ------------------------------------------------------------ the ledger
+
+def test_ledger_accounting_identities():
+    res = _run(_cfg(fidelity="exact", screen_words=2))
+    led = res.ledger
+    L, blocks = len(LEVELS), GENS // BLOCK
+    lam = _cfg().lam
+    assert led["blocks"] == blocks
+    assert led["generations_counted"] == GENS
+    offspring = lam * GENS * L
+    assert led["offspring"] == offspring
+    # every offspring lands in exactly one disposition bucket
+    assert (led["neutral"] + led["screen_rejected"] + led["area_doomed"]
+            + led["escalations"]) == offspring
+    per_lane = led["per_lane"]
+    for key, total in (("neutral", led["neutral"]),
+                       ("screen_rejected", led["screen_rejected"]),
+                       ("area_doomed", led["area_doomed"]),
+                       ("escalated", led["escalations"])):
+        assert len(per_lane[key]) == L
+        assert sum(per_lane[key]) == total
+    # vector accounting: every offspring is screened on 32*screen_words
+    # vectors, escalations pay the full domain, rescores bracket blocks
+    V, Vs = 4 ** W, 32 * led["screen_words"]
+    vec = led["vectors_evaluated"]
+    assert led["screen_words"] == 2
+    assert vec["screen"] == offspring * Vs
+    assert vec["escalate"] == led["escalations"] * V
+    assert vec["rescore"] == 2 * L * V * blocks
+    assert vec["total"] == vec["screen"] + vec["escalate"] + vec["rescore"]
+    assert vec["full_equiv"] == offspring * V + vec["rescore"]
+    assert 0.0 <= vec["savings_frac"] < 1.0
+    assert 0.0 < led["coverage"] <= 1.0
+    assert 0.0 <= led["screen_reject_rate"] <= 1.0
+    assert 0.0 <= led["escalation_rate"] <= 1.0
+    # lane views narrow the per-lane counters to that lane's scalars
+    lane0 = res.lane(0)
+    assert lane0.ledger["per_lane"]["escalated"] == per_lane["escalated"][0]
+
+
+def test_full_fidelity_has_empty_ledger():
+    res = _run(_cfg())
+    assert res.ledger == {}
+
+
+# ------------------------------------------- checkpoint resume + digest
+
+def test_resume_exact_fidelity_genome_exact(tmp_path):
+    """Process-death shape under fidelity="exact": partial run to block 1,
+    fresh resume to the end, bit-identical front."""
+    import os
+    cfg = _cfg(fidelity="exact", screen_words=2)
+    ref = _run(cfg)
+    d = str(tmp_path / "ck")
+    full = _run(cfg, checkpoint_dir=d)
+    _assert_trajectory_parity(ref, full)
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("step_00000001")
+    res = _run(cfg, checkpoint_dir=d, resume=True)
+    assert res.fault["resumed_at_block"] == 1
+    _assert_trajectory_parity(ref, res)
+    # and the resumed adaptive run still matches the full-fidelity engine
+    _assert_trajectory_parity(_run(dataclasses.replace(cfg,
+                                                       fidelity="full")),
+                              res)
+
+
+def test_digest_refuses_fidelity_config_change(tmp_path):
+    """A checkpoint written under one fidelity setup must not resume under
+    another -- screen decisions shape the trajectory."""
+    d = str(tmp_path / "ck")
+    cfg = _cfg(fidelity="exact", screen_words=2)
+    _run(cfg, checkpoint_dir=d)
+    for changed in (dataclasses.replace(cfg, fidelity="full"),
+                    dataclasses.replace(cfg, screen_words=4),
+                    dataclasses.replace(cfg, fidelity="margin",
+                                        screen_margin=0.5)):
+        with pytest.raises(evo_ckpt.SweepDigestError):
+            _run(changed, checkpoint_dir=d, resume=True)
+
+
+# ------------------------------------------------------ eager validation
+
+def test_config_validation_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="fidelity"):
+        _cfg(fidelity="turbo")
+    with pytest.raises(ValueError, match="screen_words"):
+        _cfg(fidelity="exact", screen_words=0)
+    with pytest.raises(ValueError, match="screen_margin"):
+        _cfg(fidelity="margin", screen_margin=-0.1)
+    with pytest.raises(ValueError, match="esc_chunk"):
+        _cfg(fidelity="exact", esc_chunk=0)
+
+
+def test_nonmonotone_metric_refused_eagerly():
+    """Screening an unsound metric must fail at config resolution, not
+    silently corrupt the front."""
+    base = obj.get_metric("wmed")
+    no_flag = dataclasses.replace(base, monotone_stats=False)
+    no_stats = dataclasses.replace(base, stats=(), from_stats=None,
+                                   monotone_stats=False)
+    for metric in (no_flag, no_stats):
+        cfg = _cfg(fidelity="exact",
+                   objective=obj.Objective(metric=metric))
+        with pytest.raises(ValueError, match="monotone|stats"):
+            _run(cfg)

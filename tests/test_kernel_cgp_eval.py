@@ -44,3 +44,29 @@ def test_population_vmap():
     got = cgp_eval_population(nodes, outs, planes, n_i=8)
     for i, g in enumerate(gs):
         assert (got[i] == cgp_eval_ref(g.nodes, g.outs, planes, 8)).all()
+
+
+def test_screen_stats_matches_jnp_subset_reduction():
+    """cgp_screen_stats (masked-subset kernel path, DESIGN.md §16) agrees
+    with cgp.eval_genome_stats over the same screen subset."""
+    from repro.core import distributions as dist, objective as obj
+    from repro.kernels.cgp_eval.ops import cgp_screen_stats
+    ctx = obj.ExhaustiveDomain().build(4, False, dist.half_normal_pmf(4),
+                                       None)
+    sc = obj.screen_subset(ctx, ctx.weights, 3)
+    g = cgp.genome_from_netlist(nl.array_multiplier(4))
+    allowed = jnp.asarray(np.arange(16, dtype=np.int32))
+    # recover the subset's word indices by matching columns
+    cols = np.asarray(sc.in_planes).T.tolist()
+    full = np.asarray(ctx.in_planes).T.tolist()
+    word_idx = np.asarray([full.index(c) for c in cols], np.int32)
+    for seed in range(3):
+        g = cgp.mutate(g, jax.random.PRNGKey(seed), allowed, n_i=8, h=5)
+        got = cgp_screen_stats(g.nodes, g.outs, ctx.in_planes, ctx.exact,
+                               ctx.weights, word_idx=word_idx, n_i=8,
+                               interpret=True)
+        want = cgp.eval_genome_stats(g, sc.in_planes, sc.exact, sc.weights,
+                                     sc.mask, n_i=8)
+        for name, v in want.items():
+            assert np.isclose(float(got[name]), float(v),
+                              rtol=1e-5, atol=1e-7), name

@@ -286,3 +286,62 @@ def test_unknown_metric_name_raises_before_compile():
         ev._resolve_objective(cfg, "nope")
     with pytest.raises(ValueError, match="unknown error metric"):
         ev._resolve_objective(dataclasses.replace(cfg, objective="nope"))
+
+
+# ------------------------- screening soundness (DESIGN.md §16)
+
+def test_registry_metrics_declare_monotone_stats():
+    """All five shipped metrics have a sufficient-statistics form whose
+    accumulators only grow with added vectors -- the property the exact
+    screen rule relies on."""
+    for name in ("wmed", "med", "wce", "er", "mre"):
+        m = obj.get_metric(name)
+        assert m.supports_stats and m.monotone_stats, name
+
+
+def test_register_metric_monotone_requires_stats_form():
+    with pytest.raises(ValueError, match="monotone_stats requires"):
+        obj.register_metric("bogus_monotone", monotone_stats=True)(
+            lambda a, e, w, p, m=None: jnp.float32(0.0))
+    assert "bogus_monotone" not in obj.available_metrics()
+
+
+def test_screen_subset_shapes_and_coverage():
+    ctx = obj.ExhaustiveDomain().build(4, False, dist.half_normal_pmf(4),
+                                       None)
+    sc = obj.screen_subset(ctx, ctx.weights, 2)
+    assert sc.n_words == 2
+    assert sc.in_planes.shape == (8, 2)
+    assert sc.exact.shape == (64,)
+    assert sc.weights.shape == (64,)
+    # highest-mass words win: coverage beats the 2/8 uniform share
+    assert 2 / 8 < sc.coverage <= 1.0
+    # n_valid stays the FULL domain count (the bound divides by it)
+    assert sc.n_valid == 256.0
+    # oversized requests clamp to the whole domain
+    full = obj.screen_subset(ctx, ctx.weights, 9999)
+    assert full.n_words == 8 and np.isclose(full.coverage, 1.0)
+
+
+def test_screen_subset_scores_lower_bound_full_metric():
+    """The subset score never exceeds the full-domain score (monotone
+    stats + full n_valid normalization) -- tested across metrics and
+    random mutants, with the engine's SCREEN_SOUND_EPS float slack."""
+    ctx = obj.ExhaustiveDomain().build(4, False, dist.half_normal_pmf(4),
+                                       None)
+    sc = obj.screen_subset(ctx, ctx.weights, 2)
+    g = cgp.genome_from_netlist(nl.array_multiplier(4))
+    allowed = jnp.asarray(np.asarray(ev.EvolveConfig(w=4).allowed_fns,
+                                     np.int32))
+    for seed in range(6):
+        g = cgp.mutate(g, jax.random.PRNGKey(seed), allowed, n_i=8, h=5)
+        for name in ("wmed", "med", "wce", "er", "mre"):
+            m = obj.get_metric(name)
+            st = cgp.eval_genome_stats(g, sc.in_planes, sc.exact,
+                                       sc.weights, sc.mask, n_i=8,
+                                       stat_names=m.stats)
+            e_lb = float(m.from_stats(st, sc.pmax, sc.n_valid))
+            e_full = float(obj.score_genome(g, ctx, name, n_i=8,
+                                            signed=False))
+            assert e_lb <= e_full * (1.0 + ev.SCREEN_SOUND_EPS) + 1e-9, \
+                (name, seed, e_lb, e_full)
